@@ -1,0 +1,67 @@
+"""Beyond-paper: incremental COW checkpointing cost.
+
+Measures full-save vs incremental-save (dirty-page) time and storage for a
+~25M-parameter state, including the snapshot-sharing storage savings across
+retained checkpoints — the paper's space-efficiency claim, measured.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BlobStore
+from repro.storage.checkpoint import BlobCheckpointer
+
+
+def run(dim=1024, n_layers=12) -> List[dict]:
+    key = jax.random.PRNGKey(0)
+    state = {
+        f"layer{i}": jax.random.normal(jax.random.fold_in(key, i), (dim, dim * 2), jnp.float32)
+        for i in range(n_layers)
+    }
+    store = BlobStore(n_data_providers=8, n_metadata_providers=8)
+    ck = BlobCheckpointer(store, state, page_size=1 << 20, keep_last=10)
+    rows = []
+
+    t0 = time.perf_counter()
+    rec = ck.save(0, state)
+    rows.append(dict(kind="full", seconds=time.perf_counter() - t0,
+                     dirty_pages=rec.dirty_pages, stored_MB=store.storage_bytes() / 1e6))
+
+    # touch 10% of layers (e.g. only the trained adapter / embedding rows)
+    state2 = dict(state)
+    state2["layer0"] = state["layer0"] + 1.0
+    t0 = time.perf_counter()
+    rec = ck.save(1, state2)
+    rows.append(dict(kind="incremental_10pct", seconds=time.perf_counter() - t0,
+                     dirty_pages=rec.dirty_pages, stored_MB=store.storage_bytes() / 1e6))
+
+    # unchanged state: pure dedup
+    t0 = time.perf_counter()
+    rec = ck.save(2, state2)
+    rows.append(dict(kind="unchanged", seconds=time.perf_counter() - t0,
+                     dirty_pages=rec.dirty_pages, stored_MB=store.storage_bytes() / 1e6))
+
+    # restore
+    t0 = time.perf_counter()
+    ck.restore(1)
+    rows.append(dict(kind="restore", seconds=time.perf_counter() - t0,
+                     dirty_pages=0, stored_MB=store.storage_bytes() / 1e6))
+    return rows
+
+
+def main() -> List[str]:
+    rows = run()
+    out = ["kind,seconds,dirty_pages,stored_MB"]
+    for r in rows:
+        out.append(f"{r['kind']},{r['seconds']:.3f},{r['dirty_pages']},{r['stored_MB']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

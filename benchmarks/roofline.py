@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run sweep (EXPERIMENTS.md §Roofline).
+
+Reads ``dryrun_results.jsonl`` (produced by ``repro.launch.dryrun --all``)
+and emits the per-(arch × shape × mesh) three-term roofline with the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and a what-would-help note.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.jsonl")
+
+ADVICE = {
+    "compute_s": "compute-bound: causal block-skipping (Pallas flash) / lower precision",
+    "memory_s": "HBM-bound: fuse softmax chain (Pallas), bf16 intermediates, int8 KV",
+    "collective_s": "ICI-bound: fewer FSDP regathers (accum), comm/compute overlap, int8 grads",
+}
+
+
+def main() -> List[str]:
+    if not os.path.exists(RESULTS):
+        return [f"(skipped: {RESULTS} not found — run repro.launch.dryrun --all first)"]
+    out = [
+        "arch,shape,mesh,compute_s,memory_s,collective_s,dominant,useful_ratio,mem_GB_per_dev,note"
+    ]
+    seen = set()
+    for line in open(RESULTS):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        if r.get("skipped"):
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,SKIP,,,{r['skipped'][:40]}")
+            continue
+        if not r.get("ok"):
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,FAIL,,,{r.get('error','')[:40]}")
+            continue
+        ro = r["roofline"]
+        dom = ro["dominant"]
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{ro['compute_s']:.4g},{ro['memory_s']:.4g},{ro['collective_s']:.4g},"
+            f"{dom.replace('_s','')},{(ro['useful_flops_ratio'] or 0):.3f},"
+            f"{r['bytes_per_device']['total'] / 1e9:.1f},{ADVICE[dom][:52]}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

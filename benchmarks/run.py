@@ -1,0 +1,53 @@
+"""Benchmark driver: one section per paper table/figure + beyond-paper runs.
+
+Usage: PYTHONPATH=src python -m benchmarks.run
+Prints ``name,...`` CSV blocks per benchmark.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def section(title: str) -> None:
+    print(f"\n### {title}", flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+
+    section("fig3ab_metadata_overhead (paper Fig. 3a/3b)")
+    from benchmarks import metadata_overhead
+
+    for line in metadata_overhead.main():
+        print(line)
+
+    section("fig3c_concurrent_throughput (paper Fig. 3c)")
+    from benchmarks import concurrent_throughput
+
+    for line in concurrent_throughput.main():
+        print(line)
+
+    section("serving_throughput (beyond-paper: paged KV + prefix cache)")
+    from benchmarks import serving_throughput
+
+    for line in serving_throughput.main():
+        print(line)
+
+    section("checkpoint_bench (beyond-paper: incremental COW checkpoints)")
+    from benchmarks import checkpoint_bench
+
+    for line in checkpoint_bench.main():
+        print(line)
+
+    section("roofline (dry-run derived, EXPERIMENTS.md §Roofline)")
+    from benchmarks import roofline
+
+    for line in roofline.main():
+        print(line)
+
+    print(f"\ntotal benchmark time: {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

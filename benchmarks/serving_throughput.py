@@ -1,0 +1,59 @@
+"""Beyond-paper: paged-KV serving engine throughput + prefix-cache savings.
+
+Reduced-config llama on CPU: measures tokens/s with and without shared
+prompt prefixes (the COW snapshot-sharing benefit applied to inference), and
+the page-pool utilization statistics.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.lm import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def run(n_requests=8, max_new=8, shared_prefix_len=16) -> List[dict]:
+    cfg = get_config("llama3_2-1b").smoke()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    rows = []
+    for mode in ("distinct", "shared_prefix"):
+        engine = ServingEngine(cfg, params, max_slots=4, n_pages=512)
+        prefix = rng.integers(0, cfg.vocab_size, shared_prefix_len).tolist()
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            tail = rng.integers(0, cfg.vocab_size, 8).tolist()
+            prompt = (prefix if mode == "shared_prefix" else
+                      rng.integers(0, cfg.vocab_size, shared_prefix_len).tolist()) + tail
+            engine.submit(Request(i, prompt, max_new_tokens=max_new))
+        done = engine.run_until_drained()
+        dt = time.perf_counter() - t0
+        toks = sum(len(c.tokens) for c in done.values())
+        rows.append(dict(
+            mode=mode,
+            tok_per_s=toks / dt,
+            prefix_hits=sum(c.prefill_skipped_tokens for c in done.values()),
+            pages_allocated=engine.alloc.stats["alloc"],
+            cow_copies=engine.alloc.stats["cow_copies"],
+        ))
+    return rows
+
+
+def main() -> List[str]:
+    rows = run()
+    out = ["mode,tok_per_s,prefix_hit_tokens,pages_allocated,cow_copies"]
+    for r in rows:
+        out.append(f"{r['mode']},{r['tok_per_s']:.1f},{r['prefix_hits']},"
+                   f"{r['pages_allocated']},{r['cow_copies']}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

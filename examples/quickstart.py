@@ -1,0 +1,57 @@
+"""Quickstart: the paper's blob-store API in 60 lines.
+
+ALLOC a terabyte-scale blob, WRITE fine-grain patches from concurrent
+clients, READ any published version (snapshots), watch COW share pages.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import threading
+
+import numpy as np
+
+from repro.core import BlobStore
+
+PAGE = 64 << 10  # 64 KB pages (paper §V)
+
+store = BlobStore(n_data_providers=8, n_metadata_providers=8, page_replication=2)
+blob = store.alloc(1 << 40, PAGE)  # 1 TB logical, allocate-on-write
+print(f"allocated blob {blob}: 1 TB / {PAGE >> 10} KB pages")
+
+# -- version 0 is the all-zero string ---------------------------------------------
+z = store.read(blob, 0, 0, PAGE)
+assert not z.data.any()
+
+# -- concurrent writers on disjoint segments (lock-free W/W) ----------------------
+def writer(i: int) -> None:
+    seg = np.full(4 * PAGE, i + 1, dtype=np.uint8)
+    v = store.write(blob, seg, i * 4 * PAGE)
+    print(f"  writer {i} published version {v}")
+
+threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+[t.start() for t in threads]
+[t.join() for t in threads]
+
+latest = store.version_manager.latest_published(blob)
+print(f"latest published version: {latest}")
+
+# -- snapshot isolation: old versions stay readable (R/W concurrency) -------------
+v_snap = latest
+store.write(blob, np.full(4 * PAGE, 99, np.uint8), 0)  # overwrite writer 0's data
+old = store.read(blob, v_snap, 0, PAGE).data[0]
+new = store.read(blob, None, 0, PAGE).data[0]
+print(f"snapshot v{v_snap} still reads {old}; latest reads {new}")
+
+# -- COW metadata sharing ----------------------------------------------------------
+nodes_before = store.metadata.total_nodes()
+store.write(blob, np.ones(PAGE, np.uint8), 123 * PAGE)  # 1-page patch
+nodes_after = store.metadata.total_nodes()
+print(f"1-page patch on a 1 TB blob created only {nodes_after - nodes_before} "
+      f"metadata nodes (tree height), total bytes stored: {store.storage_bytes() >> 10} KB")
+
+# -- fault tolerance: page replication survives provider loss ----------------------
+store.provider_manager.fail_provider(0)
+ok = store.read(blob, None, 0, 4 * PAGE)
+print(f"provider 0 down: read still fine via replicas ({ok.data[0]})")
+store.close()
+print("quickstart OK")

@@ -1,0 +1,46 @@
+"""The paper's contribution: lock-free versioned blob storage.
+
+Public API: :class:`BlobStore` (ALLOC/READ/WRITE/GC), plus the individual
+actors for tests and benchmarks.
+"""
+
+from repro.core.blob import BlobStore, ReadResult
+from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
+from repro.core.provider import DataProvider, ProviderManager
+from repro.core.segment_tree import (
+    BorderLink,
+    NodeKey,
+    PageRef,
+    TreeNode,
+    ZERO_VERSION,
+    build_write_tree,
+    compute_border_links,
+    count_write_nodes,
+    traverse,
+)
+from repro.core.version_manager import JournalEntry, VersionManager
+
+__all__ = [
+    "BlobStore",
+    "ReadResult",
+    "MetadataDHT",
+    "ProviderFailed",
+    "TrafficStats",
+    "FlatView",
+    "ZERO_PAGE",
+    "flatten",
+    "DataProvider",
+    "ProviderManager",
+    "BorderLink",
+    "NodeKey",
+    "PageRef",
+    "TreeNode",
+    "ZERO_VERSION",
+    "build_write_tree",
+    "compute_border_links",
+    "count_write_nodes",
+    "traverse",
+    "JournalEntry",
+    "VersionManager",
+]

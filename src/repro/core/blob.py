@@ -1,0 +1,270 @@
+"""BlobStore: the paper's client-side access protocol (§III.B).
+
+WRITE(id, buffer, offset, size):
+  1. ask the provider manager for placements (one per fresh page);
+  2. store pages on the data providers **in parallel**;
+  3. ask the version manager for a version number + precomputed border links
+     (the only serialized step);
+  4. build the new metadata tree and store its nodes on the metadata DHT in
+     parallel (weaving happens through the precomputed links — complete
+     isolation from concurrent writers);
+  5. report success; the version manager publishes versions in order.
+
+READ(id, v, buffer, offset, size):
+  1. ask the version manager for the latest published version (fails if the
+     requested version is unpublished);
+  2. traverse the segment tree of version v over the DHT (parallel per level);
+  3. fetch the leaves' pages from the data providers in parallel.
+
+All data-plane steps run on a thread pool to model the paper's concurrent
+RPCs; the version manager interaction is the only serialization point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.provider import DataProvider, ProviderManager
+from repro.core.segment_tree import (
+    NodeKey,
+    PageRef,
+    TreeNode,
+    ZERO_VERSION,
+    build_write_tree,
+    traverse,
+)
+from repro.core.version_manager import VersionManager
+
+
+@dataclasses.dataclass
+class ReadResult:
+    latest_published: int
+    data: np.ndarray
+
+
+class BlobStore:
+    """Facade wiring clients to the five actors of the paper's architecture."""
+
+    def __init__(
+        self,
+        n_data_providers: int = 4,
+        n_metadata_providers: int = 4,
+        page_replication: int = 1,
+        metadata_replication: int = 1,
+        max_workers: int = 8,
+    ) -> None:
+        self.stats = TrafficStats()
+        self.version_manager = VersionManager()
+        self.provider_manager = ProviderManager(replication=page_replication, stats=self.stats)
+        self.metadata = MetadataDHT(
+            n_metadata_providers, replication=metadata_replication, stats=self.stats
+        )
+        for i in range(n_data_providers):
+            self.provider_manager.register(DataProvider(i))
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._next_provider_id = n_data_providers
+        self._membership_lock = threading.Lock()
+
+    # -- elasticity ------------------------------------------------------------
+    def add_data_provider(self) -> int:
+        with self._membership_lock:
+            pid = self._next_provider_id
+            self._next_provider_id += 1
+        self.provider_manager.register(DataProvider(pid))
+        return pid
+
+    # -- ALLOC -------------------------------------------------------------------
+    def alloc(self, size_bytes: int, page_size: int) -> int:
+        if page_size & (page_size - 1):
+            raise ValueError("page_size must be a power of two")
+        if size_bytes % page_size:
+            raise ValueError("blob size must be a multiple of page_size")
+        total_pages = size_bytes // page_size
+        return self.version_manager.alloc(total_pages, page_size)
+
+    # -- WRITE -------------------------------------------------------------------
+    def write(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
+        """Patch ``blob_id`` with ``buffer`` at ``offset_bytes``; returns the
+        assigned version (published once all earlier versions publish)."""
+        total_pages, page_size = self.version_manager.blob_info(blob_id)
+        buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
+        if offset_bytes % page_size or buffer.size % page_size:
+            raise ValueError("WRITE must be page-aligned (paper §II)")
+        page_offset = offset_bytes // page_size
+        n_pages = buffer.size // page_size
+        if n_pages == 0:
+            raise ValueError("empty write")
+
+        # (1) placements
+        placements = self.provider_manager.allocate(n_pages)
+
+        # (2) store pages in parallel, one aggregated put per provider
+        by_provider: Dict[int, List[Tuple[int, np.ndarray]]] = {}
+        for i, (primary, replicas) in enumerate(placements):
+            page = buffer[i * page_size : (i + 1) * page_size].copy()
+            for pid, key in (primary,) + replicas:
+                by_provider.setdefault(pid, []).append((key, page))
+
+        def _put(pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
+            self.provider_manager.get_provider(pid).put_pages(items)
+            self.stats.record(pid, len(items), sum(p.nbytes for _, p in items))
+
+        futures = [self._pool.submit(_put, pid, items) for pid, items in by_provider.items()]
+        for f in futures:
+            f.result()
+
+        # (3) version number + border links (the only serialized step)
+        version, links = self.version_manager.assign_version(blob_id, page_offset, n_pages)
+
+        # (4) build + store metadata nodes (parallelized inside put_nodes by
+        #     aggregation per shard)
+        nodes = build_write_tree(
+            blob_id, version, total_pages, page_offset, n_pages, placements, links
+        )
+        self.metadata.put_nodes(nodes)
+
+        # (5) report success → in-order publish
+        self.version_manager.report_success(blob_id, version)
+        return version
+
+    # -- READ --------------------------------------------------------------------
+    def read(
+        self,
+        blob_id: int,
+        version: Optional[int],
+        offset_bytes: int,
+        size_bytes: int,
+    ) -> ReadResult:
+        """Read ``[offset_bytes, offset_bytes+size_bytes)`` of ``version``
+        (``None`` = latest published). Fails if ``version`` is unpublished."""
+        total_pages, page_size = self.version_manager.blob_info(blob_id)
+        latest = self.version_manager.latest_published(blob_id)
+        if version is None:
+            version = latest
+        elif version > latest:
+            raise ValueError(f"version {version} not yet published (latest={latest})")
+
+        first_page = offset_bytes // page_size
+        last_page = (offset_bytes + size_bytes + page_size - 1) // page_size
+        n_pages = max(last_page - first_page, 0)
+        out = np.zeros(n_pages * page_size, dtype=np.uint8)
+        if size_bytes == 0:
+            return ReadResult(latest, out[:0])
+
+        # (2) metadata traversal over the DHT
+        leaves = list(
+            traverse(self.metadata.get_node, blob_id, version, total_pages, first_page, n_pages)
+        )
+
+        # (3) parallel page fetch, aggregated per provider, replica fallback
+        def _fetch(page_index: int, leaf: Optional[TreeNode]) -> None:
+            if leaf is None:
+                return  # implicit zero page
+            base = (page_index - first_page) * page_size
+            last_err: Optional[Exception] = None
+            for pid, key in leaf.all_page_refs():
+                try:
+                    page = self.provider_manager.get_provider(pid).get_page(key)
+                    self.stats.record(pid, 1, page.nbytes)
+                    out[base : base + page_size] = page
+                    return
+                except (ProviderFailed, KeyError) as err:
+                    last_err = err
+            raise last_err if last_err else KeyError(f"page {page_index} unavailable")
+
+        futures = [self._pool.submit(_fetch, idx, leaf) for idx, leaf in leaves]
+        for f in futures:
+            f.result()
+
+        lo = offset_bytes - first_page * page_size
+        return ReadResult(latest, out[lo : lo + size_bytes])
+
+    def write_unaligned(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
+        """WRITE at arbitrary byte offset/size via client-side read-modify-write
+        of the boundary pages (the paper's API allows arbitrary segments; pages
+        are the storage granularity, so partial boundary pages are merged from
+        the latest published version before patching).
+
+        Note the concurrency caveat the paper implies: the boundary merge reads
+        the LATEST version, so two concurrent unaligned writers sharing a
+        boundary page serialize at page granularity like any COW system.
+        """
+        _, page_size = self.version_manager.blob_info(blob_id)
+        buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
+        lo = offset_bytes // page_size * page_size
+        hi = -(-(offset_bytes + buffer.size) // page_size) * page_size
+        if lo == offset_bytes and hi == offset_bytes + buffer.size:
+            return self.write(blob_id, buffer, offset_bytes)
+        merged = np.zeros(hi - lo, np.uint8)
+        if lo < offset_bytes:  # left boundary page
+            merged[:page_size] = self.read(blob_id, None, lo, page_size).data
+        if hi > offset_bytes + buffer.size:  # right boundary page
+            merged[-page_size:] = self.read(blob_id, None, hi - page_size, page_size).data
+        merged[offset_bytes - lo : offset_bytes - lo + buffer.size] = buffer
+        return self.write(blob_id, merged, lo)
+
+    # -- GC (paper future work) -----------------------------------------------------
+    def gc(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
+        """Drop all tree nodes / pages unreachable from ``keep_versions``.
+
+        Must be invoked only when no concurrent accesses target the dropped
+        versions (the paper's "ordered by the client" semantics). Returns
+        (nodes_freed, pages_freed).
+        """
+        total_pages, _ = self.version_manager.blob_info(blob_id)
+        latest = self.version_manager.latest_published(blob_id)
+        keep = sorted(set(v for v in keep_versions if v != ZERO_VERSION))
+        reachable_nodes: Set[NodeKey] = set()
+        reachable_pages: Set[PageRef] = set()
+
+        def mark(version: int, offset: int, size: int) -> None:
+            if version == ZERO_VERSION:
+                return
+            key = NodeKey(blob_id, version, offset, size)
+            if key in reachable_nodes:
+                return
+            node = self.metadata.get_node(key)
+            reachable_nodes.add(key)
+            if node.is_leaf:
+                reachable_pages.update(node.all_page_refs())
+                return
+            half = size // 2
+            mark(node.left_version, offset, half)
+            mark(node.right_version, offset + half, half)
+
+        for v in keep:
+            mark(v, 0, total_pages)
+
+        # Enumerate every stored node of this blob and drop unreachable ones.
+        doomed_nodes: List[NodeKey] = []
+        doomed_pages: Set[PageRef] = set()
+        for shard in self.metadata.shards:
+            for key, node in list(shard._nodes.items()):
+                if key.blob_id != blob_id or key.version > latest:
+                    continue  # never GC in-flight (unpublished) versions
+                if key not in reachable_nodes:
+                    doomed_nodes.append(key)
+                    if node.is_leaf:
+                        doomed_pages.update(ref for ref in node.all_page_refs())
+        doomed_pages -= reachable_pages
+        self.metadata.delete_nodes(doomed_nodes)
+        by_provider: Dict[int, List[int]] = {}
+        for pid, key in doomed_pages:
+            by_provider.setdefault(pid, []).append(key)
+        for pid, keys in by_provider.items():
+            self.provider_manager.get_provider(pid).delete_pages(keys)
+        self.provider_manager.release(sorted(doomed_pages))
+        return len(doomed_nodes), len(doomed_pages)
+
+    # -- introspection ------------------------------------------------------------
+    def storage_bytes(self) -> int:
+        return sum(p.used_bytes() for p in self.provider_manager.providers())
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)

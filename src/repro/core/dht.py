@@ -1,0 +1,152 @@
+"""Metadata-provider DHT abstraction (paper §III.A, "metadata provider").
+
+The paper stores segment-tree nodes in BambooDHT across *metadata providers*.
+Here the DHT is a set of in-process shards keyed by a stable hash of the node
+key. Nodes are immutable and **create-only** (never mutated, never overwritten
+with different content), so gets and puts need no locking beyond the
+interpreter's atomic dict operations — this mirrors the lock-free property of
+the paper's design rather than merely simulating it.
+
+A :class:`TrafficStats` recorder counts RPCs and bytes, with and without the
+paper's client-side RPC aggregation (§V.A: "delays RPC calls to a single
+machine and streams all of them in a single real RPC call"), so benchmarks can
+model network completion time for the Fig. 3 reproductions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.core.segment_tree import NodeKey, TreeNode
+
+
+class ProviderFailed(RuntimeError):
+    """Raised when an injected failure makes a provider unreachable."""
+
+
+@dataclasses.dataclass
+class TrafficStats:
+    """Thread-safe accounting of logical RPCs / bytes per destination."""
+
+    rpcs: int = 0
+    aggregated_rpcs: int = 0
+    bytes_sent: int = 0
+    per_dest_bytes: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
+    _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock, repr=False)
+
+    def record(self, dest: int, n_messages: int, n_bytes: int) -> None:
+        with self._lock:
+            self.rpcs += n_messages
+            self.aggregated_rpcs += 1
+            self.bytes_sent += n_bytes
+            self.per_dest_bytes[dest] += n_bytes
+
+    def reset(self) -> None:
+        with self._lock:
+            self.rpcs = 0
+            self.aggregated_rpcs = 0
+            self.bytes_sent = 0
+            self.per_dest_bytes.clear()
+
+
+#: Serialized size of one tree node on the wire; matches the order of
+#: magnitude of the paper's implementation (key + two child versions + page
+#: ref + framing).
+NODE_WIRE_BYTES = 64
+
+
+class MetadataShard:
+    """One metadata provider: an in-memory, create-only node store."""
+
+    def __init__(self, shard_id: int) -> None:
+        self.shard_id = shard_id
+        self._nodes: Dict[NodeKey, TreeNode] = {}
+        self.failed = False
+
+    def put_many(self, nodes: Sequence[TreeNode]) -> None:
+        if self.failed:
+            raise ProviderFailed(f"metadata shard {self.shard_id} is down")
+        for node in nodes:
+            # Create-only: concurrent writers never target the same key
+            # because keys embed the (unique) version number.
+            self._nodes[node.key] = node
+
+    def get(self, key: NodeKey) -> Optional[TreeNode]:
+        if self.failed:
+            raise ProviderFailed(f"metadata shard {self.shard_id} is down")
+        return self._nodes.get(key)
+
+    def delete_many(self, keys: Iterable[NodeKey]) -> None:
+        for key in keys:
+            self._nodes.pop(key, None)
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+
+class MetadataDHT:
+    """Hash-dispersed node store over ``n_shards`` metadata providers.
+
+    ``replication`` > 1 stores each node on that many consecutive shards
+    (BambooDHT-style neighbor replication); reads fall back across replicas,
+    which is the paper's (inherited) metadata fault tolerance.
+    """
+
+    def __init__(self, n_shards: int, replication: int = 1, stats: Optional[TrafficStats] = None) -> None:
+        if replication > n_shards:
+            raise ValueError("replication cannot exceed shard count")
+        self.shards = [MetadataShard(i) for i in range(n_shards)]
+        self.replication = replication
+        self.stats = stats or TrafficStats()
+
+    def _home(self, key: NodeKey) -> int:
+        return hash((key.blob_id, key.version, key.offset, key.size)) % len(self.shards)
+
+    def _replica_ids(self, key: NodeKey) -> List[int]:
+        home = self._home(key)
+        return [(home + r) % len(self.shards) for r in range(self.replication)]
+
+    def put_nodes(self, nodes: Sequence[TreeNode]) -> None:
+        """Store nodes, aggregating all puts to the same shard into one RPC."""
+        by_shard: Dict[int, List[TreeNode]] = defaultdict(list)
+        for node in nodes:
+            for sid in self._replica_ids(node.key):
+                by_shard[sid].append(node)
+        for sid, batch in by_shard.items():
+            self.shards[sid].put_many(batch)
+            self.stats.record(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+
+    def get_node(self, key: NodeKey) -> TreeNode:
+        last_err: Optional[Exception] = None
+        for sid in self._replica_ids(key):
+            try:
+                node = self.shards[sid].get(key)
+                self.stats.record(sid, 1, NODE_WIRE_BYTES)
+            except ProviderFailed as err:  # replica fallback
+                last_err = err
+                continue
+            if node is not None:
+                return node
+        if last_err is not None:
+            raise last_err
+        raise KeyError(f"metadata node not found: {key}")
+
+    def delete_nodes(self, keys: Iterable[NodeKey]) -> None:
+        by_shard: Dict[int, List[NodeKey]] = defaultdict(list)
+        for key in keys:
+            for sid in self._replica_ids(key):
+                by_shard[sid].append(key)
+        for sid, batch in by_shard.items():
+            self.shards[sid].delete_many(batch)
+
+    def total_nodes(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def fail_shard(self, shard_id: int) -> None:
+        self.shards[shard_id].failed = True
+
+    def recover_shard(self, shard_id: int) -> None:
+        self.shards[shard_id].failed = False

@@ -1,0 +1,126 @@
+"""Data providers + provider manager (paper §III.A).
+
+Data providers store pages in RAM. The provider manager tracks registered
+providers and, per WRITE, picks which providers receive the freshly written
+pages using a load-balancing strategy (least-loaded, ties broken round-robin
+— "some strategy that favors global load balancing").
+
+Providers may join and leave dynamically; page replication (``replication``)
+plus replica fallback on read provides the fault tolerance the paper defers to
+future work.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dht import ProviderFailed, TrafficStats
+from repro.core.segment_tree import PageRef
+
+
+class DataProvider:
+    """RAM page store. Pages are immutable once stored (COW discipline)."""
+
+    def __init__(self, provider_id: int) -> None:
+        self.provider_id = provider_id
+        self._pages: Dict[int, np.ndarray] = {}
+        self.failed = False
+
+    def put_pages(self, items: Sequence[Tuple[int, np.ndarray]]) -> None:
+        if self.failed:
+            raise ProviderFailed(f"data provider {self.provider_id} is down")
+        for page_key, data in items:
+            self._pages[page_key] = data
+
+    def get_page(self, page_key: int) -> np.ndarray:
+        if self.failed:
+            raise ProviderFailed(f"data provider {self.provider_id} is down")
+        return self._pages[page_key]
+
+    def delete_pages(self, page_keys: Sequence[int]) -> None:
+        for key in page_keys:
+            self._pages.pop(key, None)
+
+    @property
+    def n_pages(self) -> int:
+        return len(self._pages)
+
+    def used_bytes(self) -> int:
+        return sum(p.nbytes for p in self._pages.values())
+
+
+class ProviderManager:
+    """Tracks live data providers and allocates page placements.
+
+    Placement returns, per page, a primary provider and ``replication - 1``
+    replica providers (all distinct). The strategy is least-loaded-first over
+    a running load counter, which converges to the round-robin-ish balance the
+    paper relies on for its throughput scaling.
+    """
+
+    def __init__(self, replication: int = 1, stats: Optional[TrafficStats] = None) -> None:
+        self.replication = replication
+        self._providers: Dict[int, DataProvider] = {}
+        self._load: Dict[int, int] = {}
+        self._page_key_counter = itertools.count()
+        self._lock = threading.Lock()
+        self.stats = stats or TrafficStats()
+
+    # -- membership (dynamic join/leave, paper §III.A) ---------------------
+    def register(self, provider: DataProvider) -> None:
+        with self._lock:
+            self._providers[provider.provider_id] = provider
+            self._load.setdefault(provider.provider_id, 0)
+
+    def deregister(self, provider_id: int) -> None:
+        with self._lock:
+            self._providers.pop(provider_id, None)
+            self._load.pop(provider_id, None)
+
+    def providers(self) -> List[DataProvider]:
+        with self._lock:
+            return list(self._providers.values())
+
+    def get_provider(self, provider_id: int) -> DataProvider:
+        with self._lock:
+            return self._providers[provider_id]
+
+    # -- placement ----------------------------------------------------------
+    def allocate(self, n_pages: int) -> List[Tuple[PageRef, Tuple[PageRef, ...]]]:
+        """Pick (primary, replicas) for ``n_pages`` fresh pages."""
+        with self._lock:
+            if len(self._providers) < self.replication:
+                raise RuntimeError("not enough providers for requested replication")
+            out: List[Tuple[PageRef, Tuple[PageRef, ...]]] = []
+            for _ in range(n_pages):
+                ranked = sorted(self._load, key=lambda pid: (self._load[pid], pid))
+                chosen = ranked[: self.replication]
+                key = next(self._page_key_counter)
+                for pid in chosen:
+                    self._load[pid] += 1
+                primary: PageRef = (chosen[0], key)
+                replicas: Tuple[PageRef, ...] = tuple((pid, key) for pid in chosen[1:])
+                out.append((primary, replicas))
+            return out
+
+    def release(self, refs: Sequence[PageRef]) -> None:
+        """Return load credit for GC'd pages."""
+        with self._lock:
+            for pid, _ in refs:
+                if pid in self._load and self._load[pid] > 0:
+                    self._load[pid] -= 1
+
+    # -- failure injection ---------------------------------------------------
+    def fail_provider(self, provider_id: int) -> None:
+        self._providers[provider_id].failed = True
+
+    def recover_provider(self, provider_id: int) -> None:
+        self._providers[provider_id].failed = False
+
+    def load_snapshot(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self._load)

@@ -1,0 +1,244 @@
+"""Copy-on-write distributed segment-tree metadata (paper §III.C).
+
+A blob of ``total_pages`` pages (power of two) is described, for each
+*version*, by a full binary tree. A node covers the segment ``(offset, size)``
+(in pages): its left child covers the first half, the right child the second
+half, and leaves cover exactly one page. Node identity in the metadata DHT is
+``(blob_id, version, offset, size)``.
+
+A WRITE that patches pages ``[wo, wo+ws)`` and is assigned version ``v``
+creates only the nodes whose covered segment intersects the patch — the
+smallest (possibly incomplete) subtree with those leaves. *Border nodes* (whose
+covered segment only partially intersects the patch) are completed by linking
+the missing child to the node of an **earlier** version covering that child
+segment: the tree of version ``v`` is "weaved" into its predecessors, so all
+unmodified metadata (and therefore data pages) are shared between snapshots.
+
+Child links are stored as *version numbers*: the left child of inner node
+``(v, o, s)`` is the node ``(left_version, o, s/2)`` and the right child is
+``(right_version, o + s/2, s/2)``. A link to ``version 0`` denotes the
+implicit all-zero initial string (paper §II) — no node is materialized for it.
+
+All nodes are immutable and create-only, which is what makes readers lock-free
+with respect to writers: a published version's tree can never change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+
+# A page is addressed by (provider_id, page_key). page_key is globally unique.
+PageRef = Tuple[int, int]
+
+#: Version number of the implicit all-zero initial string.
+ZERO_VERSION = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeKey:
+    """DHT key of a metadata tree node. ``offset``/``size`` are in pages."""
+
+    blob_id: int
+    version: int
+    offset: int
+    size: int
+
+    def child_keys(self, left_version: int, right_version: int) -> Tuple["NodeKey", "NodeKey"]:
+        half = self.size // 2
+        return (
+            NodeKey(self.blob_id, left_version, self.offset, half),
+            NodeKey(self.blob_id, right_version, self.offset + half, half),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeNode:
+    """An immutable metadata node.
+
+    Leaves (``size == 1``) carry ``page`` (+ replicas); inner nodes carry the
+    versions of their two children.
+    """
+
+    key: NodeKey
+    left_version: int = ZERO_VERSION
+    right_version: int = ZERO_VERSION
+    page: Optional[PageRef] = None
+    replicas: Tuple[PageRef, ...] = ()
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.key.size == 1
+
+    def all_page_refs(self) -> Tuple[PageRef, ...]:
+        assert self.page is not None
+        return (self.page,) + self.replicas
+
+
+def intersects(o1: int, s1: int, o2: int, s2: int) -> bool:
+    """Do half-open page intervals [o1, o1+s1) and [o2, o2+s2) intersect?"""
+    return o1 < o2 + s2 and o2 < o1 + s1
+
+
+@dataclasses.dataclass(frozen=True)
+class BorderLink:
+    """Precomputed link for a border node's missing child (paper §IV.C).
+
+    The node covering ``(offset, size)`` of the *new* tree is incomplete; its
+    missing child covering ``(child_offset, child_size)`` must point to
+    ``child_version`` — the most recent version ``< v`` whose patch intersects
+    the child segment (``ZERO_VERSION`` if none).
+    """
+
+    offset: int
+    size: int
+    child_offset: int
+    child_size: int
+    child_version: int
+
+
+def compute_border_links(
+    total_pages: int,
+    write_offset: int,
+    write_size: int,
+    version_of_segment: Callable[[int, int], int],
+) -> List[BorderLink]:
+    """Compute every border link needed to weave version ``v``'s tree.
+
+    ``version_of_segment(o, s)`` must return the most recent version ``< v``
+    whose patched interval intersects ``[o, o+s)`` (``ZERO_VERSION`` if none).
+    The version manager supplies this from its interval history — crucially it
+    can do so even for *unpublished* concurrent writes, which is what lets
+    concurrent writers weave in complete isolation (paper §IV.C).
+
+    The walk mirrors the read traversal: starting at the root, descend into
+    children that intersect the patch; a child that does not intersect the
+    patch produces a :class:`BorderLink`.
+    """
+    links: List[BorderLink] = []
+
+    def descend(offset: int, size: int) -> None:
+        if size == 1:
+            return
+        half = size // 2
+        lo, ls = offset, half
+        ro, rs = offset + half, half
+        l_hit = intersects(lo, ls, write_offset, write_size)
+        r_hit = intersects(ro, rs, write_offset, write_size)
+        if l_hit and not r_hit:
+            links.append(BorderLink(offset, size, ro, rs, version_of_segment(ro, rs)))
+        if r_hit and not l_hit:
+            links.append(BorderLink(offset, size, lo, ls, version_of_segment(lo, ls)))
+        if l_hit:
+            descend(lo, ls)
+        if r_hit:
+            descend(ro, rs)
+
+    descend(0, total_pages)
+    return links
+
+
+def build_write_tree(
+    blob_id: int,
+    version: int,
+    total_pages: int,
+    write_offset: int,
+    write_size: int,
+    leaf_pages: Sequence[Tuple[PageRef, Tuple[PageRef, ...]]],
+    border_links: Sequence[BorderLink],
+) -> List[TreeNode]:
+    """Materialize all nodes of version ``version``'s (incomplete) tree.
+
+    ``leaf_pages[i]`` is ``(primary, replicas)`` for page ``write_offset+i``.
+    Returns the new nodes (leaves + inner + root); nothing is written to the
+    DHT here — the caller stores them, then reports success to the version
+    manager (two-phase write, paper §III.B).
+    """
+    border = {(b.offset, b.size): b for b in border_links}
+    nodes: List[TreeNode] = []
+
+    def descend(offset: int, size: int) -> None:
+        key = NodeKey(blob_id, version, offset, size)
+        if size == 1:
+            primary, replicas = leaf_pages[offset - write_offset]
+            nodes.append(TreeNode(key, page=primary, replicas=tuple(replicas)))
+            return
+        half = size // 2
+        lo, ls = offset, half
+        ro, rs = offset + half, half
+        l_hit = intersects(lo, ls, write_offset, write_size)
+        r_hit = intersects(ro, rs, write_offset, write_size)
+        lv = version if l_hit else border[(offset, size)].child_version
+        rv = version if r_hit else border[(offset, size)].child_version
+        nodes.append(TreeNode(key, left_version=lv, right_version=rv))
+        if l_hit:
+            descend(lo, ls)
+        if r_hit:
+            descend(ro, rs)
+
+    descend(0, total_pages)
+    return nodes
+
+
+def traverse(
+    get_node: Callable[[NodeKey], TreeNode],
+    blob_id: int,
+    root_version: int,
+    total_pages: int,
+    offset: int,
+    size: int,
+) -> Iterator[Tuple[int, Optional[TreeNode]]]:
+    """Yield ``(page_index, leaf_or_None)`` for every page of ``[offset,
+    offset+size)`` under the tree rooted at ``root_version``.
+
+    ``None`` stands for a page of the implicit all-zero version. ``get_node``
+    is the (possibly remote / DHT) node fetch; traversal issues only the node
+    fetches whose segment intersects the request (paper Fig. 2a).
+    """
+    if root_version == ZERO_VERSION:
+        for p in range(offset, offset + size):
+            yield p, None
+        return
+
+    def descend(version: int, o: int, s: int) -> Iterator[Tuple[int, Optional[TreeNode]]]:
+        if version == ZERO_VERSION:
+            lo = max(o, offset)
+            hi = min(o + s, offset + size)
+            for p in range(lo, hi):
+                yield p, None
+            return
+        node = get_node(NodeKey(blob_id, version, o, s))
+        if node.is_leaf:
+            yield o, node
+            return
+        half = s // 2
+        if intersects(o, half, offset, size):
+            yield from descend(node.left_version, o, half)
+        if intersects(o + half, half, offset, size):
+            yield from descend(node.right_version, o + half, half)
+
+    yield from descend(root_version, 0, total_pages)
+
+
+def count_write_nodes(total_pages: int, write_offset: int, write_size: int) -> int:
+    """Number of metadata nodes a WRITE of ``write_size`` pages creates.
+
+    Used by benchmarks: 2·p − 1 nodes for the aligned subtree plus the path to
+    the root — O(p + log total_pages), independent of blob size beyond the log
+    factor (the paper's space-efficiency argument).
+    """
+    count = 0
+
+    def descend(offset: int, size: int) -> None:
+        nonlocal count
+        count += 1
+        if size == 1:
+            return
+        half = size // 2
+        if intersects(offset, half, write_offset, write_size):
+            descend(offset, half)
+        if intersects(offset + half, half, write_offset, write_size):
+            descend(offset + half, half)
+
+    descend(0, total_pages)
+    return count

@@ -1,0 +1,188 @@
+"""Version manager (paper §III.A/§IV): the system's only serialization point.
+
+Responsibilities, exactly as in the paper:
+
+* assign monotonically increasing version numbers to WRITEs of a blob;
+* **precompute border-node links** for each assigned version from the interval
+  history of *all* previously assigned versions — published or not — so that
+  concurrent writers weave their metadata trees in complete isolation
+  (paper §IV.C);
+* publish versions **in order**: version ``v`` becomes visible to readers only
+  once versions ``1..v`` have all reported success. This yields the paper's
+  global serializability (every READ of version ``v`` sees exactly the first
+  ``v`` patches) and liveness (every WRITE eventually publishes).
+
+Fault tolerance (paper's future work, implemented here): every state
+transition is appended to a journal; :func:`VersionManager.recover` rebuilds a
+manager from a journal replay, and unfinished assignments are surfaced so the
+caller can retry or abandon them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.segment_tree import BorderLink, ZERO_VERSION, compute_border_links
+
+
+@dataclasses.dataclass
+class JournalEntry:
+    op: str  # "alloc" | "assign" | "complete"
+    blob_id: int
+    version: int = 0
+    offset: int = 0
+    size: int = 0
+    total_pages: int = 0
+    page_size: int = 0
+
+
+@dataclasses.dataclass
+class _BlobState:
+    total_pages: int
+    page_size: int
+    #: latest assigned version (may exceed latest published under concurrency)
+    assigned: int = 0
+    #: latest published version; versions publish strictly in order
+    published: int = 0
+    #: interval history: version -> (offset, size) in pages
+    intervals: Dict[int, Tuple[int, int]] = dataclasses.field(default_factory=dict)
+    #: versions that reported success but are not yet publishable
+    completed: set = dataclasses.field(default_factory=set)
+    #: per-page latest assigned version, for O(range-max) border queries
+    page_versions: Optional[np.ndarray] = None
+
+
+class VersionManager:
+    """Serializes version assignment; everything else stays parallel."""
+
+    def __init__(self) -> None:
+        self._blobs: Dict[int, _BlobState] = {}
+        self._blob_id_counter = 0
+        self._lock = threading.Lock()
+        self._published_cv = threading.Condition(self._lock)
+        self.journal: List[JournalEntry] = []
+
+    # -- ALLOC ---------------------------------------------------------------
+    def alloc(self, total_pages: int, page_size: int) -> int:
+        if total_pages & (total_pages - 1):
+            raise ValueError("total_pages must be a power of two (paper §II)")
+        with self._lock:
+            blob_id = self._blob_id_counter
+            self._blob_id_counter += 1
+            self._blobs[blob_id] = _BlobState(
+                total_pages=total_pages,
+                page_size=page_size,
+                page_versions=np.zeros(total_pages, dtype=np.int64),
+            )
+            self.journal.append(
+                JournalEntry("alloc", blob_id, total_pages=total_pages, page_size=page_size)
+            )
+            return blob_id
+
+    def blob_info(self, blob_id: int) -> Tuple[int, int]:
+        with self._lock:
+            st = self._blobs[blob_id]
+            return st.total_pages, st.page_size
+
+    # -- WRITE protocol --------------------------------------------------------
+    def assign_version(
+        self, blob_id: int, offset: int, size: int
+    ) -> Tuple[int, List[BorderLink]]:
+        """Step 2 of a WRITE: get a fresh version number + precomputed border
+        links. Runs under the manager lock — the paper's single serialization
+        point — but the work inside is O(size + log total_pages)."""
+        with self._lock:
+            st = self._blobs[blob_id]
+            if offset < 0 or size <= 0 or offset + size > st.total_pages:
+                raise ValueError("write range out of bounds")
+            version = st.assigned + 1
+
+            pv = st.page_versions
+            assert pv is not None
+
+            def version_of_segment(o: int, s: int) -> int:
+                # Most recent version < `version` intersecting [o, o+s):
+                # range-max over the per-page latest-version array, which at
+                # this point reflects exactly versions 1..version-1.
+                return int(pv[o : o + s].max(initial=ZERO_VERSION))
+
+            links = compute_border_links(st.total_pages, offset, size, version_of_segment)
+
+            # Commit the assignment only after computing links.
+            st.assigned = version
+            st.intervals[version] = (offset, size)
+            pv[offset : offset + size] = version
+            self.journal.append(JournalEntry("assign", blob_id, version, offset, size))
+            return version, links
+
+    def report_success(self, blob_id: int, version: int) -> int:
+        """Final step of a WRITE. Publishes the maximal completed prefix and
+        returns the new latest published version."""
+        with self._lock:
+            st = self._blobs[blob_id]
+            st.completed.add(version)
+            self.journal.append(JournalEntry("complete", blob_id, version))
+            while (st.published + 1) in st.completed:
+                st.completed.discard(st.published + 1)
+                st.published += 1
+            self._published_cv.notify_all()
+            return st.published
+
+    # -- READ protocol ---------------------------------------------------------
+    def latest_published(self, blob_id: int) -> int:
+        with self._lock:
+            return self._blobs[blob_id].published
+
+    def is_published(self, blob_id: int, version: int) -> bool:
+        with self._lock:
+            return version <= self._blobs[blob_id].published
+
+    def wait_published(self, blob_id: int, version: int, timeout: Optional[float] = None) -> bool:
+        """Block until ``version`` publishes (liveness helper for tests)."""
+        with self._published_cv:
+            return self._published_cv.wait_for(
+                lambda: self._blobs[blob_id].published >= version, timeout=timeout
+            )
+
+    def interval_of(self, blob_id: int, version: int) -> Tuple[int, int]:
+        with self._lock:
+            return self._blobs[blob_id].intervals[version]
+
+    def assigned_versions(self, blob_id: int) -> int:
+        with self._lock:
+            return self._blobs[blob_id].assigned
+
+    # -- fault tolerance ---------------------------------------------------------
+    @classmethod
+    def recover(cls, journal: List[JournalEntry]) -> Tuple["VersionManager", Dict[int, List[int]]]:
+        """Rebuild a manager from a journal replay.
+
+        Returns ``(manager, orphans)`` where ``orphans[blob_id]`` lists
+        versions that were assigned but never reported success — a recovering
+        deployment either waits for their writers or garbage-collects their
+        pages. Publishing stops before the first orphan, preserving
+        serializability across the crash.
+        """
+        vm = cls()
+        completed: Dict[int, set] = {}
+        for entry in journal:
+            if entry.op == "alloc":
+                bid = vm.alloc(entry.total_pages, entry.page_size)
+                assert bid == entry.blob_id
+                completed[bid] = set()
+            elif entry.op == "assign":
+                version, _ = vm.assign_version(entry.blob_id, entry.offset, entry.size)
+                assert version == entry.version
+            elif entry.op == "complete":
+                completed[entry.blob_id].add(entry.version)
+        orphans: Dict[int, List[int]] = {}
+        for bid, done in completed.items():
+            for v in sorted(done):
+                vm.report_success(bid, v)
+            st = vm._blobs[bid]
+            orphans[bid] = [v for v in range(1, st.assigned + 1) if v not in done and v > st.published]
+        return vm, orphans

@@ -1,0 +1,5 @@
+from repro.data.pipeline import PipelineConfig, TokenPipeline, write_token_corpus
+from repro.data.sky import SkyLayout, SkySimulator, detect_transients
+
+__all__ = ["PipelineConfig", "TokenPipeline", "write_token_corpus",
+           "SkyLayout", "SkySimulator", "detect_transients"]

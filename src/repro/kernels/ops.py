@@ -1,0 +1,357 @@
+"""Jit-ready kernel wrappers with implementation dispatch.
+
+``impl``:
+  * ``"xla"``    — memory-feasible pure-XLA fast paths (chunked/online-softmax
+                   formulations). Used on CPU, in the dry-run, and as GSPMD
+                   building blocks.
+  * ``"pallas"`` — TPU Pallas kernels (``flash_attention.py`` /
+                   ``paged_attention.py``), validated in interpret mode.
+  * ``"ref"``    — quadratic oracles from :mod:`repro.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ref as _ref
+
+NEG_INF = -1e30
+
+
+# =============================== flash attention ===============================
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, K, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_start: int = 0,
+    q_chunk: int = 1024,
+    impl: str = "xla",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window, q_start=q_start)
+    if impl == "pallas":
+        from repro.kernels import flash_attention as _fa
+
+        return _fa.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_start=q_start, interpret=interpret
+        )
+    return _causal_tiled_flash(
+        q, k, v, causal=causal, window=window, q_start=q_start, q_chunk=q_chunk
+    )
+
+
+def _causal_tiled_flash(q, k, v, *, causal, window, q_start, q_chunk):
+    """Binary causal tiling around :func:`_flash_xla`.
+
+    A causal S×S attention computed as a rectangle wastes ~2× FLOPs. The
+    upper-half q-chunks genuinely need (almost) all keys, but the lower half
+    only needs the first S/2 — so recurse on that half-size causal square:
+
+        f(S) = f(S/2) + (S/2 rows × S keys)  ->  (2/3)·S²  vs  S²
+
+    i.e. −33% attention FLOPs at full depth, in pure XLA with static shapes
+    and bit-identical numerics (each query still sees exactly the same keys
+    in the same chunk order). The Pallas kernel achieves the full 2× on TPU
+    via per-block skipping; this recovers most of it for the XLA/roofline
+    path (EXPERIMENTS.md §Perf).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if (
+        not causal
+        or window is not None
+        or Sq != Sk
+        or q_start != 0
+        or Sq < 2 * q_chunk
+        or Sq % 2
+    ):
+        return _flash_xla(q, k, v, causal=causal, window=window, q_start=q_start, q_chunk=q_chunk)
+    half = Sq // 2
+    lo = _causal_tiled_flash(
+        q[:, :half], k[:, :half], v[:, :half],
+        causal=True, window=None, q_start=0, q_chunk=q_chunk,
+    )
+    hi = _flash_xla(
+        q[:, half:], k, v, causal=True, window=None, q_start=half, q_chunk=q_chunk
+    )
+    return jnp.concatenate([lo, hi], axis=1)
+
+
+def _flash_xla(q, k, v, *, causal, window, q_start, q_chunk):
+    """lax.scan over q-chunks with fp32 softmax — flash-style memory profile.
+
+    With a sliding window, each q-chunk only sees a static-size key slice of
+    ``window + q_chunk`` tokens (O(S·w) work instead of O(S²)).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _ref.repeat_kv(k, H)
+    v = _ref.repeat_kv(v, H)
+    q_chunk = min(q_chunk, Sq)
+    if Sq % q_chunk:
+        q_chunk = next(c for c in range(q_chunk, 0, -1) if Sq % c == 0)
+    nq = Sq // q_chunk
+    scale = 1.0 / (D ** 0.5)
+
+    windowed = window is not None and Sk > window + q_chunk
+    w_k = min(Sk, (window or 0) + q_chunk) if windowed else Sk
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, D), 1, 0)
+
+    def body(_, inp):
+        qc, i = inp
+        chunk_start = q_start + i * q_chunk
+        if windowed:
+            start = jnp.clip(chunk_start - (w_k - q_chunk), 0, Sk - w_k)
+            ks = lax.dynamic_slice_in_dim(k, start, w_k, axis=1)
+            vs = lax.dynamic_slice_in_dim(v, start, w_k, axis=1)
+            kpos = start + jnp.arange(w_k)
+        else:
+            ks, vs = k, v
+            kpos = jnp.arange(Sk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, ks, preferred_element_type=jnp.float32)
+        s = s * scale
+        qpos = chunk_start + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, ks.shape[1]), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vs.dtype), vs, preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    _, outs = lax.scan(body, None, (qs, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+
+
+# =============================== paged decode attention ===============================
+def paged_attention(
+    q: jnp.ndarray,  # (B, H, D) — one query token per sequence
+    pool_k: jnp.ndarray,  # (P_local, T, K, D) — bf16/f32 or int8 (with scales)
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,  # (B, R) global page ids
+    page_pos: jnp.ndarray,  # (B, R) absolute position of slot 0 of each page
+    lengths: jnp.ndarray,  # (B,) tokens cached (incl. the one just written)
+    *,
+    scale_k: Optional[jnp.ndarray] = None,  # (P_local, T, K) f32 for int8 pools
+    scale_v: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+    page_offset=0,  # first global page id owned by this shard
+    axis_names: Sequence[str] = (),
+    block_pages: int = 8,
+    impl: str = "xla",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode attention over the paged pool (the paper's striped-page READ).
+
+    When ``axis_names`` is non-empty this runs inside ``shard_map`` with the
+    page pool sharded over those axes; partial online-softmax stats are
+    combined with collectives (flash-decoding split-K).
+    """
+    if pool_k.dtype == jnp.int8:
+        pool_k = dequantize_pool(pool_k, scale_k)
+        pool_v = dequantize_pool(pool_v, scale_v)
+    if impl == "ref" and not axis_names:
+        return _ref.paged_attention_ref(
+            q, pool_k, pool_v, tables, page_pos, lengths, window=window
+        )
+    n_shards = 1
+    for name in axis_names:
+        n_shards *= lax.psum(1, name)
+    n_pages_total = pool_k.shape[0] * int(n_shards)
+
+    if impl == "pallas":
+        from repro.kernels import paged_attention as _pa
+
+        o, m, l = _pa.paged_attention_pallas(
+            q, pool_k, pool_v, tables, page_pos, lengths,
+            window=window, page_offset=page_offset, n_pages_total=n_pages_total,
+            interpret=interpret,
+        )
+    else:
+        o, m, l = _paged_local_xla(
+            q, pool_k, pool_v, tables, page_pos, lengths,
+            window=window, page_offset=page_offset, n_pages_total=n_pages_total,
+        )
+    if axis_names:
+        axis_names = tuple(axis_names)
+        m_g = lax.pmax(m, axis_names)
+        scale = jnp.exp(m - m_g)
+        o = lax.psum(o * scale[..., None], axis_names)
+        l = lax.psum(l * scale, axis_names)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+INT8_MAX = 127.0
+
+
+def quantize_token(x):
+    """Per-(token, kv-head) symmetric int8 quantization: x (..., K, D) ->
+    (q int8 (..., K, D), scale f32 (..., K))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_pool(pool, scale):
+    """(P,T,K,D) int8 × (P,T,K) f32 -> bf16 (in-kernel on TPU; explicit here)."""
+    return (pool.astype(jnp.float32) * scale[..., None]).astype(jnp.bfloat16)
+
+
+def page_ownership(tables, page_pos, n_pages_total):
+    """Invert the page tables: for every pool page, which sequence owns it and
+    the absolute position of its slot 0. Unowned (padding) pages get owner -1.
+
+    This is the TPU-native schedule: each shard walks ITS pages (the paper's
+    "each provider serves its own pages"), not every sequence's full table.
+    """
+    B, R = tables.shape
+    owner = jnp.full((n_pages_total,), -1, jnp.int32)
+    base = jnp.zeros((n_pages_total,), jnp.int32)
+    b_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, R))
+    owner = owner.at[tables.reshape(-1)].set(b_idx.reshape(-1), mode="drop")
+    base = base.at[tables.reshape(-1)].set(page_pos.reshape(-1), mode="drop")
+    return owner, base
+
+
+def _paged_local_xla(q, pool_k, pool_v, tables, page_pos, lengths, *, window, page_offset,
+                     block_pages=None, n_pages_total=None):
+    """Owner-indexed online softmax over THIS shard's pages only.
+
+    Work per shard = its local pages (flops ∝ P_local·T·H·D), not the global
+    attention with masking. Returns unnormalized ``(o, m, l)`` per sequence
+    for the split-K combine across shards.
+    """
+    B, H, D = q.shape
+    P_loc, T, K, _ = pool_k.shape
+    n_total = max(n_pages_total or 0, P_loc)
+    scale = 1.0 / (D ** 0.5)
+    G = H // K  # GQA group size
+
+    owner_all, base_all = page_ownership(tables, page_pos, n_total)
+    owner = lax.dynamic_slice_in_dim(owner_all, page_offset, P_loc)  # (P_loc,)
+    base = lax.dynamic_slice_in_dim(base_all, page_offset, P_loc)
+
+    ob = jnp.clip(owner, 0, B - 1)
+    # grouped-head einsums: no (P,T,H,D) kv-head repetition materialized
+    qp = q[ob].astype(pool_k.dtype).reshape(P_loc, K, G, D)
+    s = jnp.einsum("pkgd,ptkd->pkgt", qp, pool_k, preferred_element_type=jnp.float32) * scale
+
+    pos = base[:, None] + jnp.arange(T)[None, :]  # (P_loc, T)
+    length_p = lengths[ob]  # (P_loc,)
+    lo = jnp.maximum(0, length_p - window) if window is not None else jnp.zeros_like(length_p)
+    valid = (owner[:, None] >= 0) & (pos >= lo[:, None]) & (pos < length_p[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)  # (P_loc, K, G, T)
+
+    # segment (per-owner) online softmax via scatter-max / scatter-add;
+    # masked pages contribute exact zeros / NEG_INF, so clip-aliasing to seq 0
+    # is harmless.
+    s_flat = s.reshape(P_loc, H, T)
+    m = jnp.full((B, H), NEG_INF, jnp.float32).at[ob].max(s_flat.max(axis=-1), mode="drop")
+    p = jnp.exp(s_flat - m[ob][..., None]) * valid[:, None, :]
+    l = jnp.zeros((B, H), jnp.float32).at[ob].add(p.sum(axis=-1), mode="drop")
+    pv = jnp.einsum(
+        "pkgt,ptkd->pkgd", p.reshape(P_loc, K, G, T).astype(pool_v.dtype), pool_v,
+        preferred_element_type=jnp.float32,
+    ).reshape(P_loc, H, D)
+    o = jnp.zeros((B, H, D), jnp.float32).at[ob].add(pv, mode="drop")
+    return o, m, l
+
+
+# =============================== paged cache update ===============================
+def paged_update(
+    pool_k: jnp.ndarray,  # (P_local, T, K, D)
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,  # (B, R)
+    page_pos: jnp.ndarray,  # (B, R)
+    lengths: jnp.ndarray,  # (B,) tokens cached so far; new token lands at this position
+    new_k: jnp.ndarray,  # (B, K, D) — pre-rotated
+    new_v: jnp.ndarray,
+    *,
+    scale_k: Optional[jnp.ndarray] = None,  # (P_local, T, K) for int8 pools
+    scale_v: Optional[jnp.ndarray] = None,
+    page_offset=0,
+):
+    """COW-aware append of one token per sequence (the paper's page WRITE).
+
+    Non-local pages are dropped by the scatter (each shard writes only the
+    pages it owns). Returns ``(pool_k, pool_v, page_pos)``. The serving engine
+    guarantees the target page is never shared (it COW-forks shared pages
+    before scheduling the batch), so in-place pool donation is safe.
+    """
+    P_loc, T, K, D = pool_k.shape
+    R = tables.shape[1]
+    B = tables.shape[0]
+    pos = lengths  # 0-indexed position of the incoming token
+    r = (pos // T) % R
+    slot = pos % T
+    b_idx = jnp.arange(B)
+    gid = tables[b_idx, r]
+    local = gid - page_offset
+    # non-local pages must become POSITIVE out-of-bounds (dropped); negative
+    # scatter indices would WRAP and corrupt the tail of the local pool
+    local = jnp.where((local >= 0) & (local < P_loc), local, P_loc)
+
+    if pool_k.dtype == jnp.int8:
+        qk, sk = quantize_token(new_k)
+        qv, sv = quantize_token(new_v)
+        pool_k = pool_k.at[local, slot].set(qk, mode="drop")
+        pool_v = pool_v.at[local, slot].set(qv, mode="drop")
+        scale_k = scale_k.at[local, slot].set(sk, mode="drop")
+        scale_v = scale_v.at[local, slot].set(sv, mode="drop")
+    else:
+        pool_k = pool_k.at[local, slot].set(new_k.astype(pool_k.dtype), mode="drop")
+        pool_v = pool_v.at[local, slot].set(new_v.astype(pool_v.dtype), mode="drop")
+    # recycling a ring page: its slot-0 absolute position becomes pos
+    new_base = jnp.where(slot == 0, pos, page_pos[b_idx, r])
+    page_pos = page_pos.at[b_idx, r].set(new_base)
+    if pool_k.dtype == jnp.int8:
+        return pool_k, pool_v, page_pos, scale_k, scale_v
+    return pool_k, pool_v, page_pos
+
+
+def prefill_into_pages(
+    k: jnp.ndarray,  # (B, S, K, D) pre-rotated
+    v: jnp.ndarray,
+    page_tokens: int,
+    extra_pages: int = 1,
+    pad_pages_to: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Lay out freshly pref't K/V as pages: request b's page p is global page
+    ``b*R + p`` (provider-manager contiguous placement). ``extra_pages`` empty
+    pages per sequence give decode headroom before the ring recycles;
+    ``pad_pages_to`` pads the POOL page count (unreferenced tail pages) so it
+    stays evenly shardable across the page axes. Returns
+    (pool_k, pool_v, tables, page_pos)."""
+    B, S, K, D = k.shape
+    T = page_tokens
+    assert S % T == 0
+    Rf = S // T
+    R = Rf + extra_pages
+    pk = k.reshape(B, Rf, T, K, D)
+    pv = v.reshape(B, Rf, T, K, D)
+    if extra_pages:
+        pad = jnp.zeros((B, extra_pages, T, K, D), k.dtype)
+        pk = jnp.concatenate([pk, pad], axis=1)
+        pv = jnp.concatenate([pv, pad], axis=1)
+    pool_k = pk.reshape(B * R, T, K, D)
+    pool_v = pv.reshape(B * R, T, K, D)
+    n_pool = -(-(B * R) // pad_pages_to) * pad_pages_to
+    if n_pool > B * R:
+        tail = jnp.zeros((n_pool - B * R, T, K, D), k.dtype)
+        pool_k = jnp.concatenate([pool_k, tail], axis=0)
+        pool_v = jnp.concatenate([pool_v, tail], axis=0)
+    tables = jnp.arange(B * R, dtype=jnp.int32).reshape(B, R)
+    page_pos = (jnp.arange(R, dtype=jnp.int32) * T)[None, :].repeat(B, axis=0)
+    return pool_k, pool_v, tables, page_pos

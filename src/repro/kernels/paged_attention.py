@@ -1,0 +1,129 @@
+"""Paged decode attention Pallas TPU kernel — the paper's striped-page READ
+fused with attention.
+
+Grid ``(B, K)`` (sequence × kv-head). For each sequence the kernel walks the
+sequence's page table with a ``fori_loop``; every iteration DMAs one
+``page_tokens × head_dim`` K/V page from the pool (kept in ANY/HBM memory
+space — the pool is far too large for VMEM; this indirection IS the paper's
+fine-grain remote read) into VMEM and accumulates online softmax for the
+``G = H/K`` query heads of that kv-head.
+
+The kernel emits *unnormalized* ``(o, m, l)`` so the shard_map wrapper can
+split-K combine partial results across pool shards (flash-decoding), exactly
+like the XLA path in ``ops._paged_local_xla``.
+
+Ring-buffer (sliding-window) pages are handled through ``page_pos``: a page's
+slot-0 absolute position decides token validity, so SWA rolling pools reuse
+the same kernel.
+
+Validated against ``ref.paged_attention_ref`` in interpret mode
+(tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, tables_ref, page_pos_ref, lengths_ref, pool_k_ref, pool_v_ref,
+            o_ref, m_ref, l_ref, *, T: int, R: int, P_loc: int, G: int,
+            window: Optional[int], scale: float):
+    b = pl.program_id(0)
+    kvh = pl.program_id(1)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    length = lengths_ref[0, 0]
+    lo = jnp.maximum(0, length - window) if window is not None else 0
+
+    def body(r, carry):
+        acc, m, l = carry  # (G, D) f32, (G, 1), (G, 1)
+        pid = tables_ref[0, r]  # local page id (wrapper pre-subtracts offset)
+        base = page_pos_ref[0, r]
+        in_range = jnp.logical_and(pid >= 0, pid < P_loc)
+        safe = jnp.clip(pid, 0, P_loc - 1)
+        kp = pool_k_ref[safe, :, kvh, :].astype(jnp.float32)  # (T, D)
+        vp = pool_v_ref[safe, :, kvh, :].astype(jnp.float32)
+        s = lax.dot_general(q, kp, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, T)
+        pos = base + lax.broadcasted_iota(jnp.int32, (1, T), 1)  # (1, T)
+        valid = jnp.logical_and(pos >= lo, pos < length)
+        valid = jnp.logical_and(valid, in_range)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new) * valid
+        l_new = l * alpha + p.sum(axis=1, keepdims=True)
+        pv = lax.dot_general(p, vp, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+        return acc * alpha + pv, m_new, l_new
+
+    G_, D = q.shape
+    acc0 = jnp.zeros((G_, D), jnp.float32)
+    m0 = jnp.full((G_, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G_, 1), jnp.float32)
+    acc, m, l = lax.fori_loop(0, R, body, (acc0, m0, l0))
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+    m_ref[0, 0] = m[:, 0].astype(m_ref.dtype)
+    l_ref[0, 0] = l[:, 0].astype(l_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jnp.ndarray,  # (B, H, D)
+    pool_k: jnp.ndarray,  # (P_local, T, K, D)
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,  # (B, R) GLOBAL page ids
+    page_pos: jnp.ndarray,  # (B, R)
+    lengths: jnp.ndarray,  # (B,)
+    *,
+    window: Optional[int] = None,
+    page_offset=0,
+    n_pages_total: int = 0,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns unnormalized (o (B,H,D) f32, m (B,H) f32, l (B,H) f32)."""
+    B, H, D = q.shape
+    P_loc, T, K, _ = pool_k.shape
+    R = tables.shape[1]
+    G = H // K
+    scale = 1.0 / (D ** 0.5)
+
+    tables_local = tables.astype(jnp.int32) - page_offset  # negatives -> skipped
+    lengths2d = lengths.astype(jnp.int32).reshape(B, 1)
+    qg = q.reshape(B, K, G, D)
+
+    kernel = functools.partial(
+        _kernel, T=T, R=R, P_loc=P_loc, G=G, window=window, scale=scale,
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k: (b, k, 0, 0)),  # q
+            pl.BlockSpec((1, R), lambda b, k: (b, 0)),  # tables (local ids)
+            pl.BlockSpec((1, R), lambda b, k: (b, 0)),  # page_pos
+            pl.BlockSpec((1, 1), lambda b, k: (b, 0)),  # lengths
+            pl.BlockSpec(memory_space=pltpu.ANY),  # pool_k stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # pool_v
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, k: (b, k, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, k: (b, k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, tables_local, page_pos.astype(jnp.int32), lengths2d, pool_k, pool_v)
+    return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every kernel. Small-shape, obviously-correct code —
+the ground truth that Pallas kernels and XLA fast paths are tested against."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(..., K, D) -> (..., H, D) by repeating each kv head H/K times."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, K, D)
+    v: jnp.ndarray,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_start: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Quadratic-materialization attention. GQA via kv-head repetition.
+
+    ``q_start`` is the absolute position of q[0] (for chunked/decode use).
+    ``window`` masks keys more than ``window-1`` positions behind the query
+    (sliding-window attention); ``causal`` masks future keys.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    k = repeat_kv(k, H)
+    v = repeat_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = q_start + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,  # (B, H, D) one query token per sequence
+    pool_k: jnp.ndarray,  # (P, T, K, D) page pool (pre-rotated keys)
+    pool_v: jnp.ndarray,  # (P, T, K, D)
+    tables: jnp.ndarray,  # (B, R) int32 page ids into the pool
+    page_pos: jnp.ndarray,  # (B, R) absolute position of each page's slot 0
+    lengths: jnp.ndarray,  # (B,) tokens cached per sequence (incl. current)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Decode attention over the paged, possibly ring-buffered KV pool.
+
+    A cached token in page-slot ``(r, t)`` of sequence ``b`` has absolute
+    position ``page_pos[b, r] + t``; it participates iff
+    ``lo <= pos < lengths[b]`` where ``lo = max(0, lengths[b]-window)``.
+    """
+    B, H, D = q.shape
+    P, T, K, _ = pool_k.shape
+    R = tables.shape[1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    k = pool_k[tables]  # (B, R, T, K, D)
+    v = pool_v[tables]
+    pos = page_pos[:, :, None] + jnp.arange(T)[None, None, :]  # (B, R, T)
+    lo = jnp.maximum(0, lengths - window) if window is not None else jnp.zeros_like(lengths)
+    valid = (pos >= lo[:, None, None]) & (pos < lengths[:, None, None])
+
+    k = repeat_kv(k.reshape(B, R * T, K, D), H)
+    v = repeat_kv(v.reshape(B, R * T, K, D), H)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = jnp.where(valid.reshape(B, 1, R * T), s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def online_softmax_combine(
+    o_parts: jnp.ndarray,  # (N, ..., D) unnormalized sum exp(s-m)·v per part
+    m_parts: jnp.ndarray,  # (N, ...)   running max per part
+    l_parts: jnp.ndarray,  # (N, ...)   sum exp(s-m) per part
+) -> jnp.ndarray:
+    """Reference combine of flash/paged partial results (split-K check)."""
+    m = jnp.max(m_parts, axis=0)
+    alpha = jnp.exp(m_parts - m[None])
+    l = jnp.sum(l_parts * alpha, axis=0)
+    o = jnp.sum(o_parts * alpha[..., None], axis=0)
+    return o / jnp.maximum(l[..., None], 1e-30)

@@ -1,0 +1,243 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+ShapeDtypeStruct inputs (no allocation) and dump memory / cost / collective
+analysis for the roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape decode_32k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_results.jsonl
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import make_axis_info, make_production_mesh
+from repro.models.config import ModelConfig, SHAPES, get_shape
+from repro.models.lm import build_model
+from repro.parallel import sharding as shd
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+# ----------------------------- hardware constants (TPU v5e) -------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def should_skip(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.supports_500k:
+        return "pure full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md §4)"
+    return None
+
+
+# (collective byte accounting lives in repro.launch.hlo_cost — trip-count aware)
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+# ----------------------------- abstract state construction ---------------------------
+def abstract_init(model, key):
+    """(params ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+    captured = {}
+
+    def f(k):
+        p, a = model.init(k)
+        captured["axes"] = a
+        return p
+
+    params_shape = jax.eval_shape(f, key)
+    return params_shape, captured["axes"]
+
+
+def opt_shardings_like(p_shard):
+    return {
+        "m": jax.tree.map(lambda s: s, p_shard),
+        "v": jax.tree.map(lambda s: s, p_shard),
+        "step": None,
+    }
+
+
+def build_lowerable(arch: str, shape_name: str, mesh):
+    """Returns (lowered, meta) for one cell."""
+    axis_info = make_axis_info(mesh)
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_shape, axes = abstract_init(model, key)
+    p_shard = shd.param_shardings(params_shape, axes, cfg, axis_info)
+    n_dev = mesh.size
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        o_shard = opt_shardings_like(p_shard)
+        batch_spec = S.train_batch_spec(cfg, shape.global_batch, shape.seq_len)
+        b_shard = shd.batch_shardings(batch_spec, cfg, axis_info)
+        step = make_train_step(model, cfg, axis_info, AdamWConfig(), param_shardings=p_shard)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, opt_shape, batch_spec)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * cfg.param_count(active_only=True) * tokens
+
+    elif shape.kind == "prefill":
+        batch_spec = S.prefill_batch_spec(cfg, shape.global_batch, shape.seq_len)
+        b_shard = shd.batch_shardings(batch_spec, cfg, axis_info)
+        fn = lambda p, b: model.prefill(p, b, axis_info)
+        # output shardings: logits over batch; cache pools striped
+        out_struct = jax.eval_shape(fn, params_shape, batch_spec)
+        logits_shard = shd.batch_shardings(out_struct[0], cfg, axis_info)
+        cache_shard = shd.cache_shardings(out_struct[1], cfg, axis_info)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard), out_shardings=(logits_shard, cache_shard))
+        with mesh:
+            lowered = jitted.lower(params_shape, batch_spec)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * cfg.param_count(active_only=True) * tokens
+
+    else:  # decode
+        pad = axis_info.n_page_shards
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len, pad_pages_to=pad)
+        )
+        cache_shard = shd.cache_shardings(cache_struct, cfg, axis_info)
+        tok_spec = S.decode_tokens_spec(cfg, shape.global_batch)
+        tok_shard = shd.batch_shardings(tok_spec, cfg, axis_info)
+        fn = lambda p, c, t: model.decode_step(p, c, t, axis_info)
+        out_struct = jax.eval_shape(fn, params_shape, cache_struct, tok_spec)
+        logits_shard = shd.batch_shardings(out_struct[0], cfg, axis_info)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_shard, cache_shard, tok_shard),
+            out_shardings=(logits_shard, cache_shard),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, cache_struct, tok_spec)
+        model_flops = 2 * cfg.param_count(active_only=True) * shape.global_batch
+
+    return lowered, {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "n_devices": n_dev,
+        "model_flops": model_flops,
+        "params": cfg.param_count(),
+        "active_params": cfg.param_count(active_only=True),
+    }
+
+
+def analyze(lowered, compiled, meta) -> Dict[str, Any]:
+    from repro.launch import hlo_cost
+
+    n_dev = meta["n_devices"]
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis() or {}
+    cost = hlo_cost.analyze_hlo(compiled.as_text())
+    hlo_flops = cost.flops  # per-device (post-SPMD module), trip-count-aware
+    hlo_bytes = cost.bytes
+
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    coll_s = cost.collective_total / ICI_BW
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=lambda k: terms[k] or 0.0)
+    useful = meta["model_flops"] / (hlo_flops * n_dev) if hlo_flops > 0 else None
+
+    return dict(
+        meta,
+        ok=True,
+        bytes_per_device=dict(
+            arguments=int(mem.argument_size_in_bytes),
+            outputs=int(mem.output_size_in_bytes),
+            temps=int(mem.temp_size_in_bytes),
+            total=int(
+                mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            ),
+        ),
+        hlo_flops_per_device=hlo_flops,
+        hlo_bytes_per_device=hlo_bytes,
+        xla_flops_per_device=float(xla_cost.get("flops", -1.0)),
+        collectives={k: v for k, v in cost.collective_bytes.items()},
+        collective_count=cost.collective_count,
+        roofline=dict(
+            **terms,
+            dominant=dominant,
+            model_flops=meta["model_flops"],
+            useful_flops_ratio=useful,
+        ),
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    skip = should_skip(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if skip:
+        return dict(base, ok=True, skipped=skip)
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered, meta = build_lowerable(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec = analyze(lowered, compiled, meta)
+        rec.update(base, lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+        return rec
+    except Exception as e:
+        return dict(base, ok=False, error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES] + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp)
+                line = json.dumps(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+                slim = {k: v for k, v in rec.items() if k not in ("traceback", "collectives")}
+                print(json.dumps(slim), flush=True)
+                if not rec.get("ok"):
+                    print(rec.get("traceback", ""), file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Input specs per (arch × shape): concrete arrays for smoke tests, or
+``jax.ShapeDtypeStruct`` stand-ins for the dry-run (no allocation)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def train_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    if cfg.input_kind == "tokens":
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    if cfg.input_kind == "embeds":
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    if cfg.input_kind == "encdec":
+        return {
+            "enc_embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    raise ValueError(cfg.input_kind)
+
+
+def prefill_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    spec = train_batch_spec(cfg, batch, seq)
+    spec.pop("labels", None)
+    return spec
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, mode: str, seed: int = 0):
+    """Materialize a random batch matching the spec (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    spec = train_batch_spec(cfg, batch, seq) if mode == "train" else prefill_batch_spec(cfg, batch, seq)
+    out: Dict[str, Any] = {}
+    for name, s in spec.items():
+        if s.dtype == jnp.int32:
+            out[name] = jnp.asarray(rng.integers(0, cfg.vocab_size, s.shape), jnp.int32)
+        else:
+            out[name] = jnp.asarray(rng.normal(0, 1, s.shape), s.dtype)
+    return out
+
+
+def decode_tokens_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch,), jnp.int32)

@@ -1,0 +1,171 @@
+"""Transformer / Mamba blocks + layer-stack scanning with remat."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.models.modules import prefix_axes, stack_layer_params
+from repro.parallel.axisinfo import AxisInfo, constrain_batch
+
+
+def checkpoint_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ------------------------------ dense / moe block ------------------------------
+def block_init(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    a_params, a_axes = attn.attention_init(ka, cfg)
+    ln1, ln1_ax = rmsnorm_init(cfg)
+    ln2, ln2_ax = rmsnorm_init(cfg)
+    if cfg.is_moe:
+        m_params, m_axes = moe_mod.moe_init(km, cfg)
+    else:
+        m_params, m_axes = mlp_init(km, cfg)
+    params = {"ln1": ln1, "attn": a_params, "ln2": ln2, "ffn": m_params}
+    axes = {"ln1": ln1_ax, "attn": a_axes, "ln2": ln2_ax, "ffn": m_axes}
+    return params, axes
+
+
+def block_apply(
+    params, x: jnp.ndarray, cfg: ModelConfig, axis_info: Optional[AxisInfo],
+    *, causal: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence block (train / prefill / encoder)."""
+    h = rmsnorm(x, params["ln1"])
+    if return_kv:
+        a, kv = attn.attention_train(params["attn"], h, cfg, causal=causal, return_kv=True, axis_info=axis_info)
+    else:
+        a = attn.attention_train(params["attn"], h, cfg, causal=causal)
+        kv = None
+    x = x + a
+    h = rmsnorm(x, params["ln2"])
+    if cfg.is_moe:
+        f, aux = moe_mod.moe_ffn(params["ffn"], h, cfg, axis_info)
+    else:
+        f, aux = mlp(params["ffn"], h, cfg), jnp.zeros((), jnp.float32)
+    x = x + f
+    return (x, aux, kv) if return_kv else (x, aux)
+
+
+def block_decode(
+    params, x: jnp.ndarray, cache: attn.CacheLayer, lengths: jnp.ndarray,
+    cfg: ModelConfig, axis_info: Optional[AxisInfo],
+):
+    h = rmsnorm(x, params["ln1"])
+    a, cache = attn.attention_decode(params["attn"], h, cache, lengths, cfg, axis_info)
+    x = x + a
+    h = rmsnorm(x, params["ln2"])
+    if cfg.is_moe:
+        f, _ = moe_mod.moe_ffn(params["ffn"], h, cfg, axis_info)
+    else:
+        f = mlp(params["ffn"], h, cfg)
+    return x + f, cache
+
+
+# ------------------------------ ssm block -----------------------------------------
+def ssm_block_init(key, cfg: ModelConfig):
+    s_params, s_axes = ssm_mod.ssm_init(key, cfg)
+    ln, ln_ax = rmsnorm_init(cfg)
+    return {"ln": ln, "ssm": s_params}, {"ln": ln_ax, "ssm": s_axes}
+
+
+def ssm_block_apply(params, x, cfg: ModelConfig):
+    return x + ssm_mod.ssm_forward(params["ssm"], rmsnorm(x, params["ln"]), cfg)
+
+
+def ssm_block_decode(params, x, state, cfg: ModelConfig):
+    y, state = ssm_mod.ssm_decode(params["ssm"], rmsnorm(x, params["ln"]), state, cfg)
+    return x + y, state
+
+
+# ------------------------------ stacked scans ------------------------------------
+def stack_init(key, n_layers: int, init_one: Callable):
+    """Stack per-layer params along axis 0; layer axes get a 'layers' prefix."""
+    params = stack_layer_params(key, n_layers, lambda k: init_one(k)[0])
+    _, axes = init_one(key)
+    return params, prefix_axes(axes)
+
+
+def scan_apply(params_stacked, x, body_fn, cfg: ModelConfig, axis_info=None):
+    """lax.scan a block over stacked layer params; accumulates aux losses.
+
+    ``cfg.remat_group = g`` scans groups of g layers under ONE checkpoint:
+    residual carries shrink g× (saved every g layers) at no extra recompute
+    FLOPs — the trade is a g× larger transient working set during each
+    group's backward.
+    """
+    g = max(cfg.remat_group, 1)
+    L = jax.tree.leaves(params_stacked)[0].shape[0]
+    if g > 1 and L % g == 0:
+        grouped = jax.tree.map(lambda p: p.reshape(L // g, g, *p.shape[1:]), params_stacked)
+
+        def group_fn(group_params, x):
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(g):
+                lp = jax.tree.map(lambda p: p[i], group_params)
+                x, a = body_fn(lp, x)
+                aux = aux + a
+            return x, aux
+
+        wrapped = checkpoint_wrap(group_fn, cfg)
+
+        def body(carry, group_params):
+            x, aux = carry
+            x, a = wrapped(group_params, x)
+            return (constrain_batch(x, axis_info), aux + a), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), grouped)
+        return x, aux
+
+    wrapped = checkpoint_wrap(body_fn, cfg)
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a = wrapped(layer_params, x)
+        return (constrain_batch(x, axis_info), aux + a), None
+
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), params_stacked)
+    return x, aux
+
+
+def scan_apply_collect_kv(params_stacked, x, body_fn, cfg: ModelConfig, axis_info=None):
+    """Like scan_apply but also stacks per-layer (k, v) outputs (prefill)."""
+    wrapped = checkpoint_wrap(body_fn, cfg)
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a, kv = wrapped(layer_params, x)
+        return (constrain_batch(x, axis_info), aux + a), kv
+
+    (x, aux), kvs = lax.scan(body, (x, jnp.zeros((), jnp.float32)), params_stacked)
+    return x, aux, kvs
+
+
+def scan_decode(params_stacked, x, cache, body_fn):
+    """Scan a decode block over stacked layers and their cache slices."""
+
+    def body(x, inp):
+        layer_params, layer_cache = inp
+        x, new_cache = body_fn(layer_params, x, layer_cache)
+        return x, new_cache
+
+    x, new_cache = lax.scan(body, x, (params_stacked, cache))
+    return x, new_cache

@@ -1,0 +1,137 @@
+"""Shared layers: RMSNorm, RoPE, gated MLP, embeddings."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.modules import dense_init, embed_init
+
+
+# -- RMSNorm ---------------------------------------------------------------------
+def rmsnorm_init(cfg: ModelConfig, dim: int = 0):
+    dim = dim or cfg.d_model
+    return jnp.ones((dim,), cfg.pdtype()), ("embed",)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with a dtype-disciplined custom VJP.
+
+    Statistics accumulate in f32, but every FULL tensor (forward output,
+    saved residual, backward products) stays in ``x.dtype``. Without this,
+    autodiff's f32 cotangent of the variance forces an f32 copy of the
+    residual stream — XLA then hoists that convert out of the backward layer
+    loop, keeping an extra f32 copy of the whole remat stack live
+    (2×L×S×d bytes; measured in EXPERIMENTS.md §Perf iteration 2).
+    """
+    return _rmsnorm_fwd(x, scale, eps)[0]
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps)  # (..., 1) f32 — per-token statistic only
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, scale, inv = res
+    n = x.shape[-1]
+    gs = g * scale.astype(g.dtype)  # stays in activation dtype
+    s = jnp.sum(gs * x, axis=-1, keepdims=True, dtype=jnp.float32)
+    coef = (s * inv**3 / n).astype(x.dtype)
+    dx = gs * inv.astype(x.dtype) - x * coef
+    dscale = jnp.sum(
+        (g * x).astype(jnp.float32) * inv, axis=tuple(range(x.ndim - 1))
+    )
+    return dx, dscale.astype(scale.dtype)
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+# -- RoPE ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- gated MLP (SiLU) -------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.pdtype()
+    params = {
+        "wi": dense_init(k1, d, (f,), dt),
+        "wg": dense_init(k2, d, (f,), dt),
+        "wo": dense_init(k3, f, (d,), dt),
+    }
+    axes = {"wi": ("embed", "ffn"), "wg": ("embed", "ffn"), "wo": ("ffn", "embed")}
+    return params, axes
+
+
+def mlp(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    ct = cfg.cdtype()
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(ct))
+    g = jnp.einsum("...d,df->...f", x, params["wg"].astype(ct))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(ct))
+
+
+# -- embeddings --------------------------------------------------------------------------
+def embedding_init(key, cfg: ModelConfig):
+    params = {"table": embed_init(key, cfg.padded_vocab, cfg.d_model, cfg.pdtype())}
+    axes = {"table": ("vocab", "embed_table")}
+    return params, axes
+
+
+def embed(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return params["table"].astype(cfg.cdtype())[tokens]
+
+
+def unembed(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Tied unembedding → logits over the padded vocab (float32)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), params["table"].astype(jnp.float32)
+    )
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over non-padding labels (label == -1 is padding). Padded vocab
+    tail is masked out. Returns (loss, accuracy).
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis`` so the vocab axis can stay model-sharded under GSPMD
+    (a gather along a sharded axis forces an all-gather of the logits).
+    """
+    mask = labels >= 0
+    labels = jnp.where(mask, labels, 0)
+    vmask = jnp.arange(logits.shape[-1]) < vocab_size
+    logits = jnp.where(vmask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return nll.sum() / denom, acc

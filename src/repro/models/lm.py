@@ -1,0 +1,530 @@
+"""Top-level models, one builder per family.
+
+Every family exposes the same functional API:
+
+* ``init(key, cfg) -> (params, axes)``
+* ``train_loss(params, batch, cfg, axis_info) -> (loss, metrics)``
+* ``prefill(params, batch, cfg, axis_info) -> (logits, cache)``  — cache is a
+  pytree holding paged KV pools / SSM states + ``lengths``
+* ``decode_step(params, cache, tokens, cfg, axis_info) -> (logits, cache)``
+
+Batches are dicts: ``tokens``/``labels`` for LMs, ``embeds`` for backbone-only
+VLM/audio stubs, ``enc_embeds``+``tokens`` for enc-dec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import blocks as B
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import cross_entropy, embed, embedding_init, rmsnorm, rmsnorm_init, unembed
+from repro.models.modules import validate_trees
+from repro.parallel.axisinfo import AxisInfo, constrain_batch
+
+MOE_AUX_WEIGHT = 0.01
+
+
+
+
+def _pool_cache(cfg, pool_k, pool_v, tables, page_pos):
+    """Assemble a paged-cache dict, quantizing pools to int8 (per-token
+    scales) when the config asks for it."""
+    dt = jnp.dtype(cfg.kv_cache_dtype)
+    if dt == jnp.int8:
+        qk, sk = ops.quantize_token(pool_k)
+        qv, sv = ops.quantize_token(pool_v)
+        return {"pool_k": qk, "pool_v": qv, "scale_k": sk, "scale_v": sv,
+                "tables": tables, "page_pos": page_pos}
+    return {"pool_k": pool_k.astype(dt), "pool_v": pool_v.astype(dt),
+            "tables": tables, "page_pos": page_pos}
+
+
+def _pages_extra(S: int, B: int, cfg, axis_info) -> int:
+    """Decode-headroom pages per sequence appended at prefill.
+
+    Single-device (engine/tests): one page so decode can append immediately.
+    Distributed: ZERO — any padding makes the pool a concat of a reshape,
+    which is not block-compatible with the page striping and forces GSPMD to
+    replicate the whole K/V stack; the serving engine owns decode headroom
+    through its page allocator instead (the provider manager's job).
+    """
+    return 0 if axis_info is not None else 1
+
+
+def _constrain_logits(logits, axis_info):
+    """(B, S, V): batch over DP axes, vocab over the model axis."""
+    if axis_info is None:
+        return logits
+    import jax as _jax
+    from jax.sharding import NamedSharding as _NS, PartitionSpec as _P
+
+    n = 1
+    for a in axis_info.batch_axes:
+        n *= axis_info.mesh.shape[a]
+    tp = axis_info.mesh.shape[axis_info.model_axis]
+    spec = [None] * logits.ndim
+    if logits.shape[0] % n == 0:
+        spec[0] = axis_info.batch_axes
+    if logits.shape[-1] % tp == 0:
+        spec[-1] = axis_info.model_axis
+    return _jax.lax.with_sharding_constraint(logits, _NS(axis_info.mesh, _P(*spec)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    init: Any
+    train_loss: Any
+    prefill: Any
+    decode_step: Any
+    init_cache: Any  # (cfg, batch, seq_len, pad_pages_to) -> cache pytree
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _decoder_lm(cfg)
+    if fam == "ssm":
+        return _ssm_lm(cfg)
+    if fam == "hybrid":
+        return _hybrid_lm(cfg)
+    if fam in ("encdec", "audio"):
+        return _encdec_lm(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+def _inputs_to_h(params, batch, cfg, axis_info=None):
+    if "embeds" in batch:
+        h = batch["embeds"].astype(cfg.cdtype())
+    else:
+        h = embed(params["embed"], batch["tokens"], cfg)
+    return constrain_batch(h, axis_info)
+
+
+# ================================ decoder-only ================================
+def _decoder_lm(cfg: ModelConfig) -> Model:
+    def init(key):
+        ke, kb = jax.random.split(key)
+        e_params, e_axes = embedding_init(ke, cfg)
+        b_params, b_axes = B.stack_init(kb, cfg.n_layers, lambda k: B.block_init(k, cfg))
+        lnf, lnf_ax = rmsnorm_init(cfg)
+        params = {"embed": e_params, "blocks": b_params, "ln_f": lnf}
+        axes = {"embed": e_axes, "blocks": b_axes, "ln_f": lnf_ax}
+        validate_trees(params, axes)
+        return params, axes
+
+    def backbone(params, h, axis_info, collect_kv=False):
+        if collect_kv:
+            body = lambda p, x: B.block_apply(p, x, cfg, axis_info, return_kv=True)
+            h, aux, kvs = B.scan_apply_collect_kv(params["blocks"], h, body, cfg, axis_info)
+            return rmsnorm(h, params["ln_f"]), aux, kvs
+        body = lambda p, x: B.block_apply(p, x, cfg, axis_info)
+        h, aux = B.scan_apply(params["blocks"], h, body, cfg, axis_info)
+        return rmsnorm(h, params["ln_f"]), aux
+
+    def train_loss(params, batch, axis_info):
+        h = _inputs_to_h(params, batch, cfg, axis_info)
+        h, aux = backbone(params, h, axis_info)
+        logits = _constrain_logits(unembed(params["embed"], h, cfg), axis_info)
+        ce, acc = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        loss = ce + MOE_AUX_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux, "acc": acc}
+
+    def init_cache(batch, seq_len, pad_pages_to=1):
+        cache, lengths = attn.init_decode_cache(
+            cfg, batch, seq_len, cfg.n_layers, pad_pages_to=pad_pages_to
+        )
+        return {"kv": cache, "lengths": lengths}
+
+    def prefill(params, batch, axis_info):
+        h = _inputs_to_h(params, batch, cfg, axis_info)
+        Bb, S = h.shape[:2]
+        h, _, kvs = backbone(params, h, axis_info, collect_kv=True)
+        logits = unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+        k, v = kvs  # (L, B, S, K, hd)
+        extra = _pages_extra(S, Bb, cfg, axis_info)
+        pool_k, pool_v, tables, page_pos = jax.vmap(
+            lambda kk, vv: ops.prefill_into_pages(kk, vv, cfg.kv_page_tokens, extra_pages=extra)
+        )(k, v)
+        cache = {
+            "kv": _pool_cache(cfg, pool_k, pool_v, tables, page_pos),
+            "lengths": jnp.full((Bb,), S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(params, cache, tokens, axis_info):
+        h = embed(params["embed"], tokens[:, None], cfg)
+        lengths = cache["lengths"]
+
+        def body(p, x, c):
+            return B.block_decode(p, x, c, lengths, cfg, axis_info)
+
+        h, kv = B.scan_decode(params["blocks"], h, cache["kv"], body)
+        h = rmsnorm(h, params["ln_f"])
+        logits = unembed(params["embed"], h, cfg)[:, 0]
+        return logits, {"kv": kv, "lengths": lengths + 1}
+
+    return Model(init, train_loss, prefill, decode_step, init_cache)
+
+
+# ================================ pure SSM (mamba2) ================================
+def _ssm_lm(cfg: ModelConfig) -> Model:
+    def init(key):
+        ke, kb = jax.random.split(key)
+        e_params, e_axes = embedding_init(ke, cfg)
+        b_params, b_axes = B.stack_init(kb, cfg.n_layers, lambda k: B.ssm_block_init(k, cfg))
+        lnf, lnf_ax = rmsnorm_init(cfg)
+        params = {"embed": e_params, "blocks": b_params, "ln_f": lnf}
+        axes = {"embed": e_axes, "blocks": b_axes, "ln_f": lnf_ax}
+        validate_trees(params, axes)
+        return params, axes
+
+    def train_loss(params, batch, axis_info):
+        h = _inputs_to_h(params, batch, cfg, axis_info)
+        body = lambda p, x: (B.ssm_block_apply(p, x, cfg), jnp.zeros((), jnp.float32))
+        h, _ = B.scan_apply(params["blocks"], h, body, cfg, axis_info)
+        h = rmsnorm(h, params["ln_f"])
+        logits = _constrain_logits(unembed(params["embed"], h, cfg), axis_info)
+        ce, acc = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        return ce, {"ce": ce, "acc": acc}
+
+    def init_cache(batch, seq_len, pad_pages_to=1):
+        return {
+            "ssm": ssm_mod.init_ssm_state(cfg, batch, cfg.n_layers),
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(params, batch, axis_info):
+        h = _inputs_to_h(params, batch, cfg, axis_info)
+        Bb, S = h.shape[:2]
+
+        # run blocks sequentially collecting final states (prefill = train fwd
+        # + state handoff); python loop is fine: params are scanned instead.
+        def body(carry, layer_params):
+            x = carry
+            hh = rmsnorm(x, layer_params["ln"])
+            ct = cfg.cdtype()
+            # replicate ssm_forward but returning final state
+            y, state = _ssm_forward_with_state(layer_params["ssm"], hh, cfg)
+            return x + y, state
+
+        h, states = lax.scan(body, h, params["blocks"])
+        h = rmsnorm(h, params["ln_f"])
+        logits = unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+        cache = {"ssm": states, "lengths": jnp.full((Bb,), S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(params, cache, tokens, axis_info):
+        h = embed(params["embed"], tokens[:, None], cfg)
+
+        def body(x, inp):
+            layer_params, state = inp
+            x, new_state = B.ssm_block_decode(layer_params, x, state, cfg)
+            return x, new_state
+
+        h, states = lax.scan(body, h, (params["blocks"], cache["ssm"]))
+        h = rmsnorm(h, params["ln_f"])
+        logits = unembed(params["embed"], h, cfg)[:, 0]
+        return logits, {"ssm": states, "lengths": cache["lengths"] + 1}
+
+    return Model(init, train_loss, prefill, decode_step, init_cache)
+
+
+def _ssm_forward_with_state(params, x, cfg: ModelConfig):
+    """ssm_forward variant that also returns the final recurrent state +
+    conv tail (for prefill→decode handoff)."""
+    ct = cfg.cdtype()
+    di, n, g, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(ct))
+    z, xBC_pre, dt = ssm_mod._split_proj(zxbcdt, cfg)
+    conv_tail = xBC_pre[:, -(cfg.ssm_conv - 1):, :]
+    xBC = jax.nn.silu(
+        ssm_mod._causal_conv(xBC_pre, params["conv_w"].astype(ct), params["conv_b"].astype(ct))
+    )
+    xs = xBC[..., :di].reshape(*xBC.shape[:2], h, p)
+    Bm = xBC[..., di : di + g * n].reshape(*xBC.shape[:2], g, n)
+    Cm = xBC[..., di + g * n :].reshape(*xBC.shape[:2], g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final = ssm_mod.ssd_chunked(xs, dtv, A, Bm, Cm, cfg.ssm_chunk, return_state=True)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = ssm_mod._gated_norm(y.reshape(*x.shape[:2], di).astype(ct), z, params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(ct))
+    state = {"ssm": final.astype(jnp.float32), "conv": conv_tail.astype(jnp.float32)}
+    return out, state
+
+
+# ================================ hybrid (zamba2) ================================
+def _hybrid_lm(cfg: ModelConfig) -> Model:
+    n_groups = cfg.n_layers // cfg.attn_every
+    per_group = cfg.attn_every
+
+    def init(key):
+        ke, km, ka = jax.random.split(key, 3)
+        e_params, e_axes = embedding_init(ke, cfg)
+        m_params, m_axes = B.stack_init(km, cfg.n_layers, lambda k: B.ssm_block_init(k, cfg))
+        # reshape mamba stack to (n_groups, per_group, ...)
+        m_params = jax.tree.map(lambda x: x.reshape(n_groups, per_group, *x.shape[1:]), m_params)
+        m_axes = jax.tree.map(
+            lambda a: ("groups",) + tuple(a), m_axes, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        a_params, a_axes = B.block_init(ka, cfg)  # ONE shared attention block
+        lnf, lnf_ax = rmsnorm_init(cfg)
+        params = {"embed": e_params, "mamba": m_params, "shared_attn": a_params, "ln_f": lnf}
+        axes = {"embed": e_axes, "mamba": m_axes, "shared_attn": a_axes, "ln_f": lnf_ax}
+        validate_trees(params, axes)
+        return params, axes
+
+    def train_loss(params, batch, axis_info):
+        h = _inputs_to_h(params, batch, cfg, axis_info)
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_params):
+            x, _ = carry
+            x, _aux = B.scan_apply(
+                group_params, x,
+                lambda p, xx: (B.ssm_block_apply(p, xx, cfg), jnp.zeros((), jnp.float32)),
+                cfg, axis_info,
+            )
+            x, aux = B.checkpoint_wrap(
+                lambda p, xx: B.block_apply(p, xx, cfg, axis_info), cfg
+            )(shared, x)
+            return (constrain_batch(x, axis_info), aux), None
+
+        (h, _), _ = lax.scan(group_body, (h, jnp.zeros((), jnp.float32)), params["mamba"])
+        h = rmsnorm(h, params["ln_f"])
+        logits = _constrain_logits(unembed(params["embed"], h, cfg), axis_info)
+        ce, acc = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        return ce, {"ce": ce, "acc": acc}
+
+    def init_cache(batch, seq_len, pad_pages_to=1):
+        kv, lengths = attn.init_decode_cache(cfg, batch, seq_len, n_groups, pad_pages_to=pad_pages_to)
+        return {
+            "ssm": ssm_mod.init_ssm_state(cfg, batch, cfg.n_layers),
+            "kv": kv,
+            "lengths": lengths,
+        }
+
+    def prefill(params, batch, axis_info):
+        h = _inputs_to_h(params, batch, cfg, axis_info)
+        Bb, S = h.shape[:2]
+        shared = params["shared_attn"]
+
+        def group_body(x, group_params):
+            def mamba_body(xx, lp):
+                hh = rmsnorm(xx, lp["ln"])
+                y, st = _ssm_forward_with_state(lp["ssm"], hh, cfg)
+                return xx + y, st
+
+            x, states = lax.scan(mamba_body, x, group_params)
+            x, _, kv = B.block_apply(shared, x, cfg, axis_info, return_kv=True)
+            return x, (states, kv)
+
+        h, (states, kvs) = lax.scan(group_body, h, params["mamba"])
+        # states: {"ssm": (G, pg, B, ...)} → flatten to (L, B, ...)
+        states = jax.tree.map(lambda s: s.reshape(cfg.n_layers, *s.shape[2:]), states)
+        k, v = kvs  # (G, B, S, K, hd)
+        extra = _pages_extra(S, Bb, cfg, axis_info)
+        pool_k, pool_v, tables, page_pos = jax.vmap(
+            lambda kk, vv: ops.prefill_into_pages(kk, vv, cfg.kv_page_tokens, extra_pages=extra)
+        )(k, v)
+        h = rmsnorm(h, params["ln_f"])
+        logits = unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+        cache = {
+            "ssm": states,
+            "kv": _pool_cache(cfg, pool_k, pool_v, tables, page_pos),
+            "lengths": jnp.full((Bb,), S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(params, cache, tokens, axis_info):
+        h = embed(params["embed"], tokens[:, None], cfg)
+        lengths = cache["lengths"]
+        shared = params["shared_attn"]
+        ssm_states = jax.tree.map(
+            lambda s: s.reshape(n_groups, per_group, *s.shape[1:]), cache["ssm"]
+        )
+
+        def group_body(x, inp):
+            group_params, group_state, kv_slice = inp
+
+            def mamba_body(xx, lp_state):
+                lp, st = lp_state
+                xx, new_st = B.ssm_block_decode(lp, xx, st, cfg)
+                return xx, new_st
+
+            x, new_states = lax.scan(mamba_body, x, (group_params, group_state))
+            x, new_kv = B.block_decode(shared, x, kv_slice, lengths, cfg, axis_info)
+            return x, (new_states, new_kv)
+
+        h, (new_states, new_kv) = lax.scan(group_body, h, (params["mamba"], ssm_states, cache["kv"]))
+        new_states = jax.tree.map(lambda s: s.reshape(cfg.n_layers, *s.shape[2:]), new_states)
+        h = rmsnorm(h, params["ln_f"])
+        logits = unembed(params["embed"], h, cfg)[:, 0]
+        return logits, {"ssm": new_states, "kv": new_kv, "lengths": lengths + 1}
+
+    return Model(init, train_loss, prefill, decode_step, init_cache)
+
+
+# ================================ encoder-decoder ================================
+def _encdec_lm(cfg: ModelConfig) -> Model:
+    n_enc, n_dec = cfg.n_enc_layers, cfg.n_dec_layers
+
+    def dec_block_init(key):
+        ka, kc, km = jax.random.split(key, 3)
+        a_params, a_axes = attn.attention_init(ka, cfg)
+        c_params, c_axes = attn.attention_init(kc, cfg)
+        from repro.models.layers import mlp_init
+
+        m_params, m_axes = mlp_init(km, cfg)
+        ln1, lax1 = rmsnorm_init(cfg)
+        ln2, lax2 = rmsnorm_init(cfg)
+        ln3, lax3 = rmsnorm_init(cfg)
+        params = {"ln1": ln1, "self": a_params, "ln2": ln2, "cross": c_params, "ln3": ln3, "mlp": m_params}
+        axes = {"ln1": lax1, "self": a_axes, "ln2": lax2, "cross": c_axes, "ln3": lax3, "mlp": m_axes}
+        return params, axes
+
+    def init(key):
+        ke, kenc, kdec = jax.random.split(key, 3)
+        e_params, e_axes = embedding_init(ke, cfg)
+        enc_params, enc_axes = B.stack_init(kenc, n_enc, lambda k: B.block_init(k, cfg))
+        dec_params, dec_axes = B.stack_init(kdec, n_dec, dec_block_init)
+        ln_e, lax_e = rmsnorm_init(cfg)
+        ln_d, lax_d = rmsnorm_init(cfg)
+        params = {"embed": e_params, "encoder": enc_params, "decoder": dec_params,
+                  "ln_enc": ln_e, "ln_dec": ln_d}
+        axes = {"embed": e_axes, "encoder": enc_axes, "decoder": dec_axes,
+                "ln_enc": lax_e, "ln_dec": lax_d}
+        validate_trees(params, axes)
+        return params, axes
+
+    def encode(params, enc_embeds, axis_info):
+        h = enc_embeds.astype(cfg.cdtype())
+        body = lambda p, x: B.block_apply(p, x, cfg, axis_info, causal=False)
+        h, _ = B.scan_apply(params["encoder"], h, body, cfg, axis_info)
+        return rmsnorm(h, params["ln_enc"])
+
+    def dec_block_apply(p, x, enc_out, axis_info):
+        h = rmsnorm(x, p["ln1"])
+        x = x + attn.attention_train(p["self"], h, cfg, causal=True)
+        h = rmsnorm(x, p["ln2"])
+        x = x + attn.attention_train(p["cross"], h, cfg, kv_src=enc_out)
+        h = rmsnorm(x, p["ln3"])
+        from repro.models.layers import mlp
+
+        return x + mlp(p["mlp"], h, cfg)
+
+    def train_loss(params, batch, axis_info):
+        enc_out = encode(params, batch["enc_embeds"], axis_info)
+        h = embed(params["embed"], batch["tokens"], cfg)
+
+        def body(carry, p):
+            x, aux = carry
+            x = B.checkpoint_wrap(lambda pp, xx: dec_block_apply(pp, xx, enc_out, axis_info), cfg)(p, x)
+            return (constrain_batch(x, axis_info), aux), None
+
+        (h, _), _ = lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["decoder"])
+        h = rmsnorm(h, params["ln_dec"])
+        logits = _constrain_logits(unembed(params["embed"], h, cfg), axis_info)
+        ce, acc = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        return ce, {"ce": ce, "acc": acc}
+
+    def init_cache(batch, seq_len, pad_pages_to=1):
+        self_kv, lengths = attn.init_decode_cache(cfg, batch, seq_len, n_dec, pad_pages_to=pad_pages_to)
+        cross_kv, _ = attn.init_decode_cache(
+            cfg, batch, seq_len, n_dec, dtype=jnp.dtype(cfg.kv_cache_dtype), pad_pages_to=pad_pages_to
+        )
+        return {"self_kv": self_kv, "cross_kv": cross_kv, "lengths": lengths,
+                "enc_len": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(params, batch, axis_info):
+        """Encode source; build cross-attn pools; decoder cache starts empty
+        (or pref'd from ``batch['tokens']`` if provided)."""
+        enc_out = encode(params, batch["enc_embeds"], axis_info)
+        Bb, S_enc = enc_out.shape[:2]
+        ct = cfg.cdtype()
+
+        def cross_kv_one(p):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(ct))
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(ct))
+            return k, v
+
+        k, v = jax.vmap(cross_kv_one)(params["decoder"])  # (L_dec, B, S, K, hd)
+        extra = _pages_extra(S_enc, Bb, cfg, axis_info)
+        pool_k, pool_v, tables, page_pos = jax.vmap(
+            lambda kk, vv: ops.prefill_into_pages(kk, vv, cfg.kv_page_tokens, extra_pages=extra)
+        )(k, v)
+        cross_kv = _pool_cache(cfg, pool_k, pool_v, tables, page_pos)
+
+        dec_tokens = batch.get("tokens")
+        if dec_tokens is not None:
+            S_dec = dec_tokens.shape[1]
+            h = embed(params["embed"], dec_tokens, cfg)
+
+            def body(carry, p):
+                x = carry
+                hh = rmsnorm(x, p["ln1"])
+                a, kv = attn.attention_train(p["self"], hh, cfg, causal=True, return_kv=True, axis_info=axis_info)
+                x = x + a
+                hh = rmsnorm(x, p["ln2"])
+                x = x + attn.attention_train(p["cross"], hh, cfg, kv_src=enc_out)
+                hh = rmsnorm(x, p["ln3"])
+                from repro.models.layers import mlp
+
+                return x + mlp(p["mlp"], hh, cfg), kv
+
+            h, kvs = lax.scan(body, h, params["decoder"])
+            sk, sv = kvs
+            sextra = _pages_extra(S_dec, Bb, cfg, axis_info)
+            spool_k, spool_v, stables, spage_pos = jax.vmap(
+                lambda kk, vv: ops.prefill_into_pages(kk, vv, cfg.kv_page_tokens, extra_pages=sextra)
+            )(sk, sv)
+            self_kv = _pool_cache(cfg, spool_k, spool_v, stables, spage_pos)
+            h = rmsnorm(h, params["ln_dec"])
+            logits = unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+            lengths = jnp.full((Bb,), S_dec, jnp.int32)
+        else:
+            self_kv, lengths = attn.init_decode_cache(cfg, Bb, S_enc, n_dec)
+            logits = jnp.zeros((Bb, cfg.padded_vocab), jnp.float32)
+        cache = {"self_kv": self_kv, "cross_kv": cross_kv, "lengths": lengths,
+                 "enc_len": jnp.full((Bb,), S_enc, jnp.int32)}
+        return logits, cache
+
+    def decode_step(params, cache, tokens, axis_info):
+        h = embed(params["embed"], tokens[:, None], cfg)
+        lengths = cache["lengths"]
+        enc_len = cache["enc_len"]
+
+        def body(x, inp):
+            p, self_c, cross_c = inp
+            hh = rmsnorm(x, p["ln1"])
+            a, self_c = attn.attention_decode(p["self"], hh, self_c, lengths, cfg, axis_info)
+            x = x + a
+            hh = rmsnorm(x, p["ln2"])
+            a, _ = attn.attention_decode(
+                p["cross"], hh, cross_c, enc_len, cfg, axis_info, update=False, rope=False
+            )
+            x = x + a
+            hh = rmsnorm(x, p["ln3"])
+            from repro.models.layers import mlp
+
+            x = x + mlp(p["mlp"], hh, cfg)
+            return x, self_c
+
+        h, self_kv = lax.scan(
+            lambda x, inp: body(x, inp), h, (params["decoder"], cache["self_kv"], cache["cross_kv"])
+        )
+        h = rmsnorm(h, params["ln_dec"])
+        logits = unembed(params["embed"], h, cfg)[:, 0]
+        return logits, dict(cache, self_kv=self_kv, lengths=lengths + 1)
+
+    return Model(init, train_loss, prefill, decode_step, init_cache)

@@ -1,0 +1,69 @@
+"""Minimal pure-JAX parameter system.
+
+Parameters are nested dicts of ``jnp`` arrays. Every init function returns a
+pair ``(params, axes)`` of identically-structured pytrees, where ``axes``
+holds a tuple of *logical axis names* per array — the distribution layer
+(``parallel/sharding.py``) maps logical names to mesh axes. Keeping the two
+trees separate (rather than wrapping values) keeps params directly usable by
+``jax.jit`` / optimizers without unwrapping.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+def dense_init(key, in_dim: int, out_shape: Tuple[int, ...], dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init for a projection ``(in_dim, *out_shape)``."""
+    shape = (in_dim,) + tuple(out_shape)
+    std = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_layer_params(key, n_layers: int, init_one):
+    """vmap a per-layer init over ``n_layers`` keys → stacked (L, ...) arrays."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def prefix_axes(axes_tree, name: str = "layers"):
+    """Prepend a logical axis (for layer-stacked params) to every axes tuple."""
+    return jax.tree.map(
+        lambda a: (name,) + tuple(a), axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def validate_trees(params: Params, axes: Axes) -> None:
+    """Assert params and axes trees are structurally identical and each axes
+    tuple has one name per array dim."""
+    pt = jax.tree.structure(params)
+    at = jax.tree.structure(axes, is_leaf=lambda x: isinstance(x, tuple))
+    if pt != at:
+        raise ValueError(f"params/axes tree mismatch:\n{pt}\nvs\n{at}")
+    for p, a in zip(
+        jax.tree.leaves(params),
+        jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple)),
+    ):
+        if np.ndim(p) != len(a):
+            raise ValueError(f"axes {a} do not match array of shape {np.shape(p)}")
+
+
+def param_bytes(params: Params) -> int:
+    return sum(p.nbytes for p in jax.tree.leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p, params
+    )

@@ -1,0 +1,250 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The chunked SSD formulation: split the sequence into chunks of length L;
+within a chunk the output is a masked (decay-weighted) attention-like matmul
+(MXU-friendly); across chunks a small recurrent state (H, P, N) is carried by
+a scan. Decode is the O(1) recurrent update — attention-free, which is what
+makes ``long_500k`` trivial for this family.
+
+TPU adaptation note: the CUDA Mamba2 kernel fuses the chunk scan; here the
+intra-chunk term is expressed as batched matmuls (MXU) and the inter-chunk
+recurrence as a ``lax.scan`` over chunk states — the natural TPU mapping.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.modules import dense_init
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d, di, n, g = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    h, dconv, dt = cfg.ssm_heads, cfg.ssm_conv, cfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    conv_dim = di + 2 * g * n
+    params = {
+        "in_proj": dense_init(k1, d, (2 * di + 2 * g * n + h,), dt),
+        "conv_w": (jax.random.normal(k2, (dconv, conv_dim), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(k3, di, (d,), dt),
+    }
+    axes = {
+        "in_proj": ("embed", "ssm_proj"),
+        "conv_w": ("conv", "ssm_conv_dim"),
+        "conv_b": ("ssm_conv_dim",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, axes
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C) with taps (Kc, C)."""
+    Kc = w.shape[0]
+    out = xBC * w[-1]
+    for i in range(1, Kc):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, : xBC.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise decay: out[..., i, j] = Σ_{j<m<=i} a[..., m].
+
+    a: (..., L) → (..., L, L) with -inf above the diagonal.
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) — post-softplus
+    A: jnp.ndarray,  # (H,) negative decay rates
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+    return_state: bool = False,
+):
+    """Chunked SSD scan. Returns y (B,S,H,P) [, final_state]."""
+    Bb, S, H, Pd = x.shape
+    G = Bm.shape[2]
+    L = min(chunk, S)
+    if S % L:  # fall back to the largest divisor of S not exceeding `chunk`
+        L = next(c for c in range(L, 0, -1) if S % c == 0)
+    nc = S // L
+    rep = H // G
+
+    xc = x.reshape(Bb, nc, L, H, Pd)
+    dtc = dt.reshape(Bb, nc, L, H)
+    Bc = Bm.reshape(Bb, nc, L, G, N := Bm.shape[-1])
+    Cc = Cm.reshape(Bb, nc, L, G, N)
+
+    a = dtc * A  # (B, nc, L, H) log decay per step (fp32)
+    cum_a = jnp.cumsum(a, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic in L, MXU matmuls) ----
+    ct = xc.dtype
+    seg = _segsum(jnp.moveaxis(a, -1, -2))  # (B, nc, H, L, L)
+    decay = jnp.exp(seg).astype(ct)
+    scores = jnp.einsum("bclgn,bcmgn->bcglm", Cc, Bc)  # (B,nc,G,L,L)
+    scores = jnp.repeat(scores.astype(ct), rep, axis=2)  # → (B,nc,H,L,L)
+    M = scores * decay
+    xdt = (xc * dtc[..., None].astype(ct)).astype(ct)  # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", M, xdt, preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum_a[:, :, -1:, :] - cum_a)  # (B,nc,L,H)
+    states = jnp.einsum(
+        "bclgn,bclh,bclhp->bchnp",
+        Bc, (decay_to_end * dtc).astype(ct), xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- inter-chunk recurrence over nc (small state) ----
+    chunk_decay = jnp.exp(cum_a[:, :, -1, :])  # (B, nc, H)
+
+    def body(s, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        s_next = s * dec[:, :, None, None] + st
+        return s_next, s  # emit the state *entering* this chunk
+
+    s0 = init_state if init_state is not None else jnp.zeros((Bb, H, N, Pd), jnp.float32)
+    final, prev_states = lax.scan(
+        body,
+        s0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, N, P)
+
+    state_decay = jnp.exp(cum_a)  # decay from chunk start to position
+    Cr = jnp.repeat(Cc, rep, axis=3)  # (B,nc,L,H,N)
+    y_inter = jnp.einsum(
+        "bclhn,bchnp,bclh->bclhp",
+        Cr, prev_states.astype(ct), state_decay.astype(ct),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, Pd)
+    if return_state:
+        return y, final
+    return y
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, N, P)
+    x: jnp.ndarray,  # (B, H, P)
+    dt: jnp.ndarray,  # (B, H) post-softplus
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, G, N)
+    Cm: jnp.ndarray,  # (B, G, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent update: returns (y (B,H,P), new_state)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Br = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Cr = jnp.repeat(Cm, rep, axis=1)
+    decay = jnp.exp(dt * A)  # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhnp", Br, x * dt[..., None])
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cr, new_state)
+    return y, new_state
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    yf = yf * lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_forward(
+    params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer (train / prefill)."""
+    ct = cfg.cdtype()
+    di, n, g, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(ct))
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(ct), params["conv_b"].astype(ct)))
+    xs = xBC[..., :di].reshape(*xBC.shape[:2], h, p)
+    Bm = xBC[..., di : di + g * n].reshape(*xBC.shape[:2], g, n)
+    Cm = xBC[..., di + g * n :].reshape(*xBC.shape[:2], g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = _gated_norm(y.reshape(*x.shape[:2], di).astype(ct), z, params["norm"])
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(ct))
+
+
+SSMState = Dict[str, jnp.ndarray]  # {"ssm": (B,H,N,P), "conv": (B, Kc-1, conv_dim)}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int, dtype=jnp.float32) -> SSMState:
+    h, n, p = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((n_layers, batch, h, n, p), dtype),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(
+    params,
+    x: jnp.ndarray,  # (B, 1, d)
+    state: Dict[str, jnp.ndarray],  # per-layer slice {"ssm": (B,H,N,P), "conv": (B,Kc-1,C)}
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token Mamba2 step."""
+    ct = cfg.cdtype()
+    di, n, g, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(ct))[:, 0]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+
+    conv_hist = jnp.concatenate([state["conv"].astype(ct), xBC[:, None, :]], axis=1)  # (B,Kc,C)
+    w = params["conv_w"].astype(ct)  # (Kc, C)
+    xBC = jax.nn.silu((conv_hist * w[None]).sum(axis=1) + params["conv_b"].astype(ct))
+    new_conv = conv_hist[:, 1:]
+
+    xs = xBC[..., :di].reshape(-1, h, p)
+    Bm = xBC[..., di : di + g * n].reshape(-1, g, n)
+    Cm = xBC[..., di + g * n :].reshape(-1, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm = ssd_decode_step(
+        state["ssm"].astype(jnp.float32), xs.astype(jnp.float32), dtv, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+    )
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = _gated_norm(y.reshape(-1, di).astype(ct), z, params["norm"])
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(ct))[:, None]
+    return out, {"ssm": new_ssm.astype(state["ssm"].dtype), "conv": new_conv.astype(state["conv"].dtype)}

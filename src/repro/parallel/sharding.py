@@ -1,0 +1,137 @@
+"""Logical-axis → mesh-axis sharding rules (DP / FSDP / TP / EP).
+
+Parameters carry logical axis names (see ``models/modules.py``); this module
+resolves them to ``PartitionSpec``s against a concrete mesh, with automatic
+fall-back to replication when a dimension does not divide the mesh axis
+(e.g. 8 KV heads on a 16-way model axis).
+
+Design choices (recorded in DESIGN.md §5):
+  * batch → ``('pod','data')`` — pure DP across pods (DCN-friendly),
+  * ``embed`` (d_model rows) → ``'data'`` — FSDP *within* a pod only; weights
+    are replicated across pods and gradients all-reduce over ``'pod'``,
+  * heads / ffn / vocab → ``'model'`` (TP),
+  * experts → ``'model'`` when E divides it (EP), else per-expert ffn TP,
+  * KV page pools → all axes jointly (the paper's page striping).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.parallel.axisinfo import AxisInfo
+
+
+def logical_rules(cfg: ModelConfig, axis_info: AxisInfo) -> Dict[str, Any]:
+    tp = axis_info.mesh.shape[axis_info.model_axis]
+    moe_ep = cfg.is_moe and cfg.n_experts % tp == 0
+    m = axis_info.model_axis
+    return {
+        "vocab": m,
+        "embed": "data",  # FSDP within pod
+        "embed_table": None,  # vocab-sharded only: FSDP'ing the table makes the
+        # token gather reshard pathologically on multi-pod meshes
+        "q_heads": m,
+        "kv_heads": m,
+        "head": None,
+        "ffn": m,
+        "moe_ffn": None if moe_ep else m,
+        "experts": m if moe_ep else None,
+        "experts_router": None,
+        "layers": None,
+        "groups": None,
+        "conv": None,
+        "ssm_proj": m,
+        "ssm_conv_dim": m,
+        "ssm_heads": None,
+        "ssm_inner": m,
+        "batch": axis_info.batch_axes,
+        "pages": axis_info.page_axes,
+        "seq": None,
+    }
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[str, ...], rules, mesh: Mesh) -> P:
+    """Resolve one param's logical axes to a PartitionSpec, honoring
+    divisibility and never assigning a mesh axis twice."""
+    used = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = rules.get(name)
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        size = 1
+        ok = True
+        for a in mesh_axes:
+            if a in used:
+                ok = False
+                break
+            size *= mesh.shape[a]
+        if not ok or dim % size:
+            entries.append(None)
+            continue
+        used.update(mesh_axes)
+        entries.append(mesh_axes[0] if len(mesh_axes) == 1 else tuple(mesh_axes))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(params_shape, axes_tree, cfg: ModelConfig, axis_info: AxisInfo):
+    """NamedSharding tree for a params (or optimizer-state) pytree."""
+    rules = logical_rules(cfg, axis_info)
+    mesh = axis_info.mesh
+
+    def one(p, a):
+        return NamedSharding(mesh, spec_for(p.shape, a, rules, mesh))
+
+    return jax.tree.map(
+        one, params_shape, axes_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jnp.ndarray)),
+    )
+
+
+def batch_shardings(batch_spec, cfg: ModelConfig, axis_info: AxisInfo):
+    """Input batches: shard dim 0 (batch) over DP axes when divisible."""
+    mesh = axis_info.mesh
+    n = axis_info.n_batch_shards
+
+    def one(s):
+        if s.shape and s.shape[0] % n == 0:
+            return NamedSharding(mesh, P(axis_info.batch_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_spec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_shardings(cache_shape, cfg: ModelConfig, axis_info: AxisInfo):
+    """Decode-cache pytrees: page pools over all axes; small state replicated;
+    SSM states over batch when divisible."""
+    mesh = axis_info.mesh
+    n_pages = axis_info.n_page_shards
+    n_batch = axis_info.n_batch_shards
+
+    def one(path, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("pool_k", "pool_v", "scale_k", "scale_v"):
+            # (L, P, T, K, hd): stripe pages over every axis
+            if s.shape[1] % n_pages == 0:
+                return NamedSharding(mesh, P(None, axis_info.page_axes))
+            return NamedSharding(mesh, P())
+        if name in ("ssm", "conv"):
+            # (L, B, ...): shard batch over DP axes
+            if s.shape[1] % n_batch == 0:
+                return NamedSharding(mesh, P(None, axis_info.batch_axes))
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P())  # tables, page_pos, lengths, enc_len
+
+    return jax.tree_util.tree_map_with_path(
+        one, cache_shape, is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jnp.ndarray))
+    )

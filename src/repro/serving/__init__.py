@@ -1,0 +1,3 @@
+from repro.serving.engine import Completion, Request, ServingEngine
+
+__all__ = ["Completion", "Request", "ServingEngine"]

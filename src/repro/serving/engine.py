@@ -1,0 +1,234 @@
+"""Continuous-batching serving engine on the paged, versioned KV store.
+
+The engine is the paper's client+provider-manager loop applied to inference:
+
+* requests are admitted when a batch slot AND pool pages are available
+  (provider-manager placement via :class:`PagedKVAllocator`);
+* prompt prefixes matching cached pages are SHARED (COW snapshots — no
+  recompute, no extra storage);
+* decode steps read striped pages concurrently (lock-free R/R), append fresh
+  pages (W/W on disjoint pages), and COW-fork any page a snapshot still pins;
+* a request's output is a *published version* of its sequence — earlier
+  snapshots remain readable for as long as a reader holds them.
+
+Single-host reference implementation: device arrays live on the default
+device (or a mesh via ``axis_info``); the same step functions are what
+``launch/serve.py`` shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.lm import Model, build_model
+from repro.storage.kvcache import PagedKVAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    prefill_skipped_tokens: int  # prefix-cache savings
+    latency_s: float
+
+
+class ServingEngine:
+    """Greedy/temperature sampling, fixed slot count, paged pool."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_slots: int = 4,
+        n_pages: int = 256,
+        max_pages_per_seq: int = 32,
+        rng_seed: int = 0,
+    ) -> None:
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.params = params
+        self.T = cfg.kv_page_tokens
+        self.max_slots = max_slots
+        self.Rmax = max_pages_per_seq
+        self.alloc = PagedKVAllocator(n_pages, self.T)
+        self._rng = np.random.default_rng(rng_seed)
+
+        L = self._n_attn_layers()
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.kv_cache_dtype)
+        if dt == jnp.int8:
+            # the engine scatters raw prefill pages; int8 pools (decode-path
+            # quantization) would need a quantizing scatter here — keep bf16
+            dt = jnp.dtype(jnp.bfloat16)
+        self.pool_k = jnp.zeros((L, n_pages, self.T, K, hd), dt)
+        self.pool_v = jnp.zeros((L, n_pages, self.T, K, hd), dt)
+        self._slots: List[Optional[dict]] = [None] * max_slots
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._done: Dict[int, Completion] = {}
+
+        self._jit_prefill_tokens = jax.jit(self._prefill_tokens_impl)
+        self._jit_decode = jax.jit(self._decode_impl)
+        self._jit_copy_pages = jax.jit(self._copy_pages_impl)
+
+    def _n_attn_layers(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return cfg.n_layers // cfg.attn_every
+        if cfg.family in ("encdec", "audio"):
+            return cfg.n_dec_layers
+        return cfg.n_layers
+
+    # ------------------------- jitted step functions -------------------------
+    def _prefill_tokens_impl(self, params, tokens):
+        """Prefill one request (padded to a page multiple); returns last-token
+        logits + per-layer paged K/V of the prompt."""
+        logits, cache = self.model.prefill(params, {"tokens": tokens}, None)
+        kv = cache["kv"] if "kv" in cache else cache["self_kv"]
+        return logits, kv["pool_k"], kv["pool_v"]
+
+    def _decode_impl(self, params, pool_k, pool_v, tables, page_pos, lengths, tokens):
+        L = pool_k.shape[0]
+        cache = {
+            "kv": {
+                "pool_k": pool_k,
+                "pool_v": pool_v,
+                # all layers share one table (the pools are stacked per layer)
+                "tables": jnp.broadcast_to(tables, (L,) + tables.shape),
+                "page_pos": jnp.broadcast_to(page_pos, (L,) + page_pos.shape),
+            },
+            "lengths": lengths,
+        }
+        logits, new_cache = self.model.decode_step(params, cache, tokens, None)
+        kv = new_cache["kv"]
+        return logits, kv["pool_k"], kv["pool_v"], kv["page_pos"]
+
+    def _copy_pages_impl(self, pool_k, pool_v, src, dst):
+        return pool_k.at[:, dst].set(pool_k[:, src]), pool_v.at[:, dst].set(pool_v[:, src])
+
+    # ------------------------------ lifecycle ------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.put(req)
+
+    def _admit(self) -> None:
+        while not self._queue.empty() and None in self._slots:
+            req = self._queue.get()
+            prompt = list(req.prompt)
+            pad = (-len(prompt)) % self.T
+            padded = prompt + [0] * pad
+            need_pages = len(padded) // self.T + 1
+            if self.alloc.free_pages < need_pages:
+                # not enough pages: requeue and stop admitting (backpressure)
+                self._queue.put(req)
+                return
+            seq, shared_tokens, _ = self.alloc.admit(prompt)
+            slot = self._slots.index(None)
+
+            # prefill (full recompute of non-shared part; prefix-shared pages
+            # need no recompute but we still need last-token logits, so run
+            # the model over the whole prompt — the page WRITES are skipped
+            # for shared pages)
+            toks = jnp.asarray(padded, jnp.int32)[None]
+            logits, pk, pv = self._jit_prefill_tokens(self.params, toks)
+            n_prompt_pages = len(padded) // self.T
+            # scatter non-shared prompt pages into the big pool at their ids
+            first_new = shared_tokens // self.T
+            for p in range(first_new, n_prompt_pages):
+                pid = seq.pages[p]
+                self.pool_k = self.pool_k.at[:, pid].set(pk[:, p])
+                self.pool_v = self.pool_v.at[:, pid].set(pv[:, p])
+
+            next_tok = self._sample(np.asarray(logits)[0], req.temperature)
+            self._slots[slot] = dict(
+                req=req, seq=seq, generated=[int(next_tok)], t0=time.time(),
+                shared=shared_tokens, length=len(prompt),
+            )
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        logits = logits[: self.cfg.vocab_size]
+        if temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / temperature)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def step(self) -> int:
+        """One engine iteration: admit + one batched decode step. Returns the
+        number of active sequences."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+
+        # COW-fork / grow head pages before writing this step's token
+        copies: List[Tuple[int, int]] = []
+        for i in active:
+            st = self._slots[i]
+            copies.extend(self.alloc.append_token(st["seq"].seq_id))
+        if copies:
+            src = jnp.asarray([c[0] for c in copies], jnp.int32)
+            dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+            self.pool_k, self.pool_v = self._jit_copy_pages(self.pool_k, self.pool_v, src, dst)
+
+        B = self.max_slots
+        # inactive rows keep the OOB sentinel so they own no pages
+        tables = np.full((B, self.Rmax), self.alloc.n_pages, np.int32)
+        page_pos = np.zeros((B, self.Rmax), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        tokens = np.zeros((B,), np.int32)
+        for i in active:
+            st = self._slots[i]
+            row = self.alloc.table(st["seq"].seq_id, self.Rmax)
+            tables[i] = row
+            page_pos[i] = np.arange(self.Rmax) * self.T  # positional pages (no ring)
+            lengths[i] = st["length"] + len(st["generated"]) - 1
+            tokens[i] = st["generated"][-1]
+
+        logits, self.pool_k, self.pool_v, _ = self._jit_decode(
+            self.params, self.pool_k, self.pool_v,
+            jnp.asarray(tables), jnp.asarray(page_pos), jnp.asarray(lengths),
+            jnp.asarray(tokens),
+        )
+        logits = np.asarray(logits)
+
+        for i in active:
+            st = self._slots[i]
+            tok = self._sample(logits[i], st["req"].temperature)
+            st["generated"].append(tok)
+            if len(st["generated"]) >= st["req"].max_new_tokens:
+                self._finish(i)
+        return len(active)
+
+    def _finish(self, slot: int) -> None:
+        st = self._slots[slot]
+        self.alloc.finish(st["seq"].seq_id)
+        self._done[st["req"].request_id] = Completion(
+            st["req"].request_id,
+            st["generated"],
+            st["shared"],
+            time.time() - st["t0"],
+        )
+        self._slots[slot] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, Completion]:
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and self._queue.empty():
+                break
+        return dict(self._done)

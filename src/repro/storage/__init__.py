@@ -1,0 +1,4 @@
+from repro.storage.checkpoint import BlobCheckpointer, CheckpointRecord
+from repro.storage.kvcache import PagedKVAllocator, SeqState, Snapshot
+
+__all__ = ["BlobCheckpointer", "CheckpointRecord", "PagedKVAllocator", "SeqState", "Snapshot"]

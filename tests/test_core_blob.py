@@ -1,0 +1,222 @@
+"""Unit + property tests for the faithful blob-store reproduction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlobStore,
+    ZERO_VERSION,
+    compute_border_links,
+    count_write_nodes,
+)
+
+PAGE = 64  # tiny pages for tests
+
+
+def make_store(**kw):
+    kw.setdefault("n_data_providers", 4)
+    kw.setdefault("n_metadata_providers", 4)
+    return BlobStore(**kw)
+
+
+def test_alloc_read_zero_version():
+    store = make_store()
+    blob = store.alloc(16 * PAGE, PAGE)
+    res = store.read(blob, None, 0, 16 * PAGE)
+    assert res.latest_published == ZERO_VERSION
+    assert not res.data.any()  # version 0 is the all-zero string (paper §II)
+
+
+def test_write_then_read_roundtrip():
+    store = make_store()
+    blob = store.alloc(16 * PAGE, PAGE)
+    payload = np.arange(4 * PAGE, dtype=np.uint8)
+    v = store.write(blob, payload, 2 * PAGE)
+    assert v == 1
+    res = store.read(blob, v, 2 * PAGE, 4 * PAGE)
+    np.testing.assert_array_equal(res.data, payload)
+    # untouched pages still zero
+    assert not store.read(blob, v, 0, 2 * PAGE).data.any()
+    assert not store.read(blob, v, 6 * PAGE, 10 * PAGE).data.any()
+
+
+def test_versioning_snapshots_stay_readable():
+    store = make_store()
+    blob = store.alloc(8 * PAGE, PAGE)
+    a = np.full(2 * PAGE, 7, dtype=np.uint8)
+    b = np.full(2 * PAGE, 9, dtype=np.uint8)
+    v1 = store.write(blob, a, 0)
+    v2 = store.write(blob, b, PAGE)  # overlapping patch
+    assert (v1, v2) == (1, 2)
+    # v1 unchanged by the later overlapping write (COW)
+    np.testing.assert_array_equal(store.read(blob, v1, 0, 2 * PAGE).data, a)
+    # v2 = v1 patched by b at offset PAGE
+    expect = np.zeros(8 * PAGE, dtype=np.uint8)
+    expect[: 2 * PAGE] = a
+    expect[PAGE : 3 * PAGE] = b
+    np.testing.assert_array_equal(store.read(blob, v2, 0, 8 * PAGE).data, expect[: 8 * PAGE])
+
+
+def test_read_unpublished_version_fails():
+    store = make_store()
+    blob = store.alloc(4 * PAGE, PAGE)
+    with pytest.raises(ValueError, match="not yet published"):
+        store.read(blob, 1, 0, PAGE)
+
+
+def test_unaligned_write_rejected():
+    store = make_store()
+    blob = store.alloc(4 * PAGE, PAGE)
+    with pytest.raises(ValueError, match="page-aligned"):
+        store.write(blob, np.zeros(PAGE, np.uint8), 3)
+
+
+def test_metadata_sharing_between_versions():
+    """COW weaving shares all unmodified subtrees (paper §III.C)."""
+    store = make_store()
+    blob = store.alloc(1024 * PAGE, PAGE)
+    store.write(blob, np.ones(1024 * PAGE, np.uint8), 0)
+    n_after_full = store.metadata.total_nodes()
+    store.write(blob, np.ones(PAGE, np.uint8), 512 * PAGE)
+    n_after_patch = store.metadata.total_nodes()
+    # one-page patch creates exactly the root-to-leaf path: log2(1024)+1 nodes
+    assert n_after_patch - n_after_full == 11
+    assert n_after_patch - n_after_full == count_write_nodes(1024, 512, 1)
+
+
+def test_page_replication_survives_provider_failure():
+    store = make_store(n_data_providers=4, page_replication=2)
+    blob = store.alloc(8 * PAGE, PAGE)
+    payload = np.arange(8 * PAGE, dtype=np.uint8)
+    v = store.write(blob, payload, 0)
+    # kill the primary of some page: every page must still be readable
+    store.provider_manager.fail_provider(0)
+    np.testing.assert_array_equal(store.read(blob, v, 0, 8 * PAGE).data, payload)
+
+
+def test_metadata_replication_survives_shard_failure():
+    store = make_store(n_metadata_providers=4, metadata_replication=2)
+    blob = store.alloc(8 * PAGE, PAGE)
+    payload = np.arange(8 * PAGE, dtype=np.uint8)
+    v = store.write(blob, payload, 0)
+    store.metadata.fail_shard(1)
+    np.testing.assert_array_equal(store.read(blob, v, 0, 8 * PAGE).data, payload)
+
+
+def test_gc_keeps_reachable_shared_pages():
+    store = make_store()
+    blob = store.alloc(16 * PAGE, PAGE)
+    base = np.ones(16 * PAGE, np.uint8)
+    store.write(blob, base, 0)  # v1
+    patch = np.full(PAGE, 5, np.uint8)
+    store.write(blob, patch, 4 * PAGE)  # v2 shares 15 pages with v1
+    nodes_freed, pages_freed = store.gc(blob, keep_versions=[2])
+    assert pages_freed == 1  # only v1's overwritten page dies
+    assert nodes_freed > 0  # v1's root path dies
+    expect = base.copy()
+    expect[4 * PAGE : 5 * PAGE] = patch
+    np.testing.assert_array_equal(store.read(blob, 2, 0, 16 * PAGE).data, expect)
+
+
+def test_elastic_provider_join():
+    store = make_store(n_data_providers=2)
+    blob = store.alloc(8 * PAGE, PAGE)
+    store.write(blob, np.ones(4 * PAGE, np.uint8), 0)
+    new_pid = store.add_data_provider()
+    store.write(blob, np.ones(4 * PAGE, np.uint8), 4 * PAGE)
+    # the new provider picked up load (least-loaded placement)
+    assert store.provider_manager.get_provider(new_pid).n_pages > 0
+
+
+def test_version_manager_recovery_with_orphans():
+    store = make_store()
+    blob = store.alloc(8 * PAGE, PAGE)
+    store.write(blob, np.ones(PAGE, np.uint8), 0)  # v1 complete
+    # simulate a writer that got v2 assigned and crashed before reporting
+    store.version_manager.assign_version(blob, 2, 1)
+    store.write(blob, np.ones(PAGE, np.uint8), 4 * PAGE)  # v3 complete
+    from repro.core import VersionManager
+
+    vm2, orphans = VersionManager.recover(store.version_manager.journal)
+    assert vm2.latest_published(blob) == 1  # publish stops before the orphan
+    assert orphans[blob] == [2]
+    # v3 completed: it publishes as soon as the orphan is resolved
+    vm2.report_success(blob, 2)
+    assert vm2.latest_published(blob) == 3
+
+
+# ----------------------------- property tests --------------------------------
+
+
+@st.composite
+def patch_sequences(draw):
+    n_pages = draw(st.sampled_from([8, 16, 32]))
+    n_writes = draw(st.integers(min_value=1, max_value=8))
+    writes = []
+    for _ in range(n_writes):
+        off = draw(st.integers(min_value=0, max_value=n_pages - 1))
+        size = draw(st.integers(min_value=1, max_value=n_pages - off))
+        fill = draw(st.integers(min_value=1, max_value=255))
+        writes.append((off, size, fill))
+    return n_pages, writes
+
+
+@settings(max_examples=30, deadline=None)
+@given(patch_sequences())
+def test_serializability_reads_equal_prefix_of_patches(seq):
+    """Paper §II: READ of version v == successive application of the first v
+    patches to the all-zero string — for EVERY published version."""
+    n_pages, writes = seq
+    store = make_store()
+    blob = store.alloc(n_pages * PAGE, PAGE)
+    oracle = np.zeros(n_pages * PAGE, dtype=np.uint8)
+    snapshots = [oracle.copy()]
+    for off, size, fill in writes:
+        buf = np.full(size * PAGE, fill, dtype=np.uint8)
+        store.write(blob, buf, off * PAGE)
+        oracle[off * PAGE : (off + size) * PAGE] = buf
+        snapshots.append(oracle.copy())
+    for v, snap in enumerate(snapshots):
+        got = store.read(blob, v, 0, n_pages * PAGE).data
+        np.testing.assert_array_equal(got, snap)
+
+
+@settings(max_examples=30, deadline=None)
+@given(patch_sequences())
+def test_border_links_point_to_latest_intersecting_version(seq):
+    """compute_border_links must weave to the most recent intersecting patch."""
+    n_pages, writes = seq
+    intervals = {}
+
+    for v, (off, size, _) in enumerate(writes, start=1):
+
+        def version_of_segment(o, s):
+            best = ZERO_VERSION
+            for pv, (po, ps) in intervals.items():
+                if po < o + s and o < po + ps:
+                    best = max(best, pv)
+            return best
+
+        links = compute_border_links(n_pages, off, size, version_of_segment)
+        for link in links:
+            # the missing child never intersects the current patch
+            assert not (link.child_offset < off + size and off < link.child_offset + link.child_size)
+            assert link.child_version == version_of_segment(link.child_offset, link.child_size)
+        intervals[v] = (off, size)
+
+
+def test_unaligned_write_read_modify_write():
+    store = make_store()
+    blob = store.alloc(16 * PAGE, PAGE)
+    base = np.arange(16 * PAGE, dtype=np.uint8)
+    store.write(blob, base, 0)
+    patch = np.full(PAGE, 200, np.uint8)
+    off = 3 * PAGE + 17  # crosses two pages, unaligned both sides
+    v = store.write_unaligned(blob, patch, off)
+    expect = base.copy()
+    expect[off : off + PAGE] = patch
+    got = store.read(blob, v, 0, 16 * PAGE).data
+    np.testing.assert_array_equal(got, expect)
+    # the pre-patch version is untouched (COW)
+    np.testing.assert_array_equal(store.read(blob, v - 1, 0, 16 * PAGE).data, base)

@@ -1,0 +1,84 @@
+"""Validate the trip-count-aware HLO cost parser against ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_match_xla():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    fn = lambda x, y: x @ y
+    compiled = jax.jit(fn).lower(a, b).compile()
+    got = analyze_hlo(compiled.as_text())
+    expect = 2 * 128 * 256 * 64
+    assert got.flops == expect
+    xla = compiled.cost_analysis().get("flops", 0)
+    if xla and xla > 0:
+        np.testing.assert_allclose(got.flops, xla, rtol=0.01)
+
+
+def test_scan_body_flops_multiplied_by_trip_count():
+    L = 8
+    w = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+
+    def fn(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    text = _compiled_text(fn, w, x)
+    got = analyze_hlo(text)
+    expect = L * 2 * 4 * 64 * 64
+    # the parser must count the while body L times (allow fusion slack)
+    assert got.flops >= expect * 0.99, (got.flops, expect)
+    assert got.flops <= expect * 1.5, (got.flops, expect)
+    assert any(t == L for t in got.while_trips.values()), got.while_trips
+
+
+def test_nested_scan_trip_counts_multiply():
+    Lo, Li = 3, 5
+    w = jax.ShapeDtypeStruct((Lo, Li, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, 32), jnp.float32)
+
+    def fn(ws, x):
+        def outer(h, w_outer):
+            def inner(hh, w):
+                return hh @ w, None
+
+            h2, _ = jax.lax.scan(inner, h, w_outer)
+            return h2, None
+
+        h, _ = jax.lax.scan(outer, x, ws)
+        return h
+
+    got = analyze_hlo(_compiled_text(fn, w, x))
+    expect = Lo * Li * 2 * 2 * 32 * 32
+    assert got.flops >= expect * 0.99
+    assert got.flops <= expect * 1.6
+
+
+def test_bytes_scale_with_trip_count():
+    L = 16
+    w = jax.ShapeDtypeStruct((L, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+
+    def fn(ws, x):
+        def body(h, w):
+            return h @ w, None
+
+        return jax.lax.scan(body, x, ws)[0]
+
+    got = analyze_hlo(_compiled_text(fn, w, x))
+    # each iteration must at least read its (128,128) fp32 weight slice
+    assert got.bytes >= L * 128 * 128 * 4

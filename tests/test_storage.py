@@ -1,0 +1,173 @@
+"""Tests for the paged-KV allocator (prefix sharing / COW) and the
+incremental blob checkpointer."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BlobStore
+from repro.storage.checkpoint import BlobCheckpointer
+from repro.storage.kvcache import PagedKVAllocator
+
+
+# ------------------------------- kv allocator -------------------------------
+def test_prefix_sharing_shares_full_pages():
+    a = PagedKVAllocator(n_pages=64, page_tokens=4)
+    p1 = [1, 2, 3, 4, 5, 6, 7, 8, 9]
+    seq1, shared1, _ = a.admit(p1)
+    assert shared1 == 0
+    used_before = a.used_pages()
+    # same 8-token prefix -> 2 full pages shared
+    seq2, shared2, _ = a.admit([1, 2, 3, 4, 5, 6, 7, 8, 42])
+    assert shared2 == 8
+    assert seq2.pages[:2] == seq1.pages[:2]
+    assert a.used_pages() == used_before + 1  # only the fresh tail page
+
+
+def test_cow_fork_on_shared_head():
+    a = PagedKVAllocator(n_pages=64, page_tokens=4)
+    seq1, _, _ = a.admit([1, 2, 3, 4, 5, 6, 7, 8])  # two full pages
+    seq2, shared, _ = a.admit([1, 2, 3, 4, 5, 6, 7, 8])  # fully shared
+    assert shared == 8
+    # seq2 decodes: its head page (page index 2) is fresh -> no copy
+    copies = a.append_token(seq2.seq_id)
+    assert copies == []
+    # rewind case: a third sequence shares, then appends into page 2 which
+    # is NOT shared (fresh per admit) -> still no copy
+    # force-shared head: snapshot seq1 then decode seq1 beyond its pages
+    snap = a.snapshot(seq1.seq_id)
+    copies = a.append_token(seq1.seq_id)  # head page 2 freshly allocated
+    a.release_snapshot(snap)
+
+
+def test_cow_copy_when_appending_into_shared_partial_page():
+    a = PagedKVAllocator(n_pages=64, page_tokens=4)
+    seq1, _, _ = a.admit([1, 2, 3, 4, 5, 6])  # page0 full, page1 partial
+    # share page0 only; page1 of seq2 is fresh
+    seq2, shared, _ = a.admit([1, 2, 3, 4, 5, 6])
+    assert shared == 4
+    # seq1's partial head page (page1) has ref 1 -> no copy on append
+    assert a.append_token(seq1.seq_id) == []
+    # snapshot seq1 (retains page1), now appending must COW-fork page1
+    snap = a.snapshot(seq1.seq_id)
+    copies = a.append_token(seq1.seq_id)
+    assert len(copies) == 1
+    src, dst = copies[0]
+    assert src == snap.pages[1] and dst == a._seqs[seq1.seq_id].pages[1]
+    a.release_snapshot(snap)
+
+
+def test_finish_releases_pages_and_index_eviction():
+    a = PagedKVAllocator(n_pages=8, page_tokens=4)
+    seqs = []
+    for i in range(3):
+        s, _, _ = a.admit([i * 10 + 1, i * 10 + 2, i * 10 + 3, i * 10 + 4])
+        seqs.append(s)
+    for s in seqs:
+        a.finish(s.seq_id)
+    # pages remain in the prefix index (cache) but are evictable: admitting
+    # new sequences must succeed by evicting cache pages
+    for i in range(4):
+        a.admit([100 + i, 200 + i, 300 + i, 400 + i, 500 + i])
+    assert a.used_pages() <= 8
+
+
+def test_snapshot_isolation_under_decode():
+    """The paper's read/write concurrency: a snapshot's pages survive the
+    writer's continued decoding (ref'd), and release frees them."""
+    a = PagedKVAllocator(n_pages=16, page_tokens=2)
+    seq, _, _ = a.admit([1, 2, 3])
+    snap = a.snapshot(seq.seq_id)
+    for _ in range(6):
+        a.append_token(seq.seq_id)
+    assert all(a._ref.get(p, 0) >= 1 for p in snap.pages)
+    a.release_snapshot(snap)
+    a.finish(seq.seq_id)
+    assert a.used_pages() <= len(a._prefix_index) + 1
+
+
+# ------------------------------- checkpointer -------------------------------
+def _tiny_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w1": jax.random.normal(k, (64, 64), jnp.float32),
+        "w2": jnp.zeros((32,), jnp.float32),
+        "step": jnp.array(0, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip():
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    state = _tiny_state()
+    ck = BlobCheckpointer(store, state, page_size=4096)
+    rec = ck.save(0, state)
+    assert rec.dirty_pages > 0
+    out = ck.restore(0)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incremental_checkpoint_writes_only_dirty_pages():
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    state = _tiny_state()
+    ck = BlobCheckpointer(store, state, page_size=4096)
+    r0 = ck.save(0, state)
+    # identical state -> zero dirty pages (pure COW sharing)
+    r1 = ck.save(1, state)
+    assert r1.dirty_pages == 0
+    # touch one leaf -> only its page(s) rewritten
+    state2 = dict(state, w2=state["w2"] + 1.0)
+    r2 = ck.save(2, state2)
+    assert 0 < r2.dirty_pages < r0.dirty_pages
+    # all three checkpoints readable
+    w2_old = ck.restore(1)["w2"]
+    w2_new = ck.restore(2)["w2"]
+    assert float(w2_old[0]) + 1.0 == float(w2_new[0])
+
+
+def test_checkpoint_crash_consistency():
+    """A checkpoint is visible only after completion: reading while a save is
+    'in flight' (simulated by unpublished writes) yields the previous one."""
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    state = _tiny_state()
+    ck = BlobCheckpointer(store, state, page_size=4096)
+    ck.save(0, state)
+    before = ck.restore(0)
+    # simulate concurrent reader during a save of new state
+    state2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x, state)
+    t = ck.save_async(1, state2)
+    got = ck.restore(0)  # reader pinned to step 0 stays consistent
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(before)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    t.join()
+    after = ck.restore(1)
+    np.testing.assert_array_equal(np.asarray(after["w1"]), np.asarray(state2["w1"]))
+
+
+def test_checkpoint_gc_retention():
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    state = _tiny_state()
+    ck = BlobCheckpointer(store, state, page_size=4096, keep_last=2)
+    for i in range(5):
+        state = dict(state, w1=state["w1"] + 1.0)
+        ck.save(i, state)
+    assert len(ck.checkpoints) == 2
+    ck.restore(ck.checkpoints[0].step)
+    ck.restore(ck.checkpoints[1].step)
+
+
+def test_checkpoint_reshard_restore():
+    """Elastic restart: restore with explicit shardings onto a CPU mesh."""
+    store = BlobStore(n_data_providers=2, n_metadata_providers=2)
+    state = _tiny_state()
+    ck = BlobCheckpointer(store, state, page_size=4096)
+    ck.save(0, state)
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    out = ck.restore(0, shardings=sh)
+    assert all(x.sharding == NamedSharding(mesh, P()) for x in jax.tree.leaves(out))

@@ -1,0 +1,87 @@
+"""End-to-end training integration: loss decreases, checkpoint/restart is
+bit-consistent, data order is deterministic, failure injection recovers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blob import BlobStore
+from repro.data.pipeline import PipelineConfig, TokenPipeline, write_token_corpus
+from repro.launch.train import train
+
+
+def test_loss_decreases_small_lm():
+    out = train("llama3_2-1b", smoke=True, steps=30, batch=8, seq=64,
+                checkpoint_every=100, lr=1e-2)
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses
+
+
+def test_checkpoint_restart_resumes_identically():
+    """Train 20 steps; separately train 10, 'crash', restore, train 10 more —
+    identical final loss (deterministic data order + exact state restore)."""
+    a = train("llama3_2-1b", smoke=True, steps=20, batch=4, seq=64,
+              checkpoint_every=10, seed=3)
+
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train("llama3_2-1b", smoke=True, steps=20, batch=4, seq=64,
+              checkpoint_every=10, seed=3, store=store, fail_at_step=14)
+    # restart on the same store: restores step-10 checkpoint, resumes data at 10
+    b = train("llama3_2-1b", smoke=True, steps=20, batch=4, seq=64,
+              checkpoint_every=10, seed=3, store=store, restore=True)
+
+    np.testing.assert_allclose(a["losses"][-1], b["losses"][-1], rtol=1e-4)
+
+
+def test_moe_training_runs_and_balances():
+    out = train("mixtral-8x7b", smoke=True, steps=10, batch=4, seq=64,
+                checkpoint_every=100)
+    assert np.isfinite(out["losses"]).all()
+
+
+def test_ssm_training_runs():
+    out = train("mamba2-370m", smoke=True, steps=10, batch=4, seq=64,
+                checkpoint_every=100)
+    assert np.isfinite(out["losses"]).all()
+
+
+def test_pipeline_determinism_and_disjoint_ranks():
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    rng = np.random.default_rng(0)
+    n_tokens = 1 << 16
+    corpus = rng.integers(0, 1000, n_tokens, dtype=np.int32)
+    blob_id = write_token_corpus(store, corpus)
+
+    def make(rank, n_ranks=4):
+        return TokenPipeline(
+            store, blob_id, n_tokens,
+            PipelineConfig(batch_per_rank=2, seq_len=32, n_ranks=n_ranks, rank=rank),
+        )
+
+    p0a, p0b, p1 = make(0), make(0), make(1)
+    b0a = p0a.batch_at(5)
+    b0b = p0b.batch_at(5)
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])  # determinism
+    b1 = p1.batch_at(5)
+    assert not np.array_equal(b0a["tokens"], b1["tokens"])  # rank disjointness
+    # labels are inputs shifted by one
+    np.testing.assert_array_equal(b0a["tokens"][:, 1:], b0a["labels"][:, :-1])
+
+
+def test_pipeline_straggler_redundant_fetch():
+    """A provider failing mid-read must not stall the pipeline (replica
+    fallback inside BlobStore.read + redundant fetch)."""
+    store = BlobStore(n_data_providers=4, n_metadata_providers=4, page_replication=2)
+    rng = np.random.default_rng(0)
+    n_tokens = 1 << 14
+    blob_id = write_token_corpus(store, rng.integers(0, 100, n_tokens, dtype=np.int32))
+    pipe = TokenPipeline(
+        store, blob_id, n_tokens,
+        PipelineConfig(batch_per_rank=2, seq_len=32, n_ranks=1, rank=0,
+                       fetch_timeout_s=0.5),
+    )
+    store.provider_manager.fail_provider(0)  # node loss
+    batch = pipe.batch_at(0)
+    assert batch["tokens"].shape == (2, 32)
