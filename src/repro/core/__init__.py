@@ -4,9 +4,10 @@ Public API: :class:`BlobStore` (ALLOC/READ/WRITE/GC), plus the individual
 actors for tests and benchmarks.
 """
 
-from repro.core.blob import BlobStore, ReadResult
+from repro.core.blob import BlobStore, DEFAULT_CACHE_BYTES, ReadResult
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
+from repro.core.page_cache import CacheKey, FetchPlan, PageCache
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.segment_tree import (
     BorderLink,
@@ -18,12 +19,17 @@ from repro.core.segment_tree import (
     compute_border_links,
     count_write_nodes,
     traverse,
+    traverse_batch,
 )
 from repro.core.version_manager import JournalEntry, VersionManager
 
 __all__ = [
     "BlobStore",
+    "DEFAULT_CACHE_BYTES",
     "ReadResult",
+    "CacheKey",
+    "FetchPlan",
+    "PageCache",
     "MetadataDHT",
     "ProviderFailed",
     "TrafficStats",
@@ -41,6 +47,7 @@ __all__ = [
     "compute_border_links",
     "count_write_nodes",
     "traverse",
+    "traverse_batch",
     "JournalEntry",
     "VersionManager",
 ]

@@ -16,6 +16,20 @@ READ(id, v, buffer, offset, size):
   2. traverse the segment tree of version v over the DHT (parallel per level);
   3. fetch the leaves' pages from the data providers in parallel.
 
+On top of the paper's protocol this client adds two scaling layers that its
+immutability guarantees make safe:
+
+* a **versioned page cache** (:mod:`repro.core.page_cache`): pages of
+  published versions can never change, so snapshot re-reads hit RAM with no
+  invalidation protocol; concurrent cold misses on a page are collapsed into
+  one provider fetch (single-flight);
+* a **batched multi-segment data plane** — :meth:`BlobStore.readv` /
+  :meth:`BlobStore.writev` take many segments, deduplicate shared pages, run
+  ONE level-synchronous metadata traversal and ONE aggregated page RPC per
+  provider across all segments (the paper's §V.A RPC aggregation, applied
+  across an entire vectored request). ``read``/``write``/``write_unaligned``
+  are thin wrappers over this plane.
+
 All data-plane steps run on a thread pool to model the paper's concurrent
 RPCs; the version manager interaction is the only serialization point.
 """
@@ -23,13 +37,16 @@ RPCs; the version manager interaction is the only serialization point.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
+from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.segment_tree import (
     NodeKey,
@@ -37,15 +54,36 @@ from repro.core.segment_tree import (
     TreeNode,
     ZERO_VERSION,
     build_write_tree,
-    traverse,
+    traverse_batch,
 )
 from repro.core.version_manager import VersionManager
+
+#: Default client page-cache budget (bytes); pass ``cache_bytes=0`` to disable.
+DEFAULT_CACHE_BYTES = 64 << 20
 
 
 @dataclasses.dataclass
 class ReadResult:
     latest_published: int
     data: np.ndarray
+
+
+@functools.lru_cache(maxsize=8)
+def _zero_page(page_size: int) -> np.ndarray:
+    page = np.zeros(page_size, dtype=np.uint8)
+    page.flags.writeable = False
+    return page
+
+
+def _merge_ranges(pages: Sequence[int]) -> List[Tuple[int, int]]:
+    """Collapse a sorted page-index list into (offset, size) runs."""
+    ranges: List[Tuple[int, int]] = []
+    for p in pages:
+        if ranges and ranges[-1][0] + ranges[-1][1] == p:
+            ranges[-1] = (ranges[-1][0], ranges[-1][1] + 1)
+        else:
+            ranges.append((p, 1))
+    return ranges
 
 
 class BlobStore:
@@ -58,12 +96,16 @@ class BlobStore:
         page_replication: int = 1,
         metadata_replication: int = 1,
         max_workers: int = 8,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
     ) -> None:
         self.stats = TrafficStats()
         self.version_manager = VersionManager()
         self.provider_manager = ProviderManager(replication=page_replication, stats=self.stats)
         self.metadata = MetadataDHT(
             n_metadata_providers, replication=metadata_replication, stats=self.stats
+        )
+        self.page_cache: Optional[PageCache] = (
+            PageCache(cache_bytes, stats=self.stats) if cache_bytes else None
         )
         for i in range(n_data_providers):
             self.provider_manager.register(DataProvider(i))
@@ -92,46 +134,77 @@ class BlobStore:
     def write(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
         """Patch ``blob_id`` with ``buffer`` at ``offset_bytes``; returns the
         assigned version (published once all earlier versions publish)."""
+        return self.writev(blob_id, [(offset_bytes, buffer)])[0]
+
+    def writev(
+        self, blob_id: int, patches: Sequence[Tuple[int, np.ndarray]]
+    ) -> List[int]:
+        """Vectored WRITE: apply many ``(offset_bytes, buffer)`` page-aligned
+        patches. Each patch gets its own version (identical semantics to a
+        loop of :meth:`write`, in patch order), but the data plane batches:
+        one placement call, ONE aggregated ``put_pages`` RPC per data
+        provider across all patches, and one aggregated metadata round per
+        shard for all patches' tree nodes. Returns the assigned versions.
+        """
         total_pages, page_size = self.version_manager.blob_info(blob_id)
-        buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
-        if offset_bytes % page_size or buffer.size % page_size:
-            raise ValueError("WRITE must be page-aligned (paper §II)")
-        page_offset = offset_bytes // page_size
-        n_pages = buffer.size // page_size
-        if n_pages == 0:
-            raise ValueError("empty write")
+        bufs: List[np.ndarray] = []
+        spans: List[Tuple[int, int]] = []  # (page_offset, n_pages) per patch
+        for offset_bytes, buffer in patches:
+            buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
+            if offset_bytes % page_size or buffer.size % page_size:
+                raise ValueError("WRITE must be page-aligned (paper §II)")
+            n_pages = buffer.size // page_size
+            if n_pages == 0:
+                raise ValueError("empty write")
+            bufs.append(buffer)
+            spans.append((offset_bytes // page_size, n_pages))
+        if not bufs:
+            return []
 
-        # (1) placements
-        placements = self.provider_manager.allocate(n_pages)
+        # (1) placements for every fresh page of every patch, in one call
+        placements = self.provider_manager.allocate(sum(n for _, n in spans))
 
-        # (2) store pages in parallel, one aggregated put per provider
+        # (2) store pages in parallel, ONE aggregated put per provider
+        #     covering all patches
         by_provider: Dict[int, List[Tuple[int, np.ndarray]]] = {}
-        for i, (primary, replicas) in enumerate(placements):
-            page = buffer[i * page_size : (i + 1) * page_size].copy()
-            for pid, key in (primary,) + replicas:
-                by_provider.setdefault(pid, []).append((key, page))
+        per_patch: List[List[Tuple[PageRef, Tuple[PageRef, ...]]]] = []
+        cursor = 0
+        for buffer, (_, n_pages) in zip(bufs, spans):
+            mine = placements[cursor : cursor + n_pages]
+            cursor += n_pages
+            per_patch.append(mine)
+            for i, (primary, replicas) in enumerate(mine):
+                page = buffer[i * page_size : (i + 1) * page_size].copy()
+                for pid, key in (primary,) + replicas:
+                    by_provider.setdefault(pid, []).append((key, page))
 
         def _put(pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
             self.provider_manager.get_provider(pid).put_pages(items)
-            self.stats.record(pid, len(items), sum(p.nbytes for _, p in items))
+            self.stats.record_data(pid, len(items), sum(p.nbytes for _, p in items))
 
         futures = [self._pool.submit(_put, pid, items) for pid, items in by_provider.items()]
         for f in futures:
             f.result()
 
-        # (3) version number + border links (the only serialized step)
-        version, links = self.version_manager.assign_version(blob_id, page_offset, n_pages)
-
-        # (4) build + store metadata nodes (parallelized inside put_nodes by
-        #     aggregation per shard)
-        nodes = build_write_tree(
-            blob_id, version, total_pages, page_offset, n_pages, placements, links
-        )
+        # (3) version numbers + border links, in patch order (the only
+        #     serialized step), then (4) ONE aggregated metadata store for
+        #     all patches' nodes
+        versions: List[int] = []
+        nodes: List[TreeNode] = []
+        for (page_offset, n_pages), mine in zip(spans, per_patch):
+            version, links = self.version_manager.assign_version(blob_id, page_offset, n_pages)
+            versions.append(version)
+            nodes.extend(
+                build_write_tree(
+                    blob_id, version, total_pages, page_offset, n_pages, mine, links
+                )
+            )
         self.metadata.put_nodes(nodes)
 
         # (5) report success → in-order publish
-        self.version_manager.report_success(blob_id, version)
-        return version
+        for version in versions:
+            self.version_manager.report_success(blob_id, version)
+        return versions
 
     # -- READ --------------------------------------------------------------------
     def read(
@@ -142,54 +215,198 @@ class BlobStore:
         size_bytes: int,
     ) -> ReadResult:
         """Read ``[offset_bytes, offset_bytes+size_bytes)`` of ``version``
-        (``None`` = latest published). Fails if ``version`` is unpublished."""
+        (``None`` = latest published). Fails if ``version`` is unpublished or
+        the range is fully out of bounds; a range overlapping the blob's end
+        is clamped (short read)."""
+        total_pages, page_size = self.version_manager.blob_info(blob_id)
+        latest = self.version_manager.latest_published(blob_id)
+        if version is None:
+            version = latest  # resolve once, so the label matches the data
+        elif version > latest:
+            raise ValueError(f"version {version} not yet published (latest={latest})")
+        data = self._readv(
+            blob_id, version, [(offset_bytes, size_bytes)], total_pages, page_size
+        )[0]
+        return ReadResult(latest, data)
+
+    def readv(
+        self,
+        blob_id: int,
+        version: Optional[int],
+        segments: Sequence[Tuple[int, int]],
+    ) -> List[np.ndarray]:
+        """Vectored READ: fetch many ``(offset_bytes, size_bytes)`` segments
+        of one version in a single batched pass. Pages shared between
+        segments are deduplicated; cache hits skip the network entirely; the
+        remaining pages cost one level-synchronous metadata traversal (one
+        aggregated RPC per shard per level) plus ONE aggregated ``get_pages``
+        RPC per data provider. Returns one ``np.uint8`` array per segment.
+        """
         total_pages, page_size = self.version_manager.blob_info(blob_id)
         latest = self.version_manager.latest_published(blob_id)
         if version is None:
             version = latest
         elif version > latest:
             raise ValueError(f"version {version} not yet published (latest={latest})")
+        return self._readv(blob_id, version, segments, total_pages, page_size)
 
-        first_page = offset_bytes // page_size
-        last_page = (offset_bytes + size_bytes + page_size - 1) // page_size
-        n_pages = max(last_page - first_page, 0)
-        out = np.zeros(n_pages * page_size, dtype=np.uint8)
-        if size_bytes == 0:
-            return ReadResult(latest, out[:0])
+    def _readv(
+        self,
+        blob_id: int,
+        version: int,
+        segments: Sequence[Tuple[int, int]],
+        total_pages: int,
+        page_size: int,
+    ) -> List[np.ndarray]:
+        """``readv`` body with the version-manager state already resolved —
+        the serialized actor is consulted exactly once per public call."""
+        # clamp segments; collect the deduplicated union of needed pages
+        total_bytes = total_pages * page_size
+        clamped: List[Tuple[int, int]] = []
+        needed: Set[int] = set()
+        for offset, size in segments:
+            if offset < 0 or size < 0:
+                raise ValueError(f"negative read offset/size ({offset}, {size})")
+            if size == 0:
+                clamped.append((offset, 0))
+                continue
+            if offset >= total_bytes:
+                raise ValueError(
+                    f"read at offset {offset} out of range (blob is {total_bytes} bytes)"
+                )
+            size = min(size, total_bytes - offset)  # clamp to blob end
+            clamped.append((offset, size))
+            first_page = offset // page_size
+            last_page = min(-(-(offset + size) // page_size), total_pages)
+            needed.update(range(first_page, last_page))
 
-        # (2) metadata traversal over the DHT
-        leaves = list(
-            traverse(self.metadata.get_node, blob_id, version, total_pages, first_page, n_pages)
-        )
+        # cache phase: hits are served from RAM; exactly one concurrent
+        # reader becomes the fetch leader for each missing page
+        pages: Dict[int, Optional[np.ndarray]] = {}
+        cache = self.page_cache
+        owned: List[int] = []
+        waits: Dict[Tuple[int, int, int], object] = {}
+        if cache is not None and needed:
+            plan = cache.plan([(blob_id, version, p) for p in sorted(needed)])
+            pages.update({key[2]: page for key, page in plan.hits.items()})
+            owned = sorted(key[2] for key in plan.owned)
+            waits = plan.waits
+        else:
+            owned = sorted(needed)
 
-        # (3) parallel page fetch, aggregated per provider, replica fallback
-        def _fetch(page_index: int, leaf: Optional[TreeNode]) -> None:
+        if owned:
+            fulfilled: Set[int] = set()
+            try:
+                # (2) ONE metadata traversal pass over all missed ranges
+                leaves = traverse_batch(
+                    self.metadata.get_nodes, blob_id, version, total_pages,
+                    _merge_ranges(owned),
+                )
+                # (3) ONE aggregated page fetch per provider
+                fetched = self._fetch_pages(leaves)
+                for p, page in fetched.items():
+                    pages[p] = page
+                    if cache is not None:
+                        # zero pages share one buffer — charge them the LRU
+                        # slot, not a full page, so repeat sparse reads skip
+                        # the metadata walk without evicting real pages
+                        cache.fulfill(
+                            (blob_id, version, p),
+                            page if page is not None else _zero_page(page_size),
+                            charge=None if page is not None else ZERO_PAGE_CHARGE,
+                        )
+                        fulfilled.add(p)
+            except BaseException as err:
+                if cache is not None:
+                    for p in owned:
+                        if p not in fulfilled:
+                            cache.abort((blob_id, version, p), err)
+                raise
+
+        # follower phase: collect pages fetched by concurrent leaders
+        for key, flight in waits.items():
+            pages[key[2]] = cache.wait(key, flight)  # type: ignore[union-attr, arg-type]
+
+        # assemble per-segment outputs from the shared page map
+        outs: List[np.ndarray] = []
+        for offset, size in clamped:
+            out = np.zeros(size, dtype=np.uint8)
+            for p in range(offset // page_size, -(-(offset + size) // page_size)):
+                page = pages.get(p)
+                if page is None:
+                    continue  # implicit zero page
+                page_lo = p * page_size
+                a = max(offset, page_lo)
+                b = min(offset + size, page_lo + page_size)
+                out[a - offset : b - offset] = page[a - page_lo : b - page_lo]
+            outs.append(out)
+        return outs
+
+    def _fetch_pages(
+        self, leaves: Dict[int, Optional[TreeNode]]
+    ) -> Dict[int, Optional[np.ndarray]]:
+        """Fetch all leaf pages: one aggregated RPC per primary provider (in
+        parallel), per-page replica fallback if a provider batch fails."""
+        result: Dict[int, Optional[np.ndarray]] = {}
+        by_provider: Dict[int, List[Tuple[int, int, TreeNode]]] = defaultdict(list)
+        for page_index, leaf in leaves.items():
             if leaf is None:
-                return  # implicit zero page
-            base = (page_index - first_page) * page_size
-            last_err: Optional[Exception] = None
-            for pid, key in leaf.all_page_refs():
-                try:
-                    page = self.provider_manager.get_provider(pid).get_page(key)
-                    self.stats.record(pid, 1, page.nbytes)
-                    out[base : base + page_size] = page
-                    return
-                except (ProviderFailed, KeyError) as err:
-                    last_err = err
-            raise last_err if last_err else KeyError(f"page {page_index} unavailable")
+                result[page_index] = None  # implicit zero page
+            else:
+                pid, key = leaf.page  # type: ignore[misc]
+                by_provider[pid].append((page_index, key, leaf))
 
-        futures = [self._pool.submit(_fetch, idx, leaf) for idx, leaf in leaves]
-        for f in futures:
-            f.result()
+        def _get_batch(
+            pid: int, items: List[Tuple[int, int, TreeNode]]
+        ) -> Optional[Dict[int, np.ndarray]]:
+            try:
+                provider = self.provider_manager.get_provider(pid)
+                fetched = provider.get_pages([key for _, key, _ in items])
+            except (ProviderFailed, KeyError):
+                return None  # provider down/deregistered: caller falls back
+            self.stats.record_data(pid, len(items), sum(pg.nbytes for pg in fetched))
+            return {p: pg for (p, _, _), pg in zip(items, fetched)}
 
-        lo = offset_bytes - first_page * page_size
-        return ReadResult(latest, out[lo : lo + size_bytes])
+        batches = list(by_provider.items())
+        futures = [self._pool.submit(_get_batch, pid, items) for pid, items in batches]
+        fallback: List[Tuple[int, TreeNode, int]] = []
+        for (pid, items), f in zip(batches, futures):
+            got = f.result()
+            if got is None:
+                fallback.extend((p, leaf, pid) for p, _, leaf in items)
+            else:
+                result.update(got)
+        if fallback:
+            # replica fallback in parallel, skipping the observed-dead primary
+            fb = [
+                self._pool.submit(self._fetch_single, p, leaf, skip)
+                for p, leaf, skip in fallback
+            ]
+            for (p, _, _), f in zip(fallback, fb):
+                result[p] = f.result()
+        return result
+
+    def _fetch_single(
+        self, page_index: int, leaf: TreeNode, skip_pid: Optional[int] = None
+    ) -> np.ndarray:
+        refs = [r for r in leaf.all_page_refs() if r[0] != skip_pid]
+        last_err: Optional[Exception] = None
+        for pid, key in refs or leaf.all_page_refs():
+            try:
+                page = self.provider_manager.get_provider(pid).get_page(key)
+                self.stats.record_data(pid, 1, page.nbytes)
+                return page
+            except (ProviderFailed, KeyError) as err:
+                last_err = err
+        raise last_err if last_err else KeyError(f"page {page_index} unavailable")
 
     def write_unaligned(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
         """WRITE at arbitrary byte offset/size via client-side read-modify-write
         of the boundary pages (the paper's API allows arbitrary segments; pages
         are the storage granularity, so partial boundary pages are merged from
-        the latest published version before patching).
+        the latest published version before patching). Both boundary pages are
+        fetched in one :meth:`readv` call, so hot boundary pages come straight
+        from the page cache.
 
         Note the concurrency caveat the paper implies: the boundary merge reads
         the LATEST version, so two concurrent unaligned writers sharing a
@@ -202,10 +419,14 @@ class BlobStore:
         if lo == offset_bytes and hi == offset_bytes + buffer.size:
             return self.write(blob_id, buffer, offset_bytes)
         merged = np.zeros(hi - lo, np.uint8)
+        boundary_segs: List[Tuple[int, int]] = []
         if lo < offset_bytes:  # left boundary page
-            merged[:page_size] = self.read(blob_id, None, lo, page_size).data
+            boundary_segs.append((lo, page_size))
         if hi > offset_bytes + buffer.size:  # right boundary page
-            merged[-page_size:] = self.read(blob_id, None, hi - page_size, page_size).data
+            boundary_segs.append((hi - page_size, page_size))
+        boundary = self.readv(blob_id, None, boundary_segs)
+        for (seg_off, _), data in zip(boundary_segs, boundary):
+            merged[seg_off - lo : seg_off - lo + page_size] = data
         merged[offset_bytes - lo : offset_bytes - lo + buffer.size] = buffer
         return self.write(blob_id, merged, lo)
 
@@ -214,7 +435,8 @@ class BlobStore:
         """Drop all tree nodes / pages unreachable from ``keep_versions``.
 
         Must be invoked only when no concurrent accesses target the dropped
-        versions (the paper's "ordered by the client" semantics). Returns
+        versions (the paper's "ordered by the client" semantics). Cached pages
+        of dropped versions are purged as well. Returns
         (nodes_freed, pages_freed).
         """
         total_pages, _ = self.version_manager.blob_info(blob_id)
@@ -244,14 +466,13 @@ class BlobStore:
         # Enumerate every stored node of this blob and drop unreachable ones.
         doomed_nodes: List[NodeKey] = []
         doomed_pages: Set[PageRef] = set()
-        for shard in self.metadata.shards:
-            for key, node in list(shard._nodes.items()):
-                if key.blob_id != blob_id or key.version > latest:
-                    continue  # never GC in-flight (unpublished) versions
-                if key not in reachable_nodes:
-                    doomed_nodes.append(key)
-                    if node.is_leaf:
-                        doomed_pages.update(ref for ref in node.all_page_refs())
+        for key, node in self.metadata.iter_nodes(blob_id):
+            if key.version > latest:
+                continue  # never GC in-flight (unpublished) versions
+            if key not in reachable_nodes:
+                doomed_nodes.append(key)
+                if node.is_leaf:
+                    doomed_pages.update(ref for ref in node.all_page_refs())
         doomed_pages -= reachable_pages
         self.metadata.delete_nodes(doomed_nodes)
         by_provider: Dict[int, List[int]] = {}
@@ -260,6 +481,8 @@ class BlobStore:
         for pid, keys in by_provider.items():
             self.provider_manager.get_provider(pid).delete_pages(keys)
         self.provider_manager.release(sorted(doomed_pages))
+        if self.page_cache is not None:
+            self.page_cache.drop_versions(blob_id, set(keep) | {ZERO_VERSION})
         return len(doomed_nodes), len(doomed_pages)
 
     # -- introspection ------------------------------------------------------------

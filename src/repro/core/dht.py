@@ -29,26 +29,61 @@ class ProviderFailed(RuntimeError):
 
 @dataclasses.dataclass
 class TrafficStats:
-    """Thread-safe accounting of logical RPCs / bytes per destination."""
+    """Thread-safe accounting of logical RPCs / bytes per destination.
+
+    ``rpcs`` counts logical messages, ``aggregated_rpcs`` counts the real
+    wire round-trips after the paper's client-side aggregation (§V.A) —
+    broken down into ``data_rounds`` (data providers) and ``metadata_rounds``
+    (metadata DHT shards). ``cache_hits``/``cache_misses`` track the client
+    page cache, whose hits issue no RPC at all.
+    """
 
     rpcs: int = 0
     aggregated_rpcs: int = 0
     bytes_sent: int = 0
+    data_rounds: int = 0
+    metadata_rounds: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
     per_dest_bytes: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock, repr=False)
 
     def record(self, dest: int, n_messages: int, n_bytes: int) -> None:
         with self._lock:
-            self.rpcs += n_messages
-            self.aggregated_rpcs += 1
-            self.bytes_sent += n_bytes
-            self.per_dest_bytes[dest] += n_bytes
+            self._record_locked(dest, n_messages, n_bytes)
+
+    def _record_locked(self, dest: int, n_messages: int, n_bytes: int) -> None:
+        self.rpcs += n_messages
+        self.aggregated_rpcs += 1
+        self.bytes_sent += n_bytes
+        self.per_dest_bytes[dest] += n_bytes
+
+    def record_data(self, dest: int, n_messages: int, n_bytes: int) -> None:
+        """One aggregated round-trip to a data provider."""
+        with self._lock:
+            self._record_locked(dest, n_messages, n_bytes)
+            self.data_rounds += 1
+
+    def record_metadata(self, dest: int, n_messages: int, n_bytes: int) -> None:
+        """One aggregated round-trip to a metadata shard."""
+        with self._lock:
+            self._record_locked(dest, n_messages, n_bytes)
+            self.metadata_rounds += 1
+
+    def record_cache(self, hits: int, misses: int) -> None:
+        with self._lock:
+            self.cache_hits += hits
+            self.cache_misses += misses
 
     def reset(self) -> None:
         with self._lock:
             self.rpcs = 0
             self.aggregated_rpcs = 0
             self.bytes_sent = 0
+            self.data_rounds = 0
+            self.metadata_rounds = 0
+            self.cache_hits = 0
+            self.cache_misses = 0
             self.per_dest_bytes.clear()
 
 
@@ -78,6 +113,24 @@ class MetadataShard:
         if self.failed:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         return self._nodes.get(key)
+
+    def get_many(self, keys: Sequence[NodeKey]) -> Dict[NodeKey, TreeNode]:
+        """One aggregated RPC: every found node for ``keys`` (missing keys are
+        simply absent from the result — the caller decides whether to fall
+        back to a replica or error)."""
+        if self.failed:
+            raise ProviderFailed(f"metadata shard {self.shard_id} is down")
+        out: Dict[NodeKey, TreeNode] = {}
+        for key in keys:
+            node = self._nodes.get(key)
+            if node is not None:
+                out[key] = node
+        return out
+
+    def nodes_of_blob(self, blob_id: int) -> Dict[NodeKey, TreeNode]:
+        if self.failed:
+            raise ProviderFailed(f"metadata shard {self.shard_id} is down")
+        return {k: n for k, n in list(self._nodes.items()) if k.blob_id == blob_id}
 
     def delete_many(self, keys: Iterable[NodeKey]) -> None:
         for key in keys:
@@ -117,14 +170,14 @@ class MetadataDHT:
                 by_shard[sid].append(node)
         for sid, batch in by_shard.items():
             self.shards[sid].put_many(batch)
-            self.stats.record(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+            self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
 
     def get_node(self, key: NodeKey) -> TreeNode:
         last_err: Optional[Exception] = None
         for sid in self._replica_ids(key):
             try:
                 node = self.shards[sid].get(key)
-                self.stats.record(sid, 1, NODE_WIRE_BYTES)
+                self.stats.record_metadata(sid, 1, NODE_WIRE_BYTES)
             except ProviderFailed as err:  # replica fallback
                 last_err = err
                 continue
@@ -133,6 +186,50 @@ class MetadataDHT:
         if last_err is not None:
             raise last_err
         raise KeyError(f"metadata node not found: {key}")
+
+    def get_nodes(self, keys: Sequence[NodeKey]) -> Dict[NodeKey, TreeNode]:
+        """Batched node fetch: ONE aggregated RPC per (home) shard for the
+        whole key set, with per-key replica fallback rounds on shard failure
+        or missing replicas. Raises ``KeyError`` if any key is nowhere."""
+        found: Dict[NodeKey, TreeNode] = {}
+        pending = list(dict.fromkeys(keys))
+        last_err: Optional[ProviderFailed] = None
+        for round_idx in range(self.replication):
+            if not pending:
+                break
+            by_shard: Dict[int, List[NodeKey]] = defaultdict(list)
+            for key in pending:
+                by_shard[self._replica_ids(key)[round_idx]].append(key)
+            still_missing: List[NodeKey] = []
+            for sid, batch in by_shard.items():
+                try:
+                    got = self.shards[sid].get_many(batch)
+                    self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+                except ProviderFailed as err:
+                    last_err = err
+                    still_missing.extend(batch)
+                    continue
+                found.update(got)
+                still_missing.extend(k for k in batch if k not in got)
+            pending = still_missing
+        if pending:
+            if last_err is not None:  # an outage, not a lost node
+                raise last_err
+            raise KeyError(f"metadata nodes not found: {pending[:3]}" +
+                           (f" (+{len(pending) - 3} more)" if len(pending) > 3 else ""))
+        return found
+
+    def iter_nodes(self, blob_id: int):
+        """Iterate ``(key, node)`` over every stored node of ``blob_id``,
+        deduplicated across replicas (public API for GC — callers must not
+        reach into shard internals)."""
+        merged: Dict[NodeKey, TreeNode] = {}
+        for shard in self.shards:
+            try:
+                merged.update(shard.nodes_of_blob(blob_id))
+            except ProviderFailed:
+                continue  # replicas on live shards still cover its nodes
+        return iter(merged.items())
 
     def delete_nodes(self, keys: Iterable[NodeKey]) -> None:
         by_shard: Dict[int, List[NodeKey]] = defaultdict(list)

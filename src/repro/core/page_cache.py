@@ -1,0 +1,204 @@
+"""Client-side versioned page cache (scaling layer over the paper's design).
+
+The paper's key property — a *published* version is immutable, its metadata
+tree and data pages can never change (§III.C) — makes client-side caching
+trivially coherent: a page keyed by ``(blob_id, version, page_index)`` is
+valid forever, so the cache needs no invalidation protocol at all. Snapshot
+re-reads (the supernovae detector differencing overlapping sky windows) then
+hit RAM instead of issuing provider RPCs.
+
+Two mechanisms live here:
+
+* a thread-safe, byte-budgeted LRU over immutable pages;
+* *single-flight* miss handling: when many concurrent readers miss on the
+  same page, exactly one of them (the *leader*) fetches it from the provider
+  while the others wait on the in-flight entry — N concurrent readers of a
+  cold hot-window cost one provider fetch per page, not N.
+
+Only pages of published versions may enter the cache — the
+:class:`~repro.core.blob.BlobStore` read path guarantees this by rejecting
+reads of unpublished versions before the cache is ever consulted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dht import TrafficStats
+
+#: Cache key: (blob_id, version, page_index).
+CacheKey = Tuple[int, int, int]
+
+#: Budget charge for an implicit zero page: all zero-page entries share one
+#: read-only buffer, so their marginal memory cost is just the LRU slot —
+#: caching them skips the metadata re-traversal on repeat sparse reads
+#: without letting them evict genuinely expensive provider-fetched pages.
+ZERO_PAGE_CHARGE = 64
+
+
+class _Flight:
+    """An in-flight fetch: leader fulfills/aborts, followers wait."""
+
+    __slots__ = ("event", "page", "error")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.page: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+
+
+@dataclasses.dataclass
+class FetchPlan:
+    """Partition of a lookup batch: RAM hits, keys this caller must fetch
+    (it is the single-flight leader for them), and keys being fetched by
+    concurrent leaders (wait on the flight)."""
+
+    hits: Dict[CacheKey, np.ndarray]
+    owned: List[CacheKey]
+    waits: Dict[CacheKey, "_Flight"]
+
+
+class PageCache:
+    """Byte-budgeted LRU of immutable published pages, with single-flight."""
+
+    def __init__(self, capacity_bytes: int, stats: Optional[TrafficStats] = None) -> None:
+        if capacity_bytes <= 0:
+            raise ValueError("capacity_bytes must be positive")
+        self.capacity_bytes = capacity_bytes
+        self.stats = stats or TrafficStats()
+        self._lock = threading.Lock()
+        #: key -> (page, budget charge); the charge is usually page.nbytes
+        #: but nominal for entries sharing a buffer (zero pages)
+        self._lru: "OrderedDict[CacheKey, Tuple[np.ndarray, int]]" = OrderedDict()
+        self._inflight: Dict[CacheKey, _Flight] = {}
+        self._used_bytes = 0
+        self.evictions = 0
+
+    # -- bulk lookup (the readv path) ------------------------------------------
+    def plan(self, keys: Sequence[CacheKey]) -> FetchPlan:
+        """Classify ``keys`` in one lock pass. The caller MUST eventually
+        :meth:`fulfill` or :meth:`abort` every key in ``plan.owned`` — even on
+        error paths — or concurrent waiters block forever."""
+        hits: Dict[CacheKey, np.ndarray] = {}
+        owned: List[CacheKey] = []
+        owned_set: set = set()
+        waits: Dict[CacheKey, _Flight] = {}
+        with self._lock:
+            for key in keys:
+                # a duplicate key must not land in waits for a flight this
+                # very call created (self-deadlock for callers that drain
+                # waits before fulfilling owned)
+                if key in hits or key in waits or key in owned_set:
+                    continue
+                entry = self._lru.get(key)
+                if entry is not None:
+                    self._lru.move_to_end(key)
+                    hits[key] = entry[0]
+                    continue
+                flight = self._inflight.get(key)
+                if flight is not None:
+                    waits[key] = flight
+                else:
+                    self._inflight[key] = _Flight()
+                    owned.append(key)
+                    owned_set.add(key)
+        self.stats.record_cache(hits=len(hits), misses=len(owned) + len(waits))
+        return FetchPlan(hits=hits, owned=owned, waits=waits)
+
+    def fulfill(self, key: CacheKey, page: np.ndarray, charge: Optional[int] = None) -> None:
+        """Leader completed the fetch: cache the page, wake waiters.
+
+        ``charge`` overrides the budget accounting for this entry (default:
+        ``page.nbytes``) — pass :data:`ZERO_PAGE_CHARGE` for implicit zero
+        pages, whose buffer is shared across all entries."""
+        page = page.view()
+        page.flags.writeable = False  # cached pages are immutable
+        with self._lock:
+            self._insert(key, page, page.nbytes if charge is None else charge)
+            flight = self._inflight.pop(key, None)
+        if flight is not None:
+            flight.page = page
+            flight.event.set()
+
+    def abort(self, key: CacheKey, error: BaseException) -> None:
+        """Leader failed: propagate the error to waiters, cache nothing."""
+        with self._lock:
+            flight = self._inflight.pop(key, None)
+        if flight is not None:
+            flight.error = error
+            flight.event.set()
+
+    def wait(self, key: CacheKey, flight: _Flight, timeout: Optional[float] = None) -> np.ndarray:
+        """Follower path: block until the leader resolves ``key``."""
+        if not flight.event.wait(timeout):
+            raise TimeoutError(f"page fetch for {key} did not complete")
+        if flight.error is not None:
+            raise flight.error
+        assert flight.page is not None
+        return flight.page
+
+    # -- simple single-page API (tests, boundary merges) -----------------------
+    def get(self, key: CacheKey) -> Optional[np.ndarray]:
+        with self._lock:
+            entry = self._lru.get(key)
+            if entry is None:
+                return None
+            self._lru.move_to_end(key)
+            return entry[0]
+
+    def put(self, key: CacheKey, page: np.ndarray) -> None:
+        page = page.view()
+        page.flags.writeable = False
+        with self._lock:
+            self._insert(key, page, page.nbytes)
+
+    # -- internals --------------------------------------------------------------
+    def _insert(self, key: CacheKey, page: np.ndarray, charge: int) -> None:
+        if charge > self.capacity_bytes:
+            return  # entry can never fit; don't wipe the whole cache for it
+        old = self._lru.pop(key, None)
+        if old is not None:
+            self._used_bytes -= old[1]
+        self._lru[key] = (page, charge)
+        self._used_bytes += charge
+        while self._used_bytes > self.capacity_bytes:
+            _, (_, evicted_charge) = self._lru.popitem(last=False)
+            self._used_bytes -= evicted_charge
+            self.evictions += 1
+
+    # -- introspection -----------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        with self._lock:
+            return key in self._lru
+
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used_bytes
+
+    def cached_versions(self, blob_id: int) -> List[int]:
+        """Distinct versions of ``blob_id`` with at least one cached page."""
+        with self._lock:
+            return sorted({k[1] for k in self._lru if k[0] == blob_id})
+
+    def drop_versions(self, blob_id: int, keep: set) -> int:
+        """GC coherence hook: purge cached pages of ``blob_id`` whose version
+        is not in ``keep``. Returns the number of pages dropped."""
+        with self._lock:
+            doomed = [k for k in self._lru if k[0] == blob_id and k[1] not in keep]
+            for key in doomed:
+                self._used_bytes -= self._lru.pop(key)[1]
+            return len(doomed)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._lru.clear()
+            self._used_bytes = 0

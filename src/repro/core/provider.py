@@ -41,6 +41,13 @@ class DataProvider:
             raise ProviderFailed(f"data provider {self.provider_id} is down")
         return self._pages[page_key]
 
+    def get_pages(self, page_keys: Sequence[int]) -> List[np.ndarray]:
+        """One aggregated RPC for many pages (paper §V.A batching). Raises
+        ``KeyError`` on the first missing key — callers fall back per page."""
+        if self.failed:
+            raise ProviderFailed(f"data provider {self.provider_id} is down")
+        return [self._pages[key] for key in page_keys]
+
     def delete_pages(self, page_keys: Sequence[int]) -> None:
         for key in page_keys:
             self._pages.pop(key, None)

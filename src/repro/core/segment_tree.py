@@ -220,6 +220,59 @@ def traverse(
     yield from descend(root_version, 0, total_pages)
 
 
+def traverse_batch(
+    get_nodes: Callable[[Sequence[NodeKey]], "dict[NodeKey, TreeNode]"],
+    blob_id: int,
+    root_version: int,
+    total_pages: int,
+    ranges: Sequence[Tuple[int, int]],
+) -> "dict[int, Optional[TreeNode]]":
+    """Resolve every page of several ``(offset, size)`` page ranges in ONE
+    traversal pass: the tree is walked level-synchronously, and all node
+    fetches of a level go through a single ``get_nodes`` call (which the
+    metadata DHT aggregates into one RPC per shard). This is the metadata
+    half of the batched ``readv`` data plane — N overlapping segments share
+    the path nodes near the root instead of re-fetching them N times.
+
+    Returns ``{page_index: leaf_or_None}`` for exactly the requested pages
+    (``None`` = implicit all-zero page).
+    """
+    ranges = [(o, s) for o, s in ranges if s > 0]
+    out: "dict[int, Optional[TreeNode]]" = {}
+
+    def wanted(o: int, s: int) -> bool:
+        return any(intersects(o, s, ro, rs) for ro, rs in ranges)
+
+    def mark_zero(o: int, s: int) -> None:
+        for ro, rs in ranges:
+            for p in range(max(o, ro), min(o + s, ro + rs)):
+                out[p] = None
+
+    if root_version == ZERO_VERSION:
+        mark_zero(0, total_pages)
+        return out
+
+    frontier: List[Tuple[int, int, int]] = [(root_version, 0, total_pages)]
+    while frontier:
+        nodes = get_nodes([NodeKey(blob_id, v, o, s) for v, o, s in frontier])
+        next_frontier: List[Tuple[int, int, int]] = []
+        for v, o, s in frontier:
+            node = nodes[NodeKey(blob_id, v, o, s)]
+            if node.is_leaf:
+                out[o] = node
+                continue
+            half = s // 2
+            for child_v, co in ((node.left_version, o), (node.right_version, o + half)):
+                if not wanted(co, half):
+                    continue
+                if child_v == ZERO_VERSION:
+                    mark_zero(co, half)
+                else:
+                    next_frontier.append((child_v, co, half))
+        frontier = next_frontier
+    return out
+
+
 def count_write_nodes(total_pages: int, write_offset: int, write_size: int) -> int:
     """Number of metadata nodes a WRITE of ``write_size`` pages creates.
 

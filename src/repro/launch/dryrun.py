@@ -152,7 +152,7 @@ def analyze(lowered, compiled, meta) -> Dict[str, Any]:
 
     n_dev = meta["n_devices"]
     mem = compiled.memory_analysis()
-    xla_cost = compiled.cost_analysis() or {}
+    xla_cost = hlo_cost.normalize_cost_analysis(compiled.cost_analysis())
     cost = hlo_cost.analyze_hlo(compiled.as_text())
     hlo_flops = cost.flops  # per-device (post-SPMD module), trip-count-aware
     hlo_bytes = cost.bytes

@@ -198,6 +198,14 @@ def _dot_flops(comp: Computation, op: Op) -> int:
     return 2 * op.result_elems() * k
 
 
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns ``list[dict]`` on some jax
+    versions and ``dict`` (or ``None``) on others — always yield a dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 @dataclasses.dataclass
 class HloCost:
     flops: float

@@ -15,7 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map
 
 from repro.kernels import ops
 from repro.models.config import ModelConfig

@@ -26,7 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map
 
 from repro.models.config import ModelConfig
 from repro.models.modules import dense_init

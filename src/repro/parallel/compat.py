@@ -1,0 +1,43 @@
+"""Version-portable ``shard_map`` import.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+top-level namespace, and its replication-check kwarg was renamed from
+``check_rep`` to ``check_vma`` along the way. Model code imports
+:func:`shard_map` from here and always passes the new-style ``check_vma``
+kwarg; on older jax the shim forwards it as ``check_rep``.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+try:  # jax >= 0.6 style
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KWARG = "check_vma" if "check_vma" in _PARAMS else (
+    "check_rep" if "check_rep" in _PARAMS else None
+)
+
+
+def shard_map(f: Callable[..., Any], **kwargs: Any) -> Callable[..., Any]:
+    """Call the installed jax's shard_map, translating the check kwarg."""
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None and _CHECK_KWARG is not None:
+        kwargs[_CHECK_KWARG] = check
+    return _shard_map(f, **kwargs)
+
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` with a pre-0.5 fallback (psum of ones)."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+__all__ = ["shard_map", "axis_size"]

@@ -19,7 +19,7 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.parallel.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.axisinfo import AxisInfo

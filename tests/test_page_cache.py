@@ -1,0 +1,323 @@
+"""Versioned page cache + batched readv/writev data plane tests."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BlobStore, PageCache, ProviderFailed, TrafficStats
+from repro.core.provider import DataProvider
+
+PAGE = 64
+
+
+def make_store(**kw):
+    kw.setdefault("n_data_providers", 4)
+    kw.setdefault("n_metadata_providers", 4)
+    return BlobStore(**kw)
+
+
+def page(fill, nbytes=PAGE):
+    return np.full(nbytes, fill, np.uint8)
+
+
+# ------------------------------- PageCache unit ------------------------------
+
+
+def test_lru_eviction_respects_byte_budget():
+    cache = PageCache(capacity_bytes=4 * PAGE)
+    for i in range(4):
+        cache.put((0, 1, i), page(i))
+    assert len(cache) == 4 and cache.used_bytes() == 4 * PAGE
+    cache.get((0, 1, 0))  # touch page 0 → page 1 is now LRU
+    cache.put((0, 1, 4), page(4))
+    assert cache.used_bytes() <= 4 * PAGE
+    assert (0, 1, 1) not in cache  # the LRU entry was evicted
+    assert (0, 1, 0) in cache and (0, 1, 4) in cache
+    assert cache.evictions == 1
+
+
+def test_oversized_page_never_cached():
+    cache = PageCache(capacity_bytes=PAGE)
+    cache.put((0, 1, 0), page(1))
+    cache.put((0, 1, 1), page(2, nbytes=2 * PAGE))  # exceeds whole budget
+    assert (0, 1, 1) not in cache
+    assert (0, 1, 0) in cache  # and it did not wipe the existing entry
+
+
+def test_cached_pages_are_immutable():
+    cache = PageCache(capacity_bytes=4 * PAGE)
+    cache.put((0, 1, 0), page(7))
+    got = cache.get((0, 1, 0))
+    with pytest.raises(ValueError):
+        got[0] = 99
+
+
+def test_plan_deduplicates_keys_within_one_call():
+    """A duplicate key in one plan() must not appear in waits for the flight
+    that same call created (it would self-deadlock a waits-first caller)."""
+    cache = PageCache(capacity_bytes=4 * PAGE)
+    plan = cache.plan([(0, 1, 0), (0, 1, 0), (0, 1, 0)])
+    assert plan.owned == [(0, 1, 0)]
+    assert not plan.waits and not plan.hits
+    cache.fulfill((0, 1, 0), page(1))
+    plan2 = cache.plan([(0, 1, 0), (0, 1, 0)])
+    assert list(plan2.hits) == [(0, 1, 0)] and not plan2.owned
+
+
+def test_stats_count_hits_and_misses():
+    stats = TrafficStats()
+    cache = PageCache(capacity_bytes=4 * PAGE, stats=stats)
+    plan = cache.plan([(0, 1, 0), (0, 1, 1)])
+    assert stats.cache_misses == 2 and stats.cache_hits == 0
+    for key in plan.owned:
+        cache.fulfill(key, page(1))
+    cache.plan([(0, 1, 0), (0, 1, 1), (0, 1, 2)])
+    assert stats.cache_hits == 2 and stats.cache_misses == 3
+
+
+# --------------------------- unpublished versions ----------------------------
+
+
+def test_unpublished_versions_never_cached():
+    store = make_store()
+    blob = store.alloc(8 * PAGE, PAGE)
+    store.write(blob, page(1, 8 * PAGE), 0)  # v1 published
+    # simulate an in-flight writer: v2 assigned but never reported
+    store.version_manager.assign_version(blob, 0, 1)
+    with pytest.raises(ValueError, match="not yet published"):
+        store.read(blob, 2, 0, PAGE)
+    store.read(blob, None, 0, 8 * PAGE)  # populates the cache with v1 pages
+    assert store.page_cache is not None
+    assert store.page_cache.cached_versions(blob) == [1]
+    store.close()
+
+
+def test_gc_purges_cache_of_dropped_versions():
+    store = make_store()
+    blob = store.alloc(8 * PAGE, PAGE)
+    store.write(blob, page(1, 8 * PAGE), 0)  # v1
+    store.write(blob, page(2, PAGE), 0)  # v2
+    store.read(blob, 1, 0, 8 * PAGE)
+    store.read(blob, 2, 0, 8 * PAGE)
+    assert store.page_cache.cached_versions(blob) == [1, 2]
+    store.gc(blob, keep_versions=[2])
+    assert store.page_cache.cached_versions(blob) == [2]
+    store.close()
+
+
+# ------------------------------- single-flight -------------------------------
+
+
+def test_concurrent_cold_readers_one_fetch_per_page():
+    store = make_store(max_workers=32)
+    blob = store.alloc(16 * PAGE, PAGE)
+    payload = np.arange(16 * PAGE, dtype=np.uint8) % 251
+    store.write(blob, payload, 0)
+
+    # count every page key fetched from any provider, and slow fetches down
+    # so the reader threads genuinely overlap
+    fetched_keys = []
+    count_lock = threading.Lock()
+    real_get_pages = DataProvider.get_pages
+    slow = threading.Event()
+
+    def counting_get_pages(self, page_keys):
+        with count_lock:
+            fetched_keys.extend(page_keys)
+        slow.wait(0.05)
+        return real_get_pages(self, page_keys)
+
+    n_readers = 8
+    barrier = threading.Barrier(n_readers)
+    results = [None] * n_readers
+    errors = []
+
+    def reader(i):
+        try:
+            barrier.wait()
+            results[i] = store.read(blob, 1, 0, 16 * PAGE).data
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    DataProvider.get_pages = counting_get_pages
+    try:
+        threads = [threading.Thread(target=reader, args=(i,)) for i in range(n_readers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        DataProvider.get_pages = real_get_pages
+
+    assert not errors
+    for r in results:
+        np.testing.assert_array_equal(r, payload)
+    # single-flight: every page fetched exactly once despite 8 cold readers
+    assert len(fetched_keys) == 16
+    assert len(set(fetched_keys)) == 16
+    store.close()
+
+
+# --------------------------- readv / writev plane ----------------------------
+
+
+def test_readv_equals_looped_read():
+    store = make_store(cache_bytes=0)
+    blob = store.alloc(32 * PAGE, PAGE)
+    store.write(blob, np.arange(32 * PAGE, dtype=np.uint8) % 251, 0)
+    segs = [(0, 3 * PAGE), (PAGE + 5, 2 * PAGE), (17, 30), (30 * PAGE, 5 * PAGE)]
+    outs = store.readv(blob, None, segs)
+    for (off, sz), got in zip(segs, outs):
+        np.testing.assert_array_equal(got, store.read(blob, None, off, sz).data)
+    store.close()
+
+
+def test_readv_fewer_rpc_rounds_than_looped_reads():
+    """Acceptance: N overlapping segments cost strictly fewer provider RPC
+    rounds via readv than via N separate read calls."""
+    store = make_store(cache_bytes=0)
+    blob = store.alloc(64 * PAGE, PAGE)
+    store.write(blob, np.arange(64 * PAGE, dtype=np.uint8) % 251, 0)
+    segs = [(i * PAGE, 4 * PAGE) for i in range(0, 32, 2)]  # overlapping windows
+
+    store.stats.reset()
+    for off, sz in segs:
+        store.read(blob, None, off, sz)
+    looped_rounds = store.stats.data_rounds
+
+    store.stats.reset()
+    store.readv(blob, None, segs)
+    readv_rounds = store.stats.data_rounds
+
+    assert readv_rounds < looped_rounds
+    # at most one aggregated get_pages round per data provider
+    assert readv_rounds <= 4
+    store.close()
+
+
+def test_writev_equals_looped_write():
+    a, b = make_store(cache_bytes=0), make_store(cache_bytes=0)
+    blob_a, blob_b = a.alloc(16 * PAGE, PAGE), b.alloc(16 * PAGE, PAGE)
+    patches = [(0, page(1, 2 * PAGE)), (4 * PAGE, page(2, PAGE)), (8 * PAGE, page(3, 4 * PAGE))]
+    versions = a.writev(blob_a, patches)
+    assert versions == [1, 2, 3]
+    for off, buf in patches:
+        b.write(blob_b, buf, off)
+    for v in (1, 2, 3):
+        np.testing.assert_array_equal(
+            a.read(blob_a, v, 0, 16 * PAGE).data, b.read(blob_b, v, 0, 16 * PAGE).data
+        )
+    a.close()
+    b.close()
+
+
+def test_writev_batches_provider_and_metadata_rounds():
+    store = make_store(cache_bytes=0)
+    blob = store.alloc(16 * PAGE, PAGE)
+    patches = [(i * PAGE, page(i + 1)) for i in range(8)]
+
+    store.stats.reset()
+    store.writev(blob, patches)
+    batched_data = store.stats.data_rounds
+    batched_meta = store.stats.metadata_rounds
+    # one aggregated put_pages per data provider, one node batch per shard
+    assert batched_data <= 4
+    assert batched_meta <= 4
+
+    store.stats.reset()
+    for off, buf in [(i * PAGE + 8 * PAGE, page(i)) for i in range(8)]:
+        store.write(blob, buf, off)
+    assert store.stats.data_rounds >= batched_data
+    assert store.stats.metadata_rounds > batched_meta
+    store.close()
+
+
+def test_readv_writev_under_concurrent_writers():
+    """Vectored ops stay equivalent to looped ops while writers churn: a
+    pinned published version read via readv matches page-by-page reads."""
+    store = make_store(max_workers=16)
+    blob = store.alloc(32 * PAGE, PAGE)
+    base = np.arange(32 * PAGE, dtype=np.uint8) % 251
+    store.write(blob, base, 0)
+    stop = threading.Event()
+    errors = []
+
+    def writer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            off = int(rng.integers(0, 16)) * PAGE
+            store.writev(blob, [(off, page(int(rng.integers(1, 255))))])
+
+    writers = [threading.Thread(target=writer, args=(s,)) for s in range(3)]
+    for t in writers:
+        t.start()
+    try:
+        for _ in range(25):
+            v = store.version_manager.latest_published(blob)
+            segs = [(0, 8 * PAGE), (4 * PAGE, 8 * PAGE), (20 * PAGE, 12 * PAGE)]
+            outs = store.readv(blob, v, segs)
+            for (off, sz), got in zip(segs, outs):
+                want = store.read(blob, v, off, sz).data
+                np.testing.assert_array_equal(got, want)
+    except Exception as e:  # pragma: no cover
+        errors.append(e)
+    finally:
+        stop.set()
+        for t in writers:
+            t.join()
+    assert not errors
+    store.close()
+
+
+def test_zero_pages_cached_at_nominal_charge():
+    """Implicit zero pages share one buffer, so they are cached at a nominal
+    budget charge: repeat sparse reads skip the metadata walk entirely, yet
+    zero entries cannot evict genuinely expensive provider-fetched pages."""
+    from repro.core.page_cache import ZERO_PAGE_CHARGE
+
+    store = make_store()
+    blob = store.alloc(64 * PAGE, PAGE)
+    store.write(blob, page(1), 0)  # only page 0 materialized
+    got = store.read(blob, None, 0, 64 * PAGE).data
+    assert (got[:PAGE] == 1).all() and not got[PAGE:].any()
+    assert len(store.page_cache) == 64
+    assert store.page_cache.used_bytes() <= PAGE + 63 * ZERO_PAGE_CHARGE
+    store.stats.reset()
+    again = store.read(blob, None, 0, 64 * PAGE).data  # fully cache-served
+    np.testing.assert_array_equal(again, got)
+    assert store.stats.metadata_rounds == 0 and store.stats.data_rounds == 0
+    store.close()
+
+
+def test_metadata_outage_surfaces_as_provider_failed():
+    """A full metadata outage must raise ProviderFailed (shard down), not
+    KeyError (node lost) — same contract as the single-node get path."""
+    store = make_store(n_metadata_providers=2, cache_bytes=0)
+    blob = store.alloc(8 * PAGE, PAGE)
+    store.write(blob, page(1, 8 * PAGE), 0)
+    store.metadata.fail_shard(0)
+    store.metadata.fail_shard(1)
+    with pytest.raises(ProviderFailed):
+        store.readv(blob, None, [(0, 8 * PAGE)])
+    store.close()
+
+
+# ------------------------------ read clamping --------------------------------
+
+
+def test_read_clamped_at_blob_end_and_oob_rejected():
+    """Regression: a read overlapping the blob's end must clamp (not traverse
+    out-of-bounds tree ranges); a fully out-of-range read must raise."""
+    store = make_store()
+    blob = store.alloc(8 * PAGE, PAGE)
+    payload = np.arange(8 * PAGE, dtype=np.uint8)
+    store.write(blob, payload, 0)
+    got = store.read(blob, None, 6 * PAGE, 10 * PAGE).data  # overlaps the end
+    assert got.size == 2 * PAGE
+    np.testing.assert_array_equal(got, payload[6 * PAGE :])
+    with pytest.raises(ValueError, match="out of range"):
+        store.read(blob, None, 8 * PAGE, PAGE)
+    with pytest.raises(ValueError, match="negative"):
+        store.read(blob, None, -1, PAGE)
+    store.close()
