@@ -7,7 +7,7 @@ as N grows (lock-free design, only the version-number interaction is
 serialized). We measure aggregate and per-client wall-clock bandwidth for
 reads, writes, and a mixed R/W workload.
 
-On top of the paper's sweep, two client-side scaling modes:
+On top of the paper's sweep, three client-side scaling modes:
 
 * ``hot-read`` vs ``cached-read`` — the same hot-window workload (clients
   re-read overlapping windows, the supernovae-detector access pattern) with
@@ -16,20 +16,62 @@ On top of the paper's sweep, two client-side scaling modes:
 * ``readv`` — each iteration fetches K overlapping segments in ONE vectored
   call: shared pages are deduplicated and each data provider sees one
   aggregated RPC, so ``data_rounds`` collapses vs K separate reads.
+* ``skew-read`` vs ``skew-read-primary`` — a zipf-style skewed read workload
+  (most reads hammer a few hot pages) against providers with finite service
+  bandwidth (``page_service_seconds``). ``skew-read-primary`` pins every
+  fetch to the page's primary provider (no hot replication, no spreading):
+  aggregate bandwidth collapses to the few providers holding the hot pages.
+  ``skew-read`` turns on the :class:`~repro.core.ReplicaBalancer` — hot pages
+  are promoted onto extra providers and fetches spread across replicas — and
+  recovers the lost aggregate bandwidth (BlobSeer-style dynamic replication).
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import List
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.paper_sky import CONFIG as SKY
-from repro.core import BlobStore
+from repro.core import BalancerConfig, BlobStore
 
-MODES = ("read", "write", "mixed", "hot-read", "cached-read", "readv")
+MODES = ("read", "write", "mixed", "hot-read", "cached-read", "readv",
+         "skew-read-primary", "skew-read")
+
+#: skew workload shape: HOT_FRACTION of reads land on SKEW_HOT_PAGES pages
+SKEW_HOT_PAGES = 2
+SKEW_WINDOW_PAGES = 64
+HOT_FRACTION = 0.9
+#: per-page provider service time modelling finite provider bandwidth —
+#: the resource hot-page replication spreads (skew modes only)
+SKEW_SERVICE_SECONDS = 0.01
+#: promoted copies per hot page: spread each hot page over up to 10 providers
+SKEW_MAX_EXTRA_REPLICAS = 9
+
+
+def _make_store(mode: str, n_providers: int) -> BlobStore:
+    if mode.startswith("skew-read"):
+        replicate = mode == "skew-read"
+        return BlobStore(
+            n_data_providers=n_providers, n_metadata_providers=n_providers,
+            max_workers=4 * n_providers, cache_bytes=0,
+            replica_spread=replicate, hot_replicas=replicate,
+            balancer_config=BalancerConfig(
+                hot_threshold=4, skew_ratio=1.2, check_interval=16,
+                max_extra_replicas=min(SKEW_MAX_EXTRA_REPLICAS, n_providers - 1),
+                max_promotions_per_pass=8,
+            ),
+            page_service_seconds=SKEW_SERVICE_SECONDS,
+        )
+    # the cache is the measured subject of cached-read; every other mode
+    # runs uncached so the paper's baseline stays the baseline
+    cache_bytes = (128 << 20) if mode == "cached-read" else 0
+    return BlobStore(
+        n_data_providers=n_providers, n_metadata_providers=n_providers,
+        max_workers=4 * n_providers, cache_bytes=cache_bytes,
+    )
 
 
 def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
@@ -37,36 +79,54 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
     rows = []
     for mode in modes:
         for n_clients in n_clients_list:
-            # the cache is the measured subject of cached-read; every other
-            # mode runs uncached so the paper's baseline stays the baseline
-            cache_bytes = (128 << 20) if mode == "cached-read" else 0
-            store = BlobStore(
-                n_data_providers=n_providers, n_metadata_providers=n_providers,
-                max_workers=4 * n_providers, cache_bytes=cache_bytes,
+            store = _make_store(mode, n_providers)
+            # skew modes allocate a window-sized blob: they measure data-plane
+            # spreading under provider service limits, so the metadata depth
+            # of the paper's 1 TB blob would only add identical CPU to both
+            # sides of the comparison
+            blob_bytes = (
+                SKEW_WINDOW_PAGES * page_size
+                if mode.startswith("skew-read")
+                else SKY.blob_size
             )
-            blob = store.alloc(SKY.blob_size, page_size)
+            blob = store.alloc(blob_bytes, page_size)
             # pre-populate the hot window so reads hit real pages; the
             # cache-demo modes re-read a (smaller) fully-prefilled window
             hot = SKY.hot_interval
             if mode in ("hot-read", "cached-read", "readv"):
                 hot = min(hot, 64 << 20)
+            if mode.startswith("skew-read"):
+                hot = SKEW_WINDOW_PAGES * page_size
             init = np.ones(seg_bytes, np.uint8)
-            prefill = hot if mode in ("hot-read", "cached-read", "readv") else min(
-                hot, seg_bytes * n_clients * iters
+            fully_prefilled = mode.startswith("skew-read") or mode in (
+                "hot-read", "cached-read", "readv"
             )
-            store.writev(blob, [(off, init) for off in range(0, prefill, seg_bytes)])
+            prefill = hot if fully_prefilled else min(hot, seg_bytes * n_clients * iters)
+            store.writev(blob, [(off, init[: min(seg_bytes, prefill - off)])
+                               for off in range(0, prefill, seg_bytes)])
 
             barrier = threading.Barrier(n_clients)
             times: List[float] = [0.0] * n_clients
             bytes_moved: List[int] = [0] * n_clients
+            # skew modes run longer so the adaptive promotion warmup is a
+            # small fraction of the measured window
+            mode_iters = iters * 2 if mode.startswith("skew-read") else iters
 
             def client(cid: int) -> None:
                 buf = np.full(seg_bytes, cid + 1, np.uint8)
+                rng = np.random.default_rng(1234 + cid)
                 moved = 0
                 barrier.wait()
                 t0 = time.perf_counter()
-                for i in range(iters):
-                    if mode in ("hot-read", "cached-read"):
+                for i in range(mode_iters):
+                    if mode.startswith("skew-read"):
+                        # zipf-style skew: most reads hit a tiny hot page set
+                        if rng.random() < HOT_FRACTION:
+                            p = int(rng.integers(SKEW_HOT_PAGES))
+                        else:
+                            p = int(rng.integers(SKEW_WINDOW_PAGES))
+                        moved += store.read(blob, None, p * page_size, page_size).data.size
+                    elif mode in ("hot-read", "cached-read"):
                         # detector re-read pattern: each client cycles over a
                         # few half-overlapping windows that also overlap its
                         # neighbours' — repeat pages dominate
@@ -100,6 +160,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 t.join()
             per_client = [b / t / 1e6 for b, t in zip(bytes_moved, times)]  # MB/s
             hits, misses = store.stats.cache_hits, store.stats.cache_misses
+            bal = store.replica_balancer
             rows.append(dict(
                 mode=mode, clients=n_clients,
                 per_client_MBps=float(np.mean(per_client)),
@@ -107,22 +168,31 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 aggregate_MBps=float(sum(per_client)),
                 data_rounds=store.stats.data_rounds,
                 cache_hit_rate=hits / (hits + misses) if hits + misses else 0.0,
+                promotions=bal.promotions if bal is not None else 0,
             ))
             store.close()
     return rows
 
 
-def main() -> List[str]:
-    rows = run()
-    out = ["mode,clients,per_client_MBps,min_client_MBps,aggregate_MBps,"
-           "data_rounds,cache_hit_rate"]
+CSV_HEADER = ("mode,clients,per_client_MBps,min_client_MBps,aggregate_MBps,"
+              "data_rounds,cache_hit_rate,promotions")
+
+
+def to_csv(rows: Sequence[dict]) -> List[str]:
+    out = [CSV_HEADER]
     for r in rows:
         out.append(
             f"{r['mode']},{r['clients']},{r['per_client_MBps']:.1f},"
             f"{r['min_client_MBps']:.1f},{r['aggregate_MBps']:.1f},"
-            f"{r['data_rounds']},{r['cache_hit_rate']:.2f}"
+            f"{r['data_rounds']},{r['cache_hit_rate']:.2f},{r['promotions']}"
         )
     return out
+
+
+def main(n_clients_list=(1, 2, 4, 8, 16), iters: int = 20,
+         modes: Optional[Sequence[str]] = None) -> List[str]:
+    return to_csv(run(n_clients_list=n_clients_list, iters=iters,
+                      modes=tuple(modes) if modes else MODES))
 
 
 if __name__ == "__main__":

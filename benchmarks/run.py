@@ -1,20 +1,70 @@
 """Benchmark driver: one section per paper table/figure + beyond-paper runs.
 
-Usage: PYTHONPATH=src python -m benchmarks.run
-Prints ``name,...`` CSV blocks per benchmark.
+Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [--out PATH]
+
+Prints ``name,...`` CSV blocks per benchmark and writes the concurrent-
+throughput rows to ``BENCH_concurrent.json`` (machine-readable, git-rev
+stamped) so the perf trajectory is tracked across PRs. ``--smoke`` runs only
+the concurrent-throughput sweep with tiny parameters (2 clients, 2 iters) —
+the CI guard that keeps every bench mode importable and runnable.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+import subprocess
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def section(title: str) -> None:
     print(f"\n### {title}", flush=True)
 
 
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except (subprocess.CalledProcessError, OSError):
+        return "unknown"
+
+
+def write_bench_json(rows, path: pathlib.Path) -> None:
+    payload = {
+        "bench": "concurrent_throughput",
+        "git_rev": git_rev(),
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nwrote {path}", flush=True)
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny-parameter run of the concurrent sweep only")
+    parser.add_argument("--out", type=pathlib.Path,
+                        default=REPO_ROOT / "BENCH_concurrent.json",
+                        help="where to write the concurrent-throughput JSON")
+    args = parser.parse_args()
     t0 = time.time()
+
+    from benchmarks import concurrent_throughput
+
+    if args.smoke:
+        section("fig3c_concurrent_throughput (smoke: 2 clients, 2 iters)")
+        rows = concurrent_throughput.run(n_clients_list=(2,), iters=2)
+        for line in concurrent_throughput.to_csv(rows):
+            print(line)
+        write_bench_json(rows, args.out)
+        print(f"\ntotal benchmark time: {time.time() - t0:.1f}s", flush=True)
+        return
 
     section("fig3ab_metadata_overhead (paper Fig. 3a/3b)")
     from benchmarks import metadata_overhead
@@ -23,10 +73,10 @@ def main() -> None:
         print(line)
 
     section("fig3c_concurrent_throughput (paper Fig. 3c)")
-    from benchmarks import concurrent_throughput
-
-    for line in concurrent_throughput.main():
+    rows = concurrent_throughput.run()
+    for line in concurrent_throughput.to_csv(rows):
         print(line)
+    write_bench_json(rows, args.out)
 
     section("serving_throughput (beyond-paper: paged KV + prefix cache)")
     from benchmarks import serving_throughput

@@ -9,8 +9,10 @@ from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
 from repro.core.provider import DataProvider, ProviderManager
+from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
 from repro.core.segment_tree import (
     BorderLink,
+    IntervalIndex,
     NodeKey,
     PageRef,
     TreeNode,
@@ -38,7 +40,10 @@ __all__ = [
     "flatten",
     "DataProvider",
     "ProviderManager",
+    "BalancerConfig",
+    "ReplicaBalancer",
     "BorderLink",
+    "IntervalIndex",
     "NodeKey",
     "PageRef",
     "TreeNode",

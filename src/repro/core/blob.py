@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import random
 import threading
 from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
@@ -48,6 +49,7 @@ import numpy as np
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
 from repro.core.provider import DataProvider, ProviderManager
+from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
 from repro.core.segment_tree import (
     NodeKey,
     PageRef,
@@ -97,28 +99,47 @@ class BlobStore:
         metadata_replication: int = 1,
         max_workers: int = 8,
         cache_bytes: int = DEFAULT_CACHE_BYTES,
+        replica_spread: bool = True,
+        hot_replicas: bool = True,
+        balancer_config: Optional[BalancerConfig] = None,
+        page_service_seconds: float = 0.0,
     ) -> None:
         self.stats = TrafficStats()
         self.version_manager = VersionManager()
         self.provider_manager = ProviderManager(replication=page_replication, stats=self.stats)
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self.metadata = MetadataDHT(
-            n_metadata_providers, replication=metadata_replication, stats=self.stats
+            n_metadata_providers,
+            replication=metadata_replication,
+            stats=self.stats,
+            executor=self._pool,
         )
         self.page_cache: Optional[PageCache] = (
             PageCache(cache_bytes, stats=self.stats) if cache_bytes else None
         )
+        #: pick the least-read-loaded replica per page instead of always the
+        #: primary (the knob the skew-read benchmark flips)
+        self.replica_spread = replica_spread
+        self.page_service_seconds = page_service_seconds
         for i in range(n_data_providers):
-            self.provider_manager.register(DataProvider(i))
-        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+            self.provider_manager.register(DataProvider(i, page_service_seconds))
+        self.replica_balancer: Optional[ReplicaBalancer] = (
+            ReplicaBalancer(
+                self.provider_manager, self.metadata, self.stats, balancer_config
+            )
+            if hot_replicas
+            else None
+        )
         self._next_provider_id = n_data_providers
         self._membership_lock = threading.Lock()
+        self._rng = random.Random(0xB10B)
 
     # -- elasticity ------------------------------------------------------------
     def add_data_provider(self) -> int:
         with self._membership_lock:
             pid = self._next_provider_id
             self._next_provider_id += 1
-        self.provider_manager.register(DataProvider(pid))
+        self.provider_manager.register(DataProvider(pid, self.page_service_seconds))
         return pid
 
     # -- ALLOC -------------------------------------------------------------------
@@ -186,14 +207,15 @@ class BlobStore:
         for f in futures:
             f.result()
 
-        # (3) version numbers + border links, in patch order (the only
-        #     serialized step), then (4) ONE aggregated metadata store for
-        #     all patches' nodes
-        versions: List[int] = []
+        # (3) version numbers + border links for ALL patches under ONE manager
+        #     lock acquisition (the only serialized step), then (4) ONE
+        #     aggregated metadata store for all patches' nodes
+        assigned = self.version_manager.assign_versions(blob_id, spans)
+        versions: List[int] = [v for v, _ in assigned]
         nodes: List[TreeNode] = []
-        for (page_offset, n_pages), mine in zip(spans, per_patch):
-            version, links = self.version_manager.assign_version(blob_id, page_offset, n_pages)
-            versions.append(version)
+        for (page_offset, n_pages), mine, (version, links) in zip(
+            spans, per_patch, assigned
+        ):
             nodes.extend(
                 build_write_tree(
                     blob_id, version, total_pages, page_offset, n_pages, mine, links
@@ -303,7 +325,7 @@ class BlobStore:
                     _merge_ranges(owned),
                 )
                 # (3) ONE aggregated page fetch per provider
-                fetched = self._fetch_pages(leaves)
+                fetched = self._fetch_pages(leaves, page_size)
                 for p, page in fetched.items():
                     pages[p] = page
                     if cache is not None:
@@ -342,19 +364,47 @@ class BlobStore:
             outs.append(out)
         return outs
 
+    def _choose_ref(
+        self, leaf: TreeNode, read_load: Dict[int, int], page_size: int
+    ) -> PageRef:
+        """Pick which replica serves this page via power-of-two random
+        choices: sample two replicas, take the one with less read traffic so
+        far, charging ``read_load`` tentatively so one batch also spreads.
+        The random sampling is what prevents the herd effect — a
+        deterministic global minimum sends every concurrent client to the
+        same momentarily-idle provider, re-serializing the hot page there."""
+        refs = leaf.all_page_refs()
+        a, b = self._rng.sample(range(len(refs)), 2)
+        pid, key = min(
+            refs[a], refs[b], key=lambda r: read_load.get(r[0], 0)
+        )
+        read_load[pid] = read_load.get(pid, 0) + page_size
+        return pid, key
+
     def _fetch_pages(
-        self, leaves: Dict[int, Optional[TreeNode]]
+        self, leaves: Dict[int, Optional[TreeNode]], page_size: int
     ) -> Dict[int, Optional[np.ndarray]]:
-        """Fetch all leaf pages: one aggregated RPC per primary provider (in
-        parallel), per-page replica fallback if a provider batch fails."""
+        """Fetch all leaf pages: one aggregated RPC per serving provider (in
+        parallel), per-page replica fallback if a provider batch fails. The
+        serving provider per page is replica-spread (least read load) rather
+        than always the primary, and every provider fetch feeds the replica
+        balancer's heat counters."""
         result: Dict[int, Optional[np.ndarray]] = {}
         by_provider: Dict[int, List[Tuple[int, int, TreeNode]]] = defaultdict(list)
+        # stats snapshot is deferred until a leaf actually has a choice to
+        # make — single-replica reads must not pay a global-lock round-trip
+        read_load: Optional[Dict[int, int]] = None
         for page_index, leaf in leaves.items():
             if leaf is None:
                 result[page_index] = None  # implicit zero page
+                continue
+            if self.replica_spread and len(leaf.all_page_refs()) > 1:
+                if read_load is None:
+                    read_load = self.stats.read_bytes_snapshot()
+                pid, key = self._choose_ref(leaf, read_load, page_size)
             else:
                 pid, key = leaf.page  # type: ignore[misc]
-                by_provider[pid].append((page_index, key, leaf))
+            by_provider[pid].append((page_index, key, leaf))
 
         def _get_batch(
             pid: int, items: List[Tuple[int, int, TreeNode]]
@@ -364,7 +414,9 @@ class BlobStore:
                 fetched = provider.get_pages([key for _, key, _ in items])
             except (ProviderFailed, KeyError):
                 return None  # provider down/deregistered: caller falls back
-            self.stats.record_data(pid, len(items), sum(pg.nbytes for pg in fetched))
+            self.stats.record_data(
+                pid, len(items), sum(pg.nbytes for pg in fetched), read=True
+            )
             return {p: pg for (p, _, _), pg in zip(items, fetched)}
 
         batches = list(by_provider.items())
@@ -377,13 +429,17 @@ class BlobStore:
             else:
                 result.update(got)
         if fallback:
-            # replica fallback in parallel, skipping the observed-dead primary
+            # replica fallback in parallel, skipping the observed-dead choice
             fb = [
                 self._pool.submit(self._fetch_single, p, leaf, skip)
                 for p, leaf, skip in fallback
             ]
             for (p, _, _), f in zip(fallback, fb):
                 result[p] = f.result()
+        if self.replica_balancer is not None:
+            self.replica_balancer.note_fetches(
+                items[2] for batch in by_provider.values() for items in batch
+            )
         return result
 
     def _fetch_single(
@@ -394,7 +450,7 @@ class BlobStore:
         for pid, key in refs or leaf.all_page_refs():
             try:
                 page = self.provider_manager.get_provider(pid).get_page(key)
-                self.stats.record_data(pid, 1, page.nbytes)
+                self.stats.record_data(pid, 1, page.nbytes, read=True)
                 return page
             except (ProviderFailed, KeyError) as err:
                 last_err = err
@@ -436,9 +492,17 @@ class BlobStore:
 
         Must be invoked only when no concurrent accesses target the dropped
         versions (the paper's "ordered by the client" semantics). Cached pages
-        of dropped versions are purged as well. Returns
+        of dropped versions are purged as well. Promotion passes are paused
+        for the duration — an in-flight promotion could otherwise re-create a
+        just-deleted leaf node or copy a page GC is about to drop. Returns
         (nodes_freed, pages_freed).
         """
+        if self.replica_balancer is not None:
+            with self.replica_balancer.paused():
+                return self._gc_locked(blob_id, keep_versions)
+        return self._gc_locked(blob_id, keep_versions)
+
+    def _gc_locked(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
         total_pages, _ = self.version_manager.blob_info(blob_id)
         latest = self.version_manager.latest_published(blob_id)
         keep = sorted(set(v for v in keep_versions if v != ZERO_VERSION))
@@ -475,6 +539,11 @@ class BlobStore:
                     doomed_pages.update(ref for ref in node.all_page_refs())
         doomed_pages -= reachable_pages
         self.metadata.delete_nodes(doomed_nodes)
+        if self.replica_balancer is not None:
+            # demote-on-GC: the promoted copies die with the doomed leaves
+            # (they are in the rewritten nodes' all_page_refs above); drop the
+            # balancer's heat/promotion records so they can't be re-targeted
+            self.replica_balancer.forget(doomed_nodes)
         by_provider: Dict[int, List[int]] = {}
         for pid, key in doomed_pages:
             by_provider.setdefault(pid, []).append(key)
@@ -490,4 +559,5 @@ class BlobStore:
         return sum(p.used_bytes() for p in self.provider_manager.providers())
 
     def close(self) -> None:
+        self.metadata.close()
         self._pool.shutdown(wait=True)

@@ -18,9 +18,13 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import defaultdict
-from typing import Dict, Iterable, List, Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, TypeVar
 
 from repro.core.segment_tree import NodeKey, TreeNode
+
+_T = TypeVar("_T")
+_R = TypeVar("_R")
 
 
 class ProviderFailed(RuntimeError):
@@ -46,6 +50,11 @@ class TrafficStats:
     cache_hits: int = 0
     cache_misses: int = 0
     per_dest_bytes: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
+    #: read-path bytes per DATA provider only (no metadata shards, no writes) —
+    #: the skew signal the replica balancer promotes hot pages from
+    per_dest_read_bytes: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int)
+    )
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock, repr=False)
 
     def record(self, dest: int, n_messages: int, n_bytes: int) -> None:
@@ -58,11 +67,18 @@ class TrafficStats:
         self.bytes_sent += n_bytes
         self.per_dest_bytes[dest] += n_bytes
 
-    def record_data(self, dest: int, n_messages: int, n_bytes: int) -> None:
+    def record_data(self, dest: int, n_messages: int, n_bytes: int, read: bool = False) -> None:
         """One aggregated round-trip to a data provider."""
         with self._lock:
             self._record_locked(dest, n_messages, n_bytes)
             self.data_rounds += 1
+            if read:
+                self.per_dest_read_bytes[dest] += n_bytes
+
+    def read_bytes_snapshot(self) -> Dict[int, int]:
+        """Copy of per-data-provider read bytes (for replica choice/skew)."""
+        with self._lock:
+            return dict(self.per_dest_read_bytes)
 
     def record_metadata(self, dest: int, n_messages: int, n_bytes: int) -> None:
         """One aggregated round-trip to a metadata shard."""
@@ -85,6 +101,7 @@ class TrafficStats:
             self.cache_hits = 0
             self.cache_misses = 0
             self.per_dest_bytes.clear()
+            self.per_dest_read_bytes.clear()
 
 
 #: Serialized size of one tree node on the wire; matches the order of
@@ -106,7 +123,10 @@ class MetadataShard:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         for node in nodes:
             # Create-only: concurrent writers never target the same key
-            # because keys embed the (unique) version number.
+            # because keys embed the (unique) version number. The one
+            # sanctioned re-put is the replica balancer rewriting a leaf with
+            # a grown/shrunk replica set — same page data, different placement
+            # hint — and it serializes those rewrites on its own lock.
             self._nodes[node.key] = node
 
     def get(self, key: NodeKey) -> Optional[TreeNode]:
@@ -148,12 +168,49 @@ class MetadataDHT:
     which is the paper's (inherited) metadata fault tolerance.
     """
 
-    def __init__(self, n_shards: int, replication: int = 1, stats: Optional[TrafficStats] = None) -> None:
+    def __init__(
+        self,
+        n_shards: int,
+        replication: int = 1,
+        stats: Optional[TrafficStats] = None,
+        executor: Optional[ThreadPoolExecutor] = None,
+    ) -> None:
         if replication > n_shards:
             raise ValueError("replication cannot exceed shard count")
         self.shards = [MetadataShard(i) for i in range(n_shards)]
         self.replication = replication
         self.stats = stats or TrafficStats()
+        self._executor = executor
+        self._owns_executor = False
+        self._executor_lock = threading.Lock()
+
+    def _pool(self) -> ThreadPoolExecutor:
+        with self._executor_lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=min(len(self.shards), 16)
+                )
+                self._owns_executor = True
+            return self._executor
+
+    def _fan_out(
+        self, batches: List[Tuple[int, List[_T]]], fn: Callable[[int, List[_T]], _R]
+    ) -> List[_R]:
+        """Run ``fn(shard_id, batch)`` for every per-shard batch concurrently —
+        one traversal level (or one writev's node set) costs ONE parallel
+        round over the shards instead of a serial Python loop (paper §III.B
+        "parallel per level"). A single batch skips the pool entirely."""
+        if len(batches) <= 1:
+            return [fn(sid, batch) for sid, batch in batches]
+        futures = [self._pool().submit(fn, sid, batch) for sid, batch in batches]
+        return [f.result() for f in futures]
+
+    def close(self) -> None:
+        with self._executor_lock:
+            if self._owns_executor and self._executor is not None:
+                self._executor.shutdown(wait=True)
+                self._executor = None
+                self._owns_executor = False
 
     def _home(self, key: NodeKey) -> int:
         return hash((key.blob_id, key.version, key.offset, key.size)) % len(self.shards)
@@ -163,14 +220,18 @@ class MetadataDHT:
         return [(home + r) % len(self.shards) for r in range(self.replication)]
 
     def put_nodes(self, nodes: Sequence[TreeNode]) -> None:
-        """Store nodes, aggregating all puts to the same shard into one RPC."""
+        """Store nodes, aggregating all puts to the same shard into one RPC;
+        the per-shard RPCs are issued concurrently (one parallel round)."""
         by_shard: Dict[int, List[TreeNode]] = defaultdict(list)
         for node in nodes:
             for sid in self._replica_ids(node.key):
                 by_shard[sid].append(node)
-        for sid, batch in by_shard.items():
+
+        def _put(sid: int, batch: List[TreeNode]) -> None:
             self.shards[sid].put_many(batch)
             self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+
+        self._fan_out(list(by_shard.items()), _put)
 
     def get_node(self, key: NodeKey) -> TreeNode:
         last_err: Optional[Exception] = None
@@ -189,11 +250,23 @@ class MetadataDHT:
 
     def get_nodes(self, keys: Sequence[NodeKey]) -> Dict[NodeKey, TreeNode]:
         """Batched node fetch: ONE aggregated RPC per (home) shard for the
-        whole key set, with per-key replica fallback rounds on shard failure
-        or missing replicas. Raises ``KeyError`` if any key is nowhere."""
+        whole key set — the per-shard RPCs of each round run concurrently —
+        with per-key replica fallback rounds on shard failure or missing
+        replicas. Raises ``KeyError`` if any key is nowhere."""
         found: Dict[NodeKey, TreeNode] = {}
         pending = list(dict.fromkeys(keys))
         last_err: Optional[ProviderFailed] = None
+
+        def _get(
+            sid: int, batch: List[NodeKey]
+        ) -> Tuple[List[NodeKey], Optional[Dict[NodeKey, TreeNode]], Optional[ProviderFailed]]:
+            try:
+                got = self.shards[sid].get_many(batch)
+                self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+                return batch, got, None
+            except ProviderFailed as err:
+                return batch, None, err
+
         for round_idx in range(self.replication):
             if not pending:
                 break
@@ -201,14 +274,12 @@ class MetadataDHT:
             for key in pending:
                 by_shard[self._replica_ids(key)[round_idx]].append(key)
             still_missing: List[NodeKey] = []
-            for sid, batch in by_shard.items():
-                try:
-                    got = self.shards[sid].get_many(batch)
-                    self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
-                except ProviderFailed as err:
+            for batch, got, err in self._fan_out(list(by_shard.items()), _get):
+                if err is not None:
                     last_err = err
                     still_missing.extend(batch)
                     continue
+                assert got is not None
                 found.update(got)
                 still_missing.extend(k for k in batch if k not in got)
             pending = still_missing

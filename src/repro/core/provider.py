@@ -2,18 +2,28 @@
 
 Data providers store pages in RAM. The provider manager tracks registered
 providers and, per WRITE, picks which providers receive the freshly written
-pages using a load-balancing strategy (least-loaded, ties broken round-robin
-— "some strategy that favors global load balancing").
+pages using a load-balancing strategy (least-loaded, ties broken by provider
+id — "some strategy that favors global load balancing").
 
 Providers may join and leave dynamically; page replication (``replication``)
 plus replica fallback on read provides the fault tolerance the paper defers to
 future work.
+
+Placement is a lazy min-heap over ``(load, provider_id)``: allocating a page
+pops the ``replication`` least-loaded providers and pushes them back with
+their load incremented, so a bulk allocation of ``n`` pages costs
+O(n·replication·log P) heap operations instead of the O(n·P·log P) of a
+per-page full sort. Stale heap entries (left behind by ``release`` or
+membership churn) are discarded on pop; every push/pop is counted in
+``placement_ops`` so tests can assert the complexity bound.
 """
 
 from __future__ import annotations
 
+import heapq
 import itertools
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -23,41 +33,71 @@ from repro.core.segment_tree import PageRef
 
 
 class DataProvider:
-    """RAM page store. Pages are immutable once stored (COW discipline)."""
+    """RAM page store. Pages are immutable once stored (COW discipline).
 
-    def __init__(self, provider_id: int) -> None:
+    All page-map accesses are serialized on a per-provider lock, so concurrent
+    ``put_pages``/``delete_pages`` never race ``used_bytes``/``n_pages``
+    iterating the dict. ``page_service_seconds`` > 0 models a provider with
+    finite service bandwidth: each request holds the lock for that long per
+    page transferred (the sleep releases the GIL, so *different* providers
+    still serve in parallel — exactly the paper's network model, where a hot
+    provider is the bottleneck and spreading load across providers helps).
+    """
+
+    def __init__(self, provider_id: int, page_service_seconds: float = 0.0) -> None:
         self.provider_id = provider_id
+        self.page_service_seconds = page_service_seconds
         self._pages: Dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()
         self.failed = False
 
+    def _serve(self, n_pages: int) -> None:
+        if self.page_service_seconds > 0.0 and n_pages > 0:
+            time.sleep(self.page_service_seconds * n_pages)
+
     def put_pages(self, items: Sequence[Tuple[int, np.ndarray]]) -> None:
-        if self.failed:
-            raise ProviderFailed(f"data provider {self.provider_id} is down")
-        for page_key, data in items:
-            self._pages[page_key] = data
+        with self._lock:
+            if self.failed:
+                raise ProviderFailed(f"data provider {self.provider_id} is down")
+            for page_key, data in items:
+                self._pages[page_key] = data
+            self._serve(len(items))
 
     def get_page(self, page_key: int) -> np.ndarray:
-        if self.failed:
-            raise ProviderFailed(f"data provider {self.provider_id} is down")
-        return self._pages[page_key]
+        with self._lock:
+            if self.failed:
+                raise ProviderFailed(f"data provider {self.provider_id} is down")
+            page = self._pages[page_key]
+            self._serve(1)
+            return page
 
     def get_pages(self, page_keys: Sequence[int]) -> List[np.ndarray]:
         """One aggregated RPC for many pages (paper §V.A batching). Raises
         ``KeyError`` on the first missing key — callers fall back per page."""
-        if self.failed:
-            raise ProviderFailed(f"data provider {self.provider_id} is down")
-        return [self._pages[key] for key in page_keys]
+        with self._lock:
+            if self.failed:
+                raise ProviderFailed(f"data provider {self.provider_id} is down")
+            pages = [self._pages[key] for key in page_keys]
+            self._serve(len(pages))
+            return pages
+
+    def has_page(self, page_key: int) -> bool:
+        with self._lock:
+            return not self.failed and page_key in self._pages
 
     def delete_pages(self, page_keys: Sequence[int]) -> None:
-        for key in page_keys:
-            self._pages.pop(key, None)
+        with self._lock:
+            for key in page_keys:
+                self._pages.pop(key, None)
 
     @property
     def n_pages(self) -> int:
-        return len(self._pages)
+        with self._lock:
+            return len(self._pages)
 
     def used_bytes(self) -> int:
-        return sum(p.nbytes for p in self._pages.values())
+        with self._lock:
+            return sum(p.nbytes for p in self._pages.values())
 
 
 class ProviderManager:
@@ -73,6 +113,11 @@ class ProviderManager:
         self.replication = replication
         self._providers: Dict[int, DataProvider] = {}
         self._load: Dict[int, int] = {}
+        #: lazy min-heap of (load, provider_id); entries whose load no longer
+        #: matches ``_load`` (or whose provider left) are discarded on pop
+        self._heap: List[Tuple[int, int]] = []
+        #: heap pushes + pops, for complexity assertions in tests
+        self.placement_ops = 0
         self._page_key_counter = itertools.count()
         self._lock = threading.Lock()
         self.stats = stats or TrafficStats()
@@ -82,11 +127,13 @@ class ProviderManager:
         with self._lock:
             self._providers[provider.provider_id] = provider
             self._load.setdefault(provider.provider_id, 0)
+            self._push(provider.provider_id)
 
     def deregister(self, provider_id: int) -> None:
         with self._lock:
             self._providers.pop(provider_id, None)
             self._load.pop(provider_id, None)
+            # heap entries for provider_id go stale and die on pop
 
     def providers(self) -> List[DataProvider]:
         with self._lock:
@@ -97,22 +144,72 @@ class ProviderManager:
             return self._providers[provider_id]
 
     # -- placement ----------------------------------------------------------
+    def _push(self, pid: int) -> None:
+        heapq.heappush(self._heap, (self._load[pid], pid))
+        self.placement_ops += 1
+
+    def _pop_least_loaded(self, exclude: set) -> int:
+        """Pop until a live, non-stale, non-excluded provider surfaces."""
+        while True:
+            load, pid = heapq.heappop(self._heap)
+            self.placement_ops += 1
+            if pid not in self._providers or self._load[pid] != load:
+                continue  # stale: provider left, or load moved on
+            if pid in exclude:
+                continue  # duplicate entry of an already-chosen provider
+            return pid
+
     def allocate(self, n_pages: int) -> List[Tuple[PageRef, Tuple[PageRef, ...]]]:
-        """Pick (primary, replicas) for ``n_pages`` fresh pages."""
+        """Pick (primary, replicas) for ``n_pages`` fresh pages in bulk.
+
+        One lock acquisition and O(n_pages·replication·log P) heap work for
+        the whole batch — the per-page sort this replaces was
+        O(n_pages·P·log P) *inside the lock*, which serialized concurrent
+        writers on placement instead of on the version manager only.
+        """
         with self._lock:
             if len(self._providers) < self.replication:
                 raise RuntimeError("not enough providers for requested replication")
             out: List[Tuple[PageRef, Tuple[PageRef, ...]]] = []
             for _ in range(n_pages):
-                ranked = sorted(self._load, key=lambda pid: (self._load[pid], pid))
-                chosen = ranked[: self.replication]
+                chosen: List[int] = []
+                taken: set = set()
+                while len(chosen) < self.replication:
+                    pid = self._pop_least_loaded(taken)
+                    chosen.append(pid)
+                    taken.add(pid)
                 key = next(self._page_key_counter)
                 for pid in chosen:
                     self._load[pid] += 1
+                    self._push(pid)
                 primary: PageRef = (chosen[0], key)
                 replicas: Tuple[PageRef, ...] = tuple((pid, key) for pid in chosen[1:])
                 out.append((primary, replicas))
             return out
+
+    def least_loaded(self, exclude: Sequence[int] = ()) -> Optional[int]:
+        """Peek the least-loaded live (non-failed) provider not in
+        ``exclude`` (for the replica balancer's promotion targets). Returns
+        ``None`` if no provider qualifies — one failed cold provider must not
+        block promotion while healthy targets exist."""
+        excluded = set(exclude)
+        with self._lock:
+            candidates = [
+                pid
+                for pid, provider in self._providers.items()
+                if pid not in excluded and not provider.failed
+            ]
+            if not candidates:
+                return None
+            return min(candidates, key=lambda pid: (self._load[pid], pid))
+
+    def add_load(self, pid: int, n_pages: int = 1) -> None:
+        """Charge ``pid`` for pages placed outside :meth:`allocate` (promoted
+        hot-page replicas), keeping the heap's least-loaded order truthful."""
+        with self._lock:
+            if pid in self._load:
+                self._load[pid] += n_pages
+                self._push(pid)
 
     def release(self, refs: Sequence[PageRef]) -> None:
         """Return load credit for GC'd pages."""
@@ -120,13 +217,18 @@ class ProviderManager:
             for pid, _ in refs:
                 if pid in self._load and self._load[pid] > 0:
                     self._load[pid] -= 1
+                    self._push(pid)
 
     # -- failure injection ---------------------------------------------------
     def fail_provider(self, provider_id: int) -> None:
-        self._providers[provider_id].failed = True
+        with self._lock:
+            provider = self._providers[provider_id]
+        provider.failed = True
 
     def recover_provider(self, provider_id: int) -> None:
-        self._providers[provider_id].failed = False
+        with self._lock:
+            provider = self._providers[provider_id]
+        provider.failed = False
 
     def load_snapshot(self) -> Dict[int, int]:
         with self._lock:

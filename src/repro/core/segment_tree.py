@@ -25,6 +25,7 @@ with respect to writers: a published version's tree can never change.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
@@ -220,6 +221,48 @@ def traverse(
     yield from descend(root_version, 0, total_pages)
 
 
+class IntervalIndex:
+    """Disjoint sorted page intervals with O(log R) intersection queries.
+
+    Built once per ``traverse_batch`` from the request's R ranges: overlapping
+    and adjacent ranges are merged, then ``intersects_any``/``clip`` answer by
+    bisecting the merged starts instead of rescanning all R ranges at every
+    tree node (which made vectored reads O(nodes·R)).
+    """
+
+    __slots__ = ("starts", "ends")
+
+    def __init__(self, ranges: Sequence[Tuple[int, int]]) -> None:
+        merged: List[Tuple[int, int]] = []  # (start, end), half-open, disjoint
+        for o, s in sorted((o, s) for o, s in ranges if s > 0):
+            if merged and o <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], o + s))
+            else:
+                merged.append((o, o + s))
+        self.starts = [m[0] for m in merged]
+        self.ends = [m[1] for m in merged]
+
+    def intersects_any(self, o: int, s: int) -> bool:
+        """Does [o, o+s) intersect any requested range?"""
+        # the only candidate is the last interval starting at or before o
+        # (they are disjoint), plus any interval starting inside [o, o+s)
+        i = bisect.bisect_right(self.starts, o) - 1
+        if i >= 0 and self.ends[i] > o:
+            return True
+        j = i + 1
+        return j < len(self.starts) and self.starts[j] < o + s
+
+    def clip(self, o: int, s: int) -> Iterator[Tuple[int, int]]:
+        """Yield the sub-intervals of [o, o+s) covered by requested ranges."""
+        i = max(bisect.bisect_right(self.starts, o) - 1, 0)
+        while i < len(self.starts) and self.starts[i] < o + s:
+            lo = max(self.starts[i], o)
+            hi = min(self.ends[i], o + s)
+            if lo < hi:
+                yield lo, hi
+            i += 1
+
+
 def traverse_batch(
     get_nodes: Callable[[Sequence[NodeKey]], "dict[NodeKey, TreeNode]"],
     blob_id: int,
@@ -234,18 +277,22 @@ def traverse_batch(
     half of the batched ``readv`` data plane — N overlapping segments share
     the path nodes near the root instead of re-fetching them N times.
 
+    Range membership queries go through an :class:`IntervalIndex` over the
+    merged request ranges, so each visited node costs O(log R) instead of a
+    full rescan of all R ranges.
+
     Returns ``{page_index: leaf_or_None}`` for exactly the requested pages
     (``None`` = implicit all-zero page).
     """
-    ranges = [(o, s) for o, s in ranges if s > 0]
+    index = IntervalIndex(ranges)
     out: "dict[int, Optional[TreeNode]]" = {}
 
     def wanted(o: int, s: int) -> bool:
-        return any(intersects(o, s, ro, rs) for ro, rs in ranges)
+        return index.intersects_any(o, s)
 
     def mark_zero(o: int, s: int) -> None:
-        for ro, rs in ranges:
-            for p in range(max(o, ro), min(o + s, ro + rs)):
+        for lo, hi in index.clip(o, s):
+            for p in range(lo, hi):
                 out[p] = None
 
     if root_version == ZERO_VERSION:

@@ -93,14 +93,27 @@ class VersionManager:
         self, blob_id: int, offset: int, size: int
     ) -> Tuple[int, List[BorderLink]]:
         """Step 2 of a WRITE: get a fresh version number + precomputed border
-        links. Runs under the manager lock — the paper's single serialization
-        point — but the work inside is O(size + log total_pages)."""
+        links. Thin wrapper over :meth:`assign_versions` — journal replay
+        (:meth:`recover`) sees identical per-version ``assign`` entries either
+        way."""
+        return self.assign_versions(blob_id, [(offset, size)])[0]
+
+    def assign_versions(
+        self, blob_id: int, spans: Sequence[Tuple[int, int]]
+    ) -> List[Tuple[int, List[BorderLink]]]:
+        """Batch version assignment for a multi-patch ``writev``: ONE manager
+        lock acquisition covers every ``(offset, size)`` span, in span order.
+        The serialized section stays O(Σ size + patches·log total_pages) —
+        each span's border links are computed against the interval history of
+        all earlier assignments *including the preceding spans of this very
+        batch*, exactly as a loop of :meth:`assign_version` would see them.
+        One ``assign`` journal entry is appended per span, so journals are
+        byte-compatible with the single-patch API."""
         with self._lock:
             st = self._blobs[blob_id]
-            if offset < 0 or size <= 0 or offset + size > st.total_pages:
-                raise ValueError("write range out of bounds")
-            version = st.assigned + 1
-
+            for offset, size in spans:
+                if offset < 0 or size <= 0 or offset + size > st.total_pages:
+                    raise ValueError("write range out of bounds")
             pv = st.page_versions
             assert pv is not None
 
@@ -110,14 +123,21 @@ class VersionManager:
                 # this point reflects exactly versions 1..version-1.
                 return int(pv[o : o + s].max(initial=ZERO_VERSION))
 
-            links = compute_border_links(st.total_pages, offset, size, version_of_segment)
-
-            # Commit the assignment only after computing links.
-            st.assigned = version
-            st.intervals[version] = (offset, size)
-            pv[offset : offset + size] = version
-            self.journal.append(JournalEntry("assign", blob_id, version, offset, size))
-            return version, links
+            out: List[Tuple[int, List[BorderLink]]] = []
+            for offset, size in spans:
+                version = st.assigned + 1
+                links = compute_border_links(
+                    st.total_pages, offset, size, version_of_segment
+                )
+                # Commit the assignment only after computing links.
+                st.assigned = version
+                st.intervals[version] = (offset, size)
+                pv[offset : offset + size] = version
+                self.journal.append(
+                    JournalEntry("assign", blob_id, version, offset, size)
+                )
+                out.append((version, links))
+            return out
 
     def report_success(self, blob_id: int, version: int) -> int:
         """Final step of a WRITE. Publishes the maximal completed prefix and
