@@ -1,0 +1,107 @@
+"""Diff BENCH_concurrent.json against the previous git-rev-stamped rows.
+
+Usage: PYTHONPATH=src python -m benchmarks.compare [--json PATH] [--clients N]
+
+Loads the current ``BENCH_concurrent.json`` (working tree), walks the git
+history of that file for the most recent committed payload with a different
+``git_rev`` stamp, and prints per-(mode, clients) deltas of aggregate
+bandwidth — the PR-to-PR perf trajectory check the ROADMAP calls for. Modes
+present on only one side are listed as added/removed rather than diffed.
+
+Exit status is always 0: this is a reporting tool, not a gate — regressions
+are for the PR author/reviewer to judge with the printed numbers in hand.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def load_previous(path: pathlib.Path) -> Optional[dict]:
+    """Most recent committed payload of ``path`` whose git_rev stamp differs
+    from the working-tree payload (i.e. the previous PR's rows)."""
+    try:
+        current = json.loads(path.read_text())
+        rel = path.resolve().relative_to(REPO_ROOT).as_posix()
+    except (OSError, ValueError):
+        return None  # unreadable, unparsable, or outside the repo (no history)
+    try:
+        revs = subprocess.run(
+            ["git", "log", "--format=%H", "--", rel], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True,
+        ).stdout.split()
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    for rev in revs:
+        try:
+            blob = subprocess.run(
+                ["git", "show", f"{rev}:{rel}"], cwd=REPO_ROOT,
+                capture_output=True, text=True, check=True,
+            ).stdout
+            payload = json.loads(blob)
+        except (subprocess.CalledProcessError, ValueError):
+            continue
+        if (payload.get("git_rev"), payload.get("unix_time")) != (
+            current.get("git_rev"), current.get("unix_time")
+        ):
+            return payload
+    return None
+
+
+def _index(payload: dict) -> Dict[Tuple[str, int], dict]:
+    return {(r["mode"], r["clients"]): r for r in payload.get("rows", [])}
+
+
+def diff_rows(old: dict, new: dict, clients: Optional[int] = None) -> List[str]:
+    """Human-readable per-(mode, clients) aggregate-bandwidth deltas."""
+    old_idx, new_idx = _index(old), _index(new)
+    lines = [
+        f"comparing {old.get('git_rev', '?')} -> {new.get('git_rev', '?')} "
+        f"(aggregate_MBps)",
+        "mode,clients,old,new,delta_pct",
+    ]
+    for key in sorted(new_idx, key=lambda k: (k[0], k[1])):
+        mode, n = key
+        if clients is not None and n != clients:
+            continue
+        new_row = new_idx[key]
+        old_row = old_idx.get(key)
+        if old_row is None:
+            lines.append(f"{mode},{n},-,{new_row['aggregate_MBps']:.1f},added")
+            continue
+        a, b = old_row["aggregate_MBps"], new_row["aggregate_MBps"]
+        pct = (b - a) / a * 100.0 if a else float("inf")
+        lines.append(f"{mode},{n},{a:.1f},{b:.1f},{pct:+.1f}%")
+    for key in sorted(set(old_idx) - set(new_idx)):
+        if clients is not None and key[1] != clients:
+            continue
+        lines.append(f"{key[0]},{key[1]},{old_idx[key]['aggregate_MBps']:.1f},-,removed")
+    return lines
+
+
+def main(argv: Optional[List[str]] = None) -> List[str]:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", type=pathlib.Path,
+                        default=REPO_ROOT / "BENCH_concurrent.json")
+    parser.add_argument("--clients", type=int, default=None,
+                        help="restrict the diff to one client count")
+    args = parser.parse_args(argv)
+    try:
+        current = json.loads(args.json.read_text())
+    except (OSError, ValueError) as err:
+        return [f"no current benchmark rows at {args.json}: {err}"]
+    previous = load_previous(args.json)
+    if previous is None:
+        return [f"no previous git-rev-stamped rows for {args.json}; "
+                "nothing to compare"]
+    return diff_rows(previous, current, clients=args.clients)
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

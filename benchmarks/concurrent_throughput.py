@@ -24,6 +24,26 @@ On top of the paper's sweep, three client-side scaling modes:
   ``skew-read`` turns on the :class:`~repro.core.ReplicaBalancer` — hot pages
   are promoted onto extra providers and fetches spread across replicas — and
   recovers the lost aggregate bandwidth (BlobSeer-style dynamic replication).
+
+The write-plane modes measure the overlapped write pipeline under a modeled
+grid network — finite provider bandwidth (``page_service_seconds`` per page)
+plus a metadata round-trip latency (``metadata_latency_seconds`` per parallel
+shard round), the two resources whose overlap is the point of the paper's
+decoupled WRITE protocol:
+
+* ``write`` — fine-grain one-page writes through the pipelined ``writev``
+  (data puts, version assignment and metadata weaving all overlapped);
+* ``sync-write`` — the SAME workload with ``BlobStore(sync_write=True)``:
+  the pre-pipeline write path (full barrier between stages, defensive page
+  copies). The A/B pair in one run is the headline: pipelining buys >=1.5x
+  aggregate write bandwidth at 16 clients. Off by default; enable with
+  ``python -m benchmarks.run --sync-write``.
+* ``stream-write`` — each client streams its writes through
+  ``write_async``/``flush`` (bounded in-flight window), so successive
+  writes' pipelines ALSO overlap each other (cross-write overlap);
+* ``mixed`` — the detector pattern: write a page, then re-read the page you
+  just wrote at its assigned version. Runs with the cache on: write-through
+  makes the re-reads RAM hits, so the read half costs no provider traffic.
 """
 
 from __future__ import annotations
@@ -37,8 +57,12 @@ import numpy as np
 from repro.configs.paper_sky import CONFIG as SKY
 from repro.core import BalancerConfig, BlobStore
 
-MODES = ("read", "write", "mixed", "hot-read", "cached-read", "readv",
-         "skew-read-primary", "skew-read")
+MODES = ("read", "write", "stream-write", "mixed", "hot-read", "cached-read",
+         "readv", "skew-read-primary", "skew-read")
+#: the pre-pipeline write path, kept out of the default sweep: enable the
+#: A/B with ``python -m benchmarks.run --sync-write``
+SYNC_WRITE_MODE = "sync-write"
+WRITE_MODES = ("write", SYNC_WRITE_MODE, "stream-write", "mixed")
 
 #: skew workload shape: HOT_FRACTION of reads land on SKEW_HOT_PAGES pages
 SKEW_HOT_PAGES = 2
@@ -50,8 +74,21 @@ SKEW_SERVICE_SECONDS = 0.01
 #: promoted copies per hot page: spread each hot page over up to 10 providers
 SKEW_MAX_EXTRA_REPLICAS = 9
 
+#: write-plane network model: per-page provider service time (finite data
+#: bandwidth) and per-round metadata RTT. Sized so the modeled I/O dominates
+#: the client CPU — what the pipeline overlaps is network time, and with
+#: near-zero service times the GIL would be the only measured resource.
+WRITE_SERVICE_SECONDS = 0.025
+METADATA_LATENCY_SECONDS = 0.03
+#: write modes patch a window-sized blob (like the skew modes): they measure
+#: data/metadata I/O overlap, so the extra tree depth of the paper's 1 TB
+#: blob would only add identical CPU to both sides of the A/B
+WRITE_WINDOW_PAGES = 1024
+#: write_async in-flight window per client (stream-write)
+STREAM_WINDOW_PER_CLIENT = 4
 
-def _make_store(mode: str, n_providers: int) -> BlobStore:
+
+def _make_store(mode: str, n_providers: int, n_clients: int = 1) -> BlobStore:
     if mode.startswith("skew-read"):
         replicate = mode == "skew-read"
         return BlobStore(
@@ -65,6 +102,17 @@ def _make_store(mode: str, n_providers: int) -> BlobStore:
             ),
             page_service_seconds=SKEW_SERVICE_SECONDS,
         )
+    if mode in WRITE_MODES:
+        return BlobStore(
+            n_data_providers=n_providers, n_metadata_providers=n_providers,
+            max_workers=4 * n_providers,
+            # mixed keeps the cache: its re-reads are the write-through demo
+            cache_bytes=(128 << 20) if mode == "mixed" else 0,
+            page_service_seconds=WRITE_SERVICE_SECONDS,
+            metadata_latency_seconds=METADATA_LATENCY_SECONDS,
+            sync_write=(mode == SYNC_WRITE_MODE),
+            max_inflight_writes=STREAM_WINDOW_PER_CLIENT * n_clients,
+        )
     # the cache is the measured subject of cached-read; every other mode
     # runs uncached so the paper's baseline stays the baseline
     cache_bytes = (128 << 20) if mode == "cached-read" else 0
@@ -77,43 +125,73 @@ def _make_store(mode: str, n_providers: int) -> BlobStore:
 def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
         page_size=64 << 10, n_providers=20, modes=MODES) -> List[dict]:
     rows = []
-    for mode in modes:
-        for n_clients in n_clients_list:
-            store = _make_store(mode, n_providers)
-            # skew modes allocate a window-sized blob: they measure data-plane
-            # spreading under provider service limits, so the metadata depth
-            # of the paper's 1 TB blob would only add identical CPU to both
-            # sides of the comparison
-            blob_bytes = (
-                SKEW_WINDOW_PAGES * page_size
-                if mode.startswith("skew-read")
-                else SKY.blob_size
-            )
+    # client-count-major order: all modes run back-to-back at each client
+    # count, so A/B pairs (write vs sync-write) are measured adjacently in
+    # time — minutes of thermal/CPU-quota drift between the two sides would
+    # otherwise swamp the pipelining signal at high concurrency
+    for n_clients in n_clients_list:
+        for mode in modes:
+            store = _make_store(mode, n_providers, n_clients)
+            # skew and write modes allocate a window-sized blob: they measure
+            # data-plane behavior under network service limits, so the
+            # metadata depth of the paper's 1 TB blob would only add
+            # identical CPU to both sides of their comparisons
+            if mode.startswith("skew-read"):
+                blob_bytes = SKEW_WINDOW_PAGES * page_size
+            elif mode in WRITE_MODES:
+                blob_bytes = WRITE_WINDOW_PAGES * page_size
+            else:
+                blob_bytes = SKY.blob_size
             blob = store.alloc(blob_bytes, page_size)
             # pre-populate the hot window so reads hit real pages; the
-            # cache-demo modes re-read a (smaller) fully-prefilled window
+            # cache-demo modes re-read a (smaller) fully-prefilled window;
+            # pure-write modes need no prefill at all (mixed re-reads only
+            # its own writes, which write through into the cache)
             hot = SKY.hot_interval
             if mode in ("hot-read", "cached-read", "readv"):
                 hot = min(hot, 64 << 20)
             if mode.startswith("skew-read"):
                 hot = SKEW_WINDOW_PAGES * page_size
+            if mode in WRITE_MODES:
+                hot = WRITE_WINDOW_PAGES * page_size
             init = np.ones(seg_bytes, np.uint8)
             fully_prefilled = mode.startswith("skew-read") or mode in (
                 "hot-read", "cached-read", "readv"
             )
-            prefill = hot if fully_prefilled else min(hot, seg_bytes * n_clients * iters)
-            store.writev(blob, [(off, init[: min(seg_bytes, prefill - off)])
-                               for off in range(0, prefill, seg_bytes)])
+            if mode not in WRITE_MODES:
+                prefill = hot if fully_prefilled else min(hot, seg_bytes * n_clients * iters)
+                store.writev(blob, [(off, init[: min(seg_bytes, prefill - off)])
+                                   for off in range(0, prefill, seg_bytes)])
+            elif mode == "stream-write":
+                # warm the lazily-spawned worker + writer pools so the timed
+                # window doesn't pay thread creation
+                for p in range(2 * n_clients):
+                    store.write_async(blob, init[:page_size], p * page_size)
+                store.flush()
+            else:
+                store.writev(blob, [(p * page_size, init[:page_size])
+                                    for p in range(2 * n_clients)])
 
             barrier = threading.Barrier(n_clients)
             times: List[float] = [0.0] * n_clients
             bytes_moved: List[int] = [0] * n_clients
             # skew modes run longer so the adaptive promotion warmup is a
-            # small fraction of the measured window
-            mode_iters = iters * 2 if mode.startswith("skew-read") else iters
+            # small fraction of the measured window; write modes run longer
+            # still — short windows never reach queueing steady state and the
+            # A/B ratio becomes scheduler noise
+            if mode in WRITE_MODES:
+                mode_iters = iters * 4
+            elif mode.startswith("skew-read"):
+                mode_iters = iters * 2
+            else:
+                mode_iters = iters
 
             def client(cid: int) -> None:
                 buf = np.full(seg_bytes, cid + 1, np.uint8)
+                # write modes hand out an OWNED page-sized buffer: writev
+                # freezes it on first use and stores zero-copy views of it
+                wbuf = np.full(page_size, cid + 1, np.uint8)
+                inflight: List = []
                 rng = np.random.default_rng(1234 + cid)
                 moved = 0
                 barrier.wait()
@@ -140,15 +218,32 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                         segs = [(base + k * (seg_bytes // 4), seg_bytes // 2)
                                 for k in range(8)]
                         moved += sum(o.size for o in store.readv(blob, None, segs))
+                    elif mode in WRITE_MODES:
+                        # fine-grain one-page writes, disjoint per client
+                        # until offsets wrap the window (16 clients x 80
+                        # iters > 1024 pages — COW versioning makes the
+                        # overlap harmless); page is the patch size, so data
+                        # puts and metadata weaving have comparable network
+                        # cost — the overlap being measured
+                        off = ((cid * mode_iters + i) % WRITE_WINDOW_PAGES) * page_size
+                        if mode == "stream-write":
+                            inflight.append(store.write_async(blob, wbuf, off))
+                        else:
+                            v = store.write(blob, wbuf, off)
+                            if mode == "mixed":
+                                # re-read what we just wrote: a write-through
+                                # cache hit, no provider round-trip (but the
+                                # snapshot is only readable once in-order
+                                # publication reaches it)
+                                store.version_manager.wait_published(blob, v)
+                                moved += store.read(blob, v, off, page_size).data.size
+                        moved += page_size
                     else:
                         # disjoint segments per client (the paper's workload)
                         off = ((cid * iters + i) * seg_bytes) % hot
-                        do_write = mode == "write" or (mode == "mixed" and i % 2 == 1)
-                        if do_write:
-                            store.write(blob, buf, off)
-                            moved += seg_bytes
-                        else:
-                            moved += store.read(blob, None, off, seg_bytes).data.size
+                        moved += store.read(blob, None, off, seg_bytes).data.size
+                for fut in inflight:
+                    fut.result()  # join OWN stream only (flush is store-global)
                 times[cid] = time.perf_counter() - t0
                 bytes_moved[cid] = moved
 
@@ -161,6 +256,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
             per_client = [b / t / 1e6 for b, t in zip(bytes_moved, times)]  # MB/s
             hits, misses = store.stats.cache_hits, store.stats.cache_misses
             bal = store.replica_balancer
+            wbytes = list(store.stats.write_bytes_snapshot().values())
             rows.append(dict(
                 mode=mode, clients=n_clients,
                 per_client_MBps=float(np.mean(per_client)),
@@ -169,13 +265,20 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 data_rounds=store.stats.data_rounds,
                 cache_hit_rate=hits / (hits + misses) if hits + misses else 0.0,
                 promotions=bal.promotions if bal is not None else 0,
+                # per-destination write skew (max/mean): 1.0 = perfectly
+                # balanced placement, >>1 = write hot-spotting
+                write_skew=float(max(wbytes) / np.mean(wbytes)) if wbytes else 0.0,
             ))
             store.close()
+    # present rows mode-major (the historical JSON/CSV layout) regardless of
+    # the execution order above
+    order = {m: i for i, m in enumerate(modes)}
+    rows.sort(key=lambda r: (order[r["mode"]], r["clients"]))
     return rows
 
 
 CSV_HEADER = ("mode,clients,per_client_MBps,min_client_MBps,aggregate_MBps,"
-              "data_rounds,cache_hit_rate,promotions")
+              "data_rounds,cache_hit_rate,promotions,write_skew")
 
 
 def to_csv(rows: Sequence[dict]) -> List[str]:
@@ -184,7 +287,8 @@ def to_csv(rows: Sequence[dict]) -> List[str]:
         out.append(
             f"{r['mode']},{r['clients']},{r['per_client_MBps']:.1f},"
             f"{r['min_client_MBps']:.1f},{r['aggregate_MBps']:.1f},"
-            f"{r['data_rounds']},{r['cache_hit_rate']:.2f},{r['promotions']}"
+            f"{r['data_rounds']},{r['cache_hit_rate']:.2f},{r['promotions']},"
+            f"{r.get('write_skew', 0.0):.2f}"
         )
     return out
 

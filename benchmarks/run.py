@@ -49,6 +49,9 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
                         help="tiny-parameter run of the concurrent sweep only")
+    parser.add_argument("--sync-write", action="store_true",
+                        help="also run the pre-pipeline sync-write baseline "
+                             "mode for the write-plane A/B comparison")
     parser.add_argument("--out", type=pathlib.Path,
                         default=REPO_ROOT / "BENCH_concurrent.json",
                         help="where to write the concurrent-throughput JSON")
@@ -57,9 +60,17 @@ def main() -> None:
 
     from benchmarks import concurrent_throughput
 
+    modes = concurrent_throughput.MODES
+    if args.sync_write:
+        # right after "write", so the A/B pair runs adjacently in time
+        i = modes.index("write") + 1
+        modes = modes[:i] + (concurrent_throughput.SYNC_WRITE_MODE,) + modes[i:]
+
     if args.smoke:
+        # the smoke sweep covers EVERY mode (including the write-plane modes)
+        # so no benchmark path can rot unnoticed in CI
         section("fig3c_concurrent_throughput (smoke: 2 clients, 2 iters)")
-        rows = concurrent_throughput.run(n_clients_list=(2,), iters=2)
+        rows = concurrent_throughput.run(n_clients_list=(2,), iters=2, modes=modes)
         for line in concurrent_throughput.to_csv(rows):
             print(line)
         write_bench_json(rows, args.out)
@@ -73,7 +84,7 @@ def main() -> None:
         print(line)
 
     section("fig3c_concurrent_throughput (paper Fig. 3c)")
-    rows = concurrent_throughput.run()
+    rows = concurrent_throughput.run(modes=modes)
     for line in concurrent_throughput.to_csv(rows):
         print(line)
     write_bench_json(rows, args.out)

@@ -1,28 +1,64 @@
 """BlobStore: the paper's client-side access protocol (§III.B).
 
-WRITE(id, buffer, offset, size):
-  1. ask the provider manager for placements (one per fresh page);
-  2. store pages on the data providers **in parallel**;
-  3. ask the version manager for a version number + precomputed border links
-     (the only serialized step);
-  4. build the new metadata tree and store its nodes on the metadata DHT in
-     parallel (weaving happens through the precomputed links — complete
-     isolation from concurrent writers);
-  5. report success; the version manager publishes versions in order.
+WRITE(id, buffer, offset, size) — an **overlapped pipeline**. The paper's
+stages (data pages, version assignment, metadata weaving) are independent and
+serialize only at the version manager, so the client never runs them with
+barriers in between:
+
+  1. ask the provider manager for placements (one per fresh page), then
+     **launch** the per-provider ``put_pages`` RPCs — one aggregated put per
+     provider — and do NOT wait for them;
+  2. while the data puts are in flight, ask the version manager for version
+     numbers + precomputed border links (the only serialized step — it does
+     not depend on data-put completion);
+  3. still while data flies, build every patch's metadata tree (weaving
+     happens through the precomputed links — complete isolation from
+     concurrent writers) and **launch** the per-shard ``put_nodes`` RPCs —
+     one aggregated RPC per shard across the whole writev — the moment the
+     shard batches are grouped;
+  4. join ALL outstanding data and metadata futures — the single sync point;
+  5. report success; the version manager publishes versions in order. The
+     just-written pages are **written through** into the local page cache, so
+     the writer's own re-reads skip the network entirely.
+
+  If any put fails mid-pipeline, the write plane cleans up after itself:
+  stored pages are deleted, placement load credits are released, stored
+  metadata nodes are dropped, and the assigned versions are withdrawn via
+  ``VersionManager.abandon`` so in-order publication can never wedge behind a
+  writer that will never report success.
+
+  ``BlobStore(sync_write=True)`` keeps the pre-pipeline behavior — a full
+  barrier after every stage and a defensive copy per page — as the A/B
+  baseline for the ``sync-write`` benchmark mode.
+
+WRITE_ASYNC / FLUSH — cross-write overlap. :meth:`BlobStore.write_async`
+queues a write into a bounded in-flight window (backpressure once
+``max_inflight_writes`` are outstanding) and returns a future; a client can
+stream many writes whose pipelines overlap each other while the version
+manager still publishes strictly in assignment order. :meth:`BlobStore.flush`
+joins the window and returns the assigned versions.
 
 READ(id, v, buffer, offset, size):
   1. ask the version manager for the latest published version (fails if the
-     requested version is unpublished);
+     requested version is unpublished or was abandoned) — one lock pass;
   2. traverse the segment tree of version v over the DHT (parallel per level);
   3. fetch the leaves' pages from the data providers in parallel.
+
+Page transport is **zero-copy end to end**: ``writev`` freezes the source
+buffer (read-only) and hands page-sized views to the providers — no per-page
+copy on the hot path; providers store and return those arrays without
+defensive copies (immutability makes sharing safe); ``readv`` assembles
+multi-page segments by writing fetched pages directly into one preallocated
+output buffer and serves a full-page single-page segment as a read-only view
+of the stored/cached page itself.
 
 On top of the paper's protocol this client adds two scaling layers that its
 immutability guarantees make safe:
 
-* a **versioned page cache** (:mod:`repro.core.page_cache`): pages of
-  published versions can never change, so snapshot re-reads hit RAM with no
+* a **versioned page cache** (:mod:`repro.core.page_cache`): a version's
+  pages can never change once stored, so snapshot re-reads hit RAM with no
   invalidation protocol; concurrent cold misses on a page are collapsed into
-  one provider fetch (single-flight);
+  one provider fetch (single-flight); published writes write through;
 * a **batched multi-segment data plane** — :meth:`BlobStore.readv` /
   :meth:`BlobStore.writev` take many segments, deduplicate shared pages, run
   ONE level-synchronous metadata traversal and ONE aggregated page RPC per
@@ -41,7 +77,7 @@ import functools
 import random
 import threading
 from collections import defaultdict
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -103,6 +139,9 @@ class BlobStore:
         hot_replicas: bool = True,
         balancer_config: Optional[BalancerConfig] = None,
         page_service_seconds: float = 0.0,
+        metadata_latency_seconds: float = 0.0,
+        sync_write: bool = False,
+        max_inflight_writes: int = 8,
     ) -> None:
         self.stats = TrafficStats()
         self.version_manager = VersionManager()
@@ -113,7 +152,18 @@ class BlobStore:
             replication=metadata_replication,
             stats=self.stats,
             executor=self._pool,
+            rpc_latency_seconds=metadata_latency_seconds,
         )
+        #: run writes with the pre-pipeline full barriers + per-page copies
+        #: (the A/B baseline for the ``sync-write`` benchmark mode)
+        self.sync_write = sync_write
+        #: bounded in-flight window for :meth:`write_async`
+        self.max_inflight_writes = max_inflight_writes
+        self._write_window = threading.BoundedSemaphore(max_inflight_writes)
+        self._writer_pool: Optional[ThreadPoolExecutor] = None
+        self._writer_pool_lock = threading.Lock()
+        self._async_lock = threading.Lock()
+        self._async_writes: List[Future] = []
         self.page_cache: Optional[PageCache] = (
             PageCache(cache_bytes, stats=self.stats) if cache_bytes else None
         )
@@ -162,70 +212,284 @@ class BlobStore:
     ) -> List[int]:
         """Vectored WRITE: apply many ``(offset_bytes, buffer)`` page-aligned
         patches. Each patch gets its own version (identical semantics to a
-        loop of :meth:`write`, in patch order), but the data plane batches:
-        one placement call, ONE aggregated ``put_pages`` RPC per data
-        provider across all patches, and one aggregated metadata round per
-        shard for all patches' tree nodes. Returns the assigned versions.
+        loop of :meth:`write`, in patch order), but the data plane batches
+        AND pipelines: one placement call, ONE aggregated ``put_pages`` RPC
+        per data provider across all patches launched up front, version
+        assignment and metadata weaving while those puts are in flight, and a
+        single join before success is reported. Returns the assigned
+        versions.
+
+        Zero-copy hand-off: the write plane freezes each source buffer that
+        owns its memory (``writeable = False``) and providers keep page-sized
+        views of it; a buffer passed to ``writev`` is surrendered to the
+        store for good, whether the write succeeds or fails (another
+        overlapping write may already share the frozen buffer, so failure
+        cannot safely hand it back). Views of larger writable arrays cannot
+        be frozen and are bulk-copied once per patch instead. Caveat the
+        store cannot detect: a writable view the caller created BEFORE the
+        call still aliases the frozen memory — mutating through it corrupts
+        published data, exactly like scribbling over an O_DIRECT buffer with
+        I/O in flight.
         """
         total_pages, page_size = self.version_manager.blob_info(blob_id)
+        sync = self.sync_write
+        # pass 1: validate and normalize every patch — no side effects yet,
+        # so a bad later patch cannot leave earlier buffers frozen
         bufs: List[np.ndarray] = []
         spans: List[Tuple[int, int]] = []  # (page_offset, n_pages) per patch
         for offset_bytes, buffer in patches:
-            buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
-            if offset_bytes % page_size or buffer.size % page_size:
+            src = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
+            if offset_bytes % page_size or src.size % page_size:
                 raise ValueError("WRITE must be page-aligned (paper §II)")
-            n_pages = buffer.size // page_size
+            n_pages = src.size // page_size
             if n_pages == 0:
                 raise ValueError("empty write")
-            bufs.append(buffer)
+            bufs.append(src)
             spans.append((offset_bytes // page_size, n_pages))
         if not bufs:
             return []
+        # pass 2 (pipelined only; the sync baseline copies every page anyway):
+        # make each source immutable before any view of it is handed out.
+        # Zero-copy is only safe when freezing the array that OWNS the memory
+        # actually cuts off future writes — i.e. the caller passed the owning
+        # array itself (or our normalization already copied). A view of some
+        # larger writable array cannot be protected by freezing (writes
+        # through the base would still mutate the stored pages), so that case
+        # falls back to ONE bulk copy per patch — never a per-page copy.
+        if not sync:
+            for i, (src, (_, buffer)) in enumerate(zip(bufs, patches)):
+                root = src
+                while isinstance(root.base, np.ndarray):
+                    root = root.base
+                if root.flags.writeable:
+                    caller_root = buffer
+                    while isinstance(caller_root, np.ndarray) and isinstance(
+                        caller_root.base, np.ndarray
+                    ):
+                        caller_root = caller_root.base
+                    owns = root is not caller_root or (
+                        isinstance(buffer, np.ndarray) and buffer.base is None
+                    )
+                    if owns:
+                        root.flags.writeable = False
+                    else:
+                        src = bufs[i] = src.copy()
+                        src.flags.writeable = False
+                ro = src.view()
+                ro.flags.writeable = False
+                bufs[i] = ro
 
         # (1) placements for every fresh page of every patch, in one call
         placements = self.provider_manager.allocate(sum(n for _, n in spans))
 
-        # (2) store pages in parallel, ONE aggregated put per provider
-        #     covering all patches
         by_provider: Dict[int, List[Tuple[int, np.ndarray]]] = {}
         per_patch: List[List[Tuple[PageRef, Tuple[PageRef, ...]]]] = []
-        cursor = 0
-        for buffer, (_, n_pages) in zip(bufs, spans):
-            mine = placements[cursor : cursor + n_pages]
-            cursor += n_pages
-            per_patch.append(mine)
-            for i, (primary, replicas) in enumerate(mine):
-                page = buffer[i * page_size : (i + 1) * page_size].copy()
-                for pid, key in (primary,) + replicas:
-                    by_provider.setdefault(pid, []).append((key, page))
+        #: per patch, the page arrays actually handed to the store (views in
+        #: the pipelined path, copies in the sync baseline) — the write-through
+        #: cache must reference these, never a possibly-writable source
+        stored_pages: List[List[np.ndarray]] = []
+        versions: List[int] = []
+        node_keys: List[NodeKey] = []
+        data_futures: List[Future] = []
+        meta_futures: List[Future] = []
+        try:
+            cursor = 0
+            for src, (_, n_pages) in zip(bufs, spans):
+                mine = placements[cursor : cursor + n_pages]
+                cursor += n_pages
+                per_patch.append(mine)
+                pages: List[np.ndarray] = []
+                for i, (primary, replicas) in enumerate(mine):
+                    page = src[i * page_size : (i + 1) * page_size]
+                    if sync:
+                        page = page.copy()  # pre-pipeline baseline: defensive copy
+                    pages.append(page)
+                    for pid, key in (primary,) + replicas:
+                        by_provider.setdefault(pid, []).append((key, page))
+                stored_pages.append(pages)
 
-        def _put(pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
-            self.provider_manager.get_provider(pid).put_pages(items)
-            self.stats.record_data(pid, len(items), sum(p.nbytes for _, p in items))
+            # (2) LAUNCH the aggregated per-provider puts; the pipeline only
+            #     joins them at the end (sync baseline: full barrier here)
+            data_futures = [
+                self._pool.submit(self._put_batch, pid, items)
+                for pid, items in by_provider.items()
+            ]
+            if sync:
+                for f in data_futures:
+                    f.result()
 
-        futures = [self._pool.submit(_put, pid, items) for pid, items in by_provider.items()]
-        for f in futures:
-            f.result()
+            # (3) version numbers + border links for ALL patches under ONE
+            #     manager lock acquisition (the only serialized step) — this
+            #     does not depend on data-put completion, so it runs while
+            #     the pages are still in flight
+            assigned = self.version_manager.assign_versions(blob_id, spans)
+            versions = [v for v, _ in assigned]
 
-        # (3) version numbers + border links for ALL patches under ONE manager
-        #     lock acquisition (the only serialized step), then (4) ONE
-        #     aggregated metadata store for all patches' nodes
-        assigned = self.version_manager.assign_versions(blob_id, spans)
-        versions: List[int] = [v for v, _ in assigned]
-        nodes: List[TreeNode] = []
-        for (page_offset, n_pages), mine, (version, links) in zip(
-            spans, per_patch, assigned
-        ):
-            nodes.extend(
-                build_write_tree(
-                    blob_id, version, total_pages, page_offset, n_pages, mine, links
+            # (4) weave every patch's tree while the data puts are still in
+            #     flight, then LAUNCH one aggregated node put per shard
+            #     (paper §V.A aggregation across the whole writev); the sync
+            #     baseline runs the same aggregated put behind a barrier
+            all_nodes: List[TreeNode] = []
+            for (page_offset, n_pages), mine, (version, links) in zip(
+                spans, per_patch, assigned
+            ):
+                all_nodes.extend(
+                    build_write_tree(
+                        blob_id, version, total_pages, page_offset, n_pages, mine, links
+                    )
                 )
-            )
-        self.metadata.put_nodes(nodes)
+            node_keys.extend(node.key for node in all_nodes)
+            if sync:
+                self.metadata.put_nodes(all_nodes)
+            else:
+                meta_futures.extend(self.metadata.put_nodes_async(all_nodes))
 
-        # (5) report success → in-order publish
-        for version in versions:
-            self.version_manager.report_success(blob_id, version)
+            # join: every page and node must be durable before success
+            for f in data_futures + meta_futures:
+                err = f.exception()
+                if err is not None:
+                    raise err
+
+            # (5) report success (one lock for the batch) → in-order publish
+            self.version_manager.report_successes(blob_id, versions)
+        except BaseException:
+            # NOTE: frozen sources stay frozen — a concurrent write may
+            # already hold zero-copy views of the same root, so restoring
+            # writability here would let the caller mutate ITS published
+            # pages through the shared memory
+            self._abort_writev(
+                blob_id, versions, placements, by_provider, node_keys,
+                data_futures, meta_futures,
+            )
+            raise
+
+        # write-through: the just-stored pages are already immutable, so the
+        # writer's re-reads of these versions come straight from RAM
+        if self.page_cache is not None:
+            items: List[Tuple[Tuple[int, int, int], np.ndarray]] = []
+            for pages, (page_offset, _), version in zip(
+                stored_pages, spans, versions
+            ):
+                for i, page in enumerate(pages):
+                    items.append(((blob_id, version, page_offset + i), page))
+            self.page_cache.put_many(items)
+        return versions
+
+    def _put_batch(self, pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
+        self.provider_manager.get_provider(pid).put_pages(items)
+        self.stats.record_data(pid, len(items), sum(p.nbytes for _, p in items))
+
+    def _abort_writev(
+        self,
+        blob_id: int,
+        versions: List[int],
+        placements: List[Tuple[PageRef, Tuple[PageRef, ...]]],
+        by_provider: Dict[int, List[Tuple[int, np.ndarray]]],
+        node_keys: List[NodeKey],
+        data_futures: List[Future],
+        meta_futures: List[Future],
+    ) -> None:
+        """Failure cleanup for a mid-flight ``writev``: without this, the
+        placement load heap keeps phantom load, stored pages and nodes of the
+        doomed versions leak forever, and in-order publication wedges behind
+        versions that will never report success.
+
+        The doomed versions are withdrawn first; what happens to their
+        stored wreckage depends on how :meth:`VersionManager.abandon`
+        resolved them. Fully *erased* versions (no concurrent writer assigned
+        after them) are scrubbed: pages deleted, nodes deleted, placement
+        credits released. Versions that became publication *holes* are left
+        in place instead — a later writer may already have woven border links
+        into their trees, so deleting whatever did land would turn that
+        writer's published version unreadable; the wreckage stays until
+        :meth:`BlobStore.gc` collects it (which also returns the load
+        credit), the same stance taken for orphans on a down provider."""
+        for f in data_futures + meta_futures:
+            f.exception()  # quiesce: no put may still be in flight
+        if versions:
+            holes = self.version_manager.abandon(blob_id, versions)
+            if holes:
+                return  # leak to GC: later versions may reference the nodes
+        for pid, items in by_provider.items():
+            try:  # best-effort: a down provider keeps its orphans until GC
+                self.provider_manager.get_provider(pid).delete_pages(
+                    [key for key, _ in items]
+                )
+            except (ProviderFailed, KeyError):
+                pass
+        try:
+            self.metadata.delete_nodes(node_keys)
+        except ProviderFailed:
+            pass
+        self.provider_manager.release(
+            [ref for primary, replicas in placements for ref in (primary,) + replicas]
+        )
+
+    # -- asynchronous write streaming ------------------------------------------
+    def write_async(
+        self, blob_id: int, buffer: np.ndarray, offset_bytes: int
+    ) -> "Future[int]":
+        """Queue a :meth:`write` into the bounded in-flight window and return
+        a future of its assigned version. Blocks (backpressure) once
+        ``max_inflight_writes`` writes are outstanding. Successive writes'
+        pipelines overlap — a later write's pages may land before an earlier
+        write's metadata — while the version manager still publishes strictly
+        in assignment order. Join the window with :meth:`flush` (or await the
+        returned future)."""
+        self._write_window.acquire()
+        try:
+            future = self._writers().submit(
+                self._windowed_write, blob_id, buffer, offset_bytes
+            )
+        except BaseException:
+            self._write_window.release()
+            raise
+        with self._async_lock:
+            # prune successfully-completed futures so a long-running streamer
+            # that joins its own returned futures (never calls flush) does
+            # not accumulate them forever; FAILED futures are kept until
+            # flush()/close() so their errors cannot vanish unobserved
+            self._async_writes = [
+                f for f in self._async_writes
+                if not f.done() or f.exception() is not None
+            ]
+            self._async_writes.append(future)
+        return future
+
+    def _writers(self) -> ThreadPoolExecutor:
+        with self._writer_pool_lock:
+            if self._writer_pool is None:
+                self._writer_pool = ThreadPoolExecutor(
+                    max_workers=self.max_inflight_writes
+                )
+            return self._writer_pool
+
+    def _windowed_write(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
+        try:
+            return self.writev(blob_id, [(offset_bytes, buffer)])[0]
+        finally:
+            self._write_window.release()
+
+    def flush(self) -> List[int]:
+        """Join every outstanding :meth:`write_async` — STORE-GLOBAL: it
+        drains the whole window, including writes queued by other threads
+        sharing this store (a multi-writer client should instead join the
+        futures ``write_async`` returned to it). Returns the versions of the
+        writes still tracked by the window (writes that completed and were
+        already pruned are not re-reported) and re-raises the first
+        failure."""
+        with self._async_lock:
+            futures, self._async_writes = self._async_writes, []
+        versions: List[int] = []
+        first_err: Optional[BaseException] = None
+        for f in futures:
+            try:
+                versions.append(f.result())
+            except BaseException as err:  # keep joining; surface the first
+                if first_err is None:
+                    first_err = err
+        if first_err is not None:
+            raise first_err
         return versions
 
     # -- READ --------------------------------------------------------------------
@@ -237,15 +501,14 @@ class BlobStore:
         size_bytes: int,
     ) -> ReadResult:
         """Read ``[offset_bytes, offset_bytes+size_bytes)`` of ``version``
-        (``None`` = latest published). Fails if ``version`` is unpublished or
-        the range is fully out of bounds; a range overlapping the blob's end
-        is clamped (short read)."""
-        total_pages, page_size = self.version_manager.blob_info(blob_id)
-        latest = self.version_manager.latest_published(blob_id)
-        if version is None:
-            version = latest  # resolve once, so the label matches the data
-        elif version > latest:
-            raise ValueError(f"version {version} not yet published (latest={latest})")
+        (``None`` = latest published). Fails if ``version`` is unpublished,
+        abandoned, or the range is fully out of bounds; a range overlapping
+        the blob's end is clamped (short read). A read of exactly one whole
+        page returns a read-only view of the stored/cached page (zero-copy);
+        copy before mutating."""
+        total_pages, page_size, version, latest = (
+            self.version_manager.resolve_read_version(blob_id, version)
+        )
         data = self._readv(
             blob_id, version, [(offset_bytes, size_bytes)], total_pages, page_size
         )[0]
@@ -262,14 +525,12 @@ class BlobStore:
         segments are deduplicated; cache hits skip the network entirely; the
         remaining pages cost one level-synchronous metadata traversal (one
         aggregated RPC per shard per level) plus ONE aggregated ``get_pages``
-        RPC per data provider. Returns one ``np.uint8`` array per segment.
+        RPC per data provider. Returns one ``np.uint8`` array per segment
+        (full-single-page segments are read-only zero-copy views).
         """
-        total_pages, page_size = self.version_manager.blob_info(blob_id)
-        latest = self.version_manager.latest_published(blob_id)
-        if version is None:
-            version = latest
-        elif version > latest:
-            raise ValueError(f"version {version} not yet published (latest={latest})")
+        total_pages, page_size, version, _ = (
+            self.version_manager.resolve_read_version(blob_id, version)
+        )
         return self._readv(blob_id, version, segments, total_pages, page_size)
 
     def _readv(
@@ -349,9 +610,16 @@ class BlobStore:
         for key, flight in waits.items():
             pages[key[2]] = cache.wait(key, flight)  # type: ignore[union-attr, arg-type]
 
-        # assemble per-segment outputs from the shared page map
+        # assemble per-segment outputs from the shared page map: a segment
+        # covering exactly one whole page is served as a zero-copy read-only
+        # view of that page; anything else is written page-by-page directly
+        # into one preallocated output buffer
         outs: List[np.ndarray] = []
         for offset, size in clamped:
+            if size == page_size and offset % page_size == 0:
+                page = pages.get(offset // page_size)
+                outs.append(page if page is not None else _zero_page(page_size))
+                continue
             out = np.zeros(size, dtype=np.uint8)
             for p in range(offset // page_size, -(-(offset + size) // page_size)):
                 page = pages.get(p)
@@ -559,5 +827,15 @@ class BlobStore:
         return sum(p.used_bytes() for p in self.provider_manager.providers())
 
     def close(self) -> None:
+        # quiesce the async write window first; errors are the caller's to
+        # observe via flush()/the returned futures, not close()
+        with self._async_lock:
+            futures, self._async_writes = self._async_writes, []
+        for f in futures:
+            f.exception()
+        with self._writer_pool_lock:
+            if self._writer_pool is not None:
+                self._writer_pool.shutdown(wait=True)
+                self._writer_pool = None
         self.metadata.close()
         self._pool.shutdown(wait=True)

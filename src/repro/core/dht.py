@@ -17,8 +17,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import defaultdict
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, TypeVar
 
 from repro.core.segment_tree import NodeKey, TreeNode
@@ -55,6 +56,11 @@ class TrafficStats:
     per_dest_read_bytes: Dict[int, int] = dataclasses.field(
         default_factory=lambda: defaultdict(int)
     )
+    #: write-path bytes per DATA provider only — the placement-skew signal
+    #: (hot-spotted writes) for the balancer and the write benchmarks
+    per_dest_write_bytes: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int)
+    )
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock, repr=False)
 
     def record(self, dest: int, n_messages: int, n_bytes: int) -> None:
@@ -74,11 +80,18 @@ class TrafficStats:
             self.data_rounds += 1
             if read:
                 self.per_dest_read_bytes[dest] += n_bytes
+            else:
+                self.per_dest_write_bytes[dest] += n_bytes
 
     def read_bytes_snapshot(self) -> Dict[int, int]:
         """Copy of per-data-provider read bytes (for replica choice/skew)."""
         with self._lock:
             return dict(self.per_dest_read_bytes)
+
+    def write_bytes_snapshot(self) -> Dict[int, int]:
+        """Copy of per-data-provider write bytes (for write hot-spot skew)."""
+        with self._lock:
+            return dict(self.per_dest_write_bytes)
 
     def record_metadata(self, dest: int, n_messages: int, n_bytes: int) -> None:
         """One aggregated round-trip to a metadata shard."""
@@ -102,6 +115,7 @@ class TrafficStats:
             self.cache_misses = 0
             self.per_dest_bytes.clear()
             self.per_dest_read_bytes.clear()
+            self.per_dest_write_bytes.clear()
 
 
 #: Serialized size of one tree node on the wire; matches the order of
@@ -166,6 +180,14 @@ class MetadataDHT:
     ``replication`` > 1 stores each node on that many consecutive shards
     (BambooDHT-style neighbor replication); reads fall back across replicas,
     which is the paper's (inherited) metadata fault tolerance.
+
+    ``rpc_latency_seconds`` > 0 models the wire round-trip of one *parallel
+    round* of aggregated shard RPCs (the metadata half of the paper's network
+    model — what the overlapped write plane hides behind the data puts): the
+    concurrent per-shard RPCs of a round complete together one RTT after they
+    are issued, so a round costs ONE flat sleep, not one per shard. The sleep
+    holds no lock and occupies at most one pool worker, so the model adds
+    latency without stealing execution resources from the real data plane.
     """
 
     def __init__(
@@ -174,15 +196,22 @@ class MetadataDHT:
         replication: int = 1,
         stats: Optional[TrafficStats] = None,
         executor: Optional[ThreadPoolExecutor] = None,
+        rpc_latency_seconds: float = 0.0,
     ) -> None:
         if replication > n_shards:
             raise ValueError("replication cannot exceed shard count")
         self.shards = [MetadataShard(i) for i in range(n_shards)]
+        self.rpc_latency_seconds = rpc_latency_seconds
         self.replication = replication
         self.stats = stats or TrafficStats()
         self._executor = executor
         self._owns_executor = False
         self._executor_lock = threading.Lock()
+
+    def _round_trip(self) -> None:
+        """One modeled RTT for a parallel round of shard RPCs."""
+        if self.rpc_latency_seconds > 0.0:
+            time.sleep(self.rpc_latency_seconds)
 
     def _pool(self) -> ThreadPoolExecutor:
         with self._executor_lock:
@@ -232,6 +261,30 @@ class MetadataDHT:
             self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
 
         self._fan_out(list(by_shard.items()), _put)
+        self._round_trip()
+
+    def put_nodes_async(self, nodes: Sequence[TreeNode]) -> List[Future]:
+        """Pipelined :meth:`put_nodes`: returns immediately with the round's
+        future(s); the overlapped write plane stores a writev's metadata
+        while its data puts are still in flight, joining everything only
+        before ``report_success``. The round runs on ONE pool worker that
+        performs the per-shard batch stores back-to-back (in-process dict
+        inserts, microseconds each — fanning them out would cost more in task
+        dispatch, and a worker waiting on nested futures could deadlock a
+        saturated pool) and then sleeps one modeled RTT for the whole round,
+        mirroring what concurrent per-shard wire RPCs would cost."""
+        by_shard: Dict[int, List[TreeNode]] = defaultdict(list)
+        for node in nodes:
+            for sid in self._replica_ids(node.key):
+                by_shard[sid].append(node)
+
+        def _put_round() -> None:
+            for sid, batch in by_shard.items():
+                self.shards[sid].put_many(batch)
+                self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+            self._round_trip()
+
+        return [self._pool().submit(_put_round)]
 
     def get_node(self, key: NodeKey) -> TreeNode:
         last_err: Optional[Exception] = None
@@ -239,6 +292,7 @@ class MetadataDHT:
             try:
                 node = self.shards[sid].get(key)
                 self.stats.record_metadata(sid, 1, NODE_WIRE_BYTES)
+                self._round_trip()
             except ProviderFailed as err:  # replica fallback
                 last_err = err
                 continue
@@ -282,6 +336,7 @@ class MetadataDHT:
                 assert got is not None
                 found.update(got)
                 still_missing.extend(k for k in batch if k not in got)
+            self._round_trip()
             pending = still_missing
         if pending:
             if last_err is not None:  # an outage, not a lost node

@@ -15,9 +15,17 @@ Two mechanisms live here:
   while the others wait on the in-flight entry — N concurrent readers of a
   cold hot-window cost one provider fetch per page, not N.
 
-Only pages of published versions may enter the cache — the
-:class:`~repro.core.blob.BlobStore` read path guarantees this by rejecting
-reads of unpublished versions before the cache is ever consulted.
+Pages enter the cache from two directions, both coherent for the same
+reason — a version's page content is fixed the moment its data is stored,
+before it even publishes:
+
+* the read path caches fetched pages of *published* versions (reads of
+  unpublished versions are rejected before the cache is consulted);
+* the write path **writes through**: a successful ``writev`` inserts its own
+  just-stored pages under its freshly assigned versions, so a writer's
+  re-reads of its own data are RAM hits with no provider round-trip. Readers
+  still cannot *see* those versions until the version manager publishes
+  them — visibility is gated upstream, never by the cache.
 """
 
 from __future__ import annotations
@@ -156,6 +164,18 @@ class PageCache:
         page.flags.writeable = False
         with self._lock:
             self._insert(key, page, page.nbytes)
+
+    def put_many(self, items: Sequence[Tuple[CacheKey, np.ndarray]]) -> None:
+        """Bulk insert under ONE lock acquisition — the write-through path of
+        ``writev`` inserts every page of a patch batch in one pass."""
+        frozen = []
+        for key, page in items:
+            page = page.view()
+            page.flags.writeable = False
+            frozen.append((key, page))
+        with self._lock:
+            for key, page in frozen:
+                self._insert(key, page, page.nbytes)
 
     # -- internals --------------------------------------------------------------
     def _insert(self, key: CacheKey, page: np.ndarray, charge: int) -> None:

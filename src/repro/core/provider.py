@@ -56,10 +56,15 @@ class DataProvider:
             time.sleep(self.page_service_seconds * n_pages)
 
     def put_pages(self, items: Sequence[Tuple[int, np.ndarray]]) -> None:
+        """Store pages zero-copy: the given arrays (typically read-only views
+        into a writer's frozen source buffer) are referenced, never copied.
+        Each stored page is marked read-only here, so the COW discipline is
+        enforced at the store boundary no matter what the caller passed."""
         with self._lock:
             if self.failed:
                 raise ProviderFailed(f"data provider {self.provider_id} is down")
             for page_key, data in items:
+                data.flags.writeable = False
                 self._pages[page_key] = data
             self._serve(len(items))
 
@@ -73,7 +78,9 @@ class DataProvider:
 
     def get_pages(self, page_keys: Sequence[int]) -> List[np.ndarray]:
         """One aggregated RPC for many pages (paper §V.A batching). Raises
-        ``KeyError`` on the first missing key — callers fall back per page."""
+        ``KeyError`` on the first missing key — callers fall back per page.
+        Returns the stored (immutable, read-only) arrays themselves — no
+        defensive copies; published-page immutability makes sharing safe."""
         with self._lock:
             if self.failed:
                 raise ProviderFailed(f"data provider {self.provider_id} is down")

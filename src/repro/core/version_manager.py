@@ -15,7 +15,10 @@ Responsibilities, exactly as in the paper:
 Fault tolerance (paper's future work, implemented here): every state
 transition is appended to a journal; :func:`VersionManager.recover` rebuilds a
 manager from a journal replay, and unfinished assignments are surfaced so the
-caller can retry or abandon them.
+caller can retry or abandon them. :meth:`VersionManager.abandon` is the online
+analog — a writer whose data or metadata puts failed mid-flight withdraws its
+assigned versions so in-order publication is never wedged behind a version
+that will never report success.
 """
 
 from __future__ import annotations
@@ -31,7 +34,7 @@ from repro.core.segment_tree import BorderLink, ZERO_VERSION, compute_border_lin
 
 @dataclasses.dataclass
 class JournalEntry:
-    op: str  # "alloc" | "assign" | "complete"
+    op: str  # "alloc" | "assign" | "complete" | "abandon"
     blob_id: int
     version: int = 0
     offset: int = 0
@@ -52,6 +55,9 @@ class _BlobState:
     intervals: Dict[int, Tuple[int, int]] = dataclasses.field(default_factory=dict)
     #: versions that reported success but are not yet publishable
     completed: set = dataclasses.field(default_factory=set)
+    #: versions withdrawn by failed writers; publication skips over them but
+    #: they are never readable (their trees were never fully stored)
+    aborted: set = dataclasses.field(default_factory=set)
     #: per-page latest assigned version, for O(range-max) border queries
     page_versions: Optional[np.ndarray] = None
 
@@ -142,20 +148,124 @@ class VersionManager:
     def report_success(self, blob_id: int, version: int) -> int:
         """Final step of a WRITE. Publishes the maximal completed prefix and
         returns the new latest published version."""
+        return self.report_successes(blob_id, [version])
+
+    def report_successes(self, blob_id: int, versions: Sequence[int]) -> int:
+        """Batched :meth:`report_success` for a multi-patch ``writev``: all of
+        the batch's versions complete under ONE lock acquisition (one
+        ``complete`` journal entry per version, so journals stay
+        byte-compatible with the single-version API)."""
         with self._lock:
             st = self._blobs[blob_id]
-            st.completed.add(version)
-            self.journal.append(JournalEntry("complete", blob_id, version))
-            while (st.published + 1) in st.completed:
-                st.completed.discard(st.published + 1)
-                st.published += 1
-            self._published_cv.notify_all()
+            for version in versions:
+                st.completed.add(version)
+                self.journal.append(JournalEntry("complete", blob_id, version))
+            self._advance_published_locked(st)
             return st.published
 
-    # -- READ protocol ---------------------------------------------------------
-    def latest_published(self, blob_id: int) -> int:
+    def abandon(self, blob_id: int, versions: Sequence[int]) -> "set":
+        """Withdraw assigned-but-unreportable versions after a failed WRITE.
+
+        Without this, in-order publication would wedge forever behind a
+        version whose writer died mid-flight. Two cases, handled newest-first:
+
+        * the version is still the *latest* assignment — it is fully erased
+          (interval history and the per-page version array are rolled back),
+          so no future border link can ever reference it and the version
+          number is reused by the next writer;
+        * a concurrent writer was assigned after it — the version becomes an
+          *aborted hole*: publication skips over it, reads of it are
+          rejected, but its interval stays in the history because later
+          writers may already have woven border links against it (resolving
+          those dangling links is writer recovery, the paper's future work).
+
+        Returns the set of versions that became holes (empty when everything
+        was erased) — the caller must NOT scrub a hole's stored pages/nodes,
+        since later writers' trees may reference them.
+        """
+        holes: set = set()
         with self._lock:
-            return self._blobs[blob_id].published
+            st = self._blobs[blob_id]
+            pv = st.page_versions
+            assert pv is not None
+            for v in sorted(set(versions), reverse=True):
+                if (
+                    v <= st.published
+                    or v > st.assigned
+                    or v in st.completed
+                    or v in st.aborted
+                ):
+                    continue  # published/completed versions are past abandoning
+                self.journal.append(JournalEntry("abandon", blob_id, v))
+                if v == st.assigned:
+                    offset, size = st.intervals.pop(v)
+                    st.assigned -= 1
+                    # roll the per-page latest-version array back to what the
+                    # remaining interval history implies for the erased span
+                    seg = np.full(size, ZERO_VERSION, dtype=np.int64)
+                    for w, (wo, ws) in st.intervals.items():
+                        lo, hi = max(offset, wo), min(offset + size, wo + ws)
+                        if lo < hi:
+                            np.maximum(
+                                seg[lo - offset : hi - offset],
+                                w,
+                                out=seg[lo - offset : hi - offset],
+                            )
+                    pv[offset : offset + size] = seg
+                else:
+                    st.aborted.add(v)
+                    holes.add(v)
+            self._advance_published_locked(st)
+        return holes
+
+    def _advance_published_locked(self, st: _BlobState) -> None:
+        """Publish the maximal completed-or-aborted prefix (caller holds the
+        lock). Aborted versions are skipped over but stay in ``st.aborted`` so
+        reads can reject them."""
+        while (st.published + 1) in st.completed or (st.published + 1) in st.aborted:
+            st.completed.discard(st.published + 1)
+            st.published += 1
+        self._published_cv.notify_all()
+
+    # -- READ protocol ---------------------------------------------------------
+    @staticmethod
+    def _latest_readable_locked(st: _BlobState) -> int:
+        """Latest readable published version (caller holds the lock):
+        aborted holes at the publish frontier are walked back over (an
+        aborted version has no tree)."""
+        v = st.published
+        while v in st.aborted:
+            v -= 1
+        return v
+
+    def latest_published(self, blob_id: int) -> int:
+        """Latest *readable* published version."""
+        with self._lock:
+            return self._latest_readable_locked(self._blobs[blob_id])
+
+    def resolve_read_version(
+        self, blob_id: int, version: Optional[int]
+    ) -> Tuple[int, int, int, int]:
+        """One-lock READ setup: returns ``(total_pages, page_size, resolved,
+        latest)`` where ``resolved`` is ``version`` (validated: published and
+        not aborted) or the latest readable version when ``version`` is None.
+        The serialized actor is consulted exactly once per read call."""
+        with self._lock:
+            st = self._blobs[blob_id]
+            latest = self._latest_readable_locked(st)
+            if version is None:
+                resolved = latest
+            else:
+                if version > st.published:
+                    raise ValueError(
+                        f"version {version} not yet published (latest={st.published})"
+                    )
+                if version in st.aborted:
+                    raise ValueError(
+                        f"version {version} was abandoned by a failed writer"
+                    )
+                resolved = version
+            return st.total_pages, st.page_size, resolved, latest
 
     def is_published(self, blob_id: int, version: int) -> bool:
         with self._lock:
@@ -199,10 +309,16 @@ class VersionManager:
                 assert version == entry.version
             elif entry.op == "complete":
                 completed[entry.blob_id].add(entry.version)
+            elif entry.op == "abandon":
+                vm.abandon(entry.blob_id, [entry.version])
         orphans: Dict[int, List[int]] = {}
         for bid, done in completed.items():
             for v in sorted(done):
                 vm.report_success(bid, v)
             st = vm._blobs[bid]
-            orphans[bid] = [v for v in range(1, st.assigned + 1) if v not in done and v > st.published]
+            orphans[bid] = [
+                v
+                for v in range(1, st.assigned + 1)
+                if v not in done and v not in st.aborted and v > st.published
+            ]
         return vm, orphans

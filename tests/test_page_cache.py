@@ -114,6 +114,8 @@ def test_concurrent_cold_readers_one_fetch_per_page():
     blob = store.alloc(16 * PAGE, PAGE)
     payload = np.arange(16 * PAGE, dtype=np.uint8) % 251
     store.write(blob, payload, 0)
+    # drop the write-through entries: this test measures COLD readers
+    store.page_cache.clear()
 
     # count every page key fetched from any provider, and slow fetches down
     # so the reader threads genuinely overlap
