@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BlobStore
+from repro.core import Cluster
 from repro.storage.checkpoint import BlobCheckpointer
 
 
@@ -24,14 +24,15 @@ def run(dim=1024, n_layers=12) -> List[dict]:
         f"layer{i}": jax.random.normal(jax.random.fold_in(key, i), (dim, dim * 2), jnp.float32)
         for i in range(n_layers)
     }
-    store = BlobStore(n_data_providers=8, n_metadata_providers=8)
-    ck = BlobCheckpointer(store, state, page_size=1 << 20, keep_last=10)
+    cluster = Cluster(n_data_providers=8, n_metadata_providers=8,
+                      shared_cache_bytes=0)
+    ck = BlobCheckpointer(cluster.session(), state, page_size=1 << 20, keep_last=10)
     rows = []
 
     t0 = time.perf_counter()
     rec = ck.save(0, state)
     rows.append(dict(kind="full", seconds=time.perf_counter() - t0,
-                     dirty_pages=rec.dirty_pages, stored_MB=store.storage_bytes() / 1e6))
+                     dirty_pages=rec.dirty_pages, stored_MB=cluster.storage_bytes() / 1e6))
 
     # touch 10% of layers (e.g. only the trained adapter / embedding rows)
     state2 = dict(state)
@@ -39,19 +40,19 @@ def run(dim=1024, n_layers=12) -> List[dict]:
     t0 = time.perf_counter()
     rec = ck.save(1, state2)
     rows.append(dict(kind="incremental_10pct", seconds=time.perf_counter() - t0,
-                     dirty_pages=rec.dirty_pages, stored_MB=store.storage_bytes() / 1e6))
+                     dirty_pages=rec.dirty_pages, stored_MB=cluster.storage_bytes() / 1e6))
 
     # unchanged state: pure dedup
     t0 = time.perf_counter()
     rec = ck.save(2, state2)
     rows.append(dict(kind="unchanged", seconds=time.perf_counter() - t0,
-                     dirty_pages=rec.dirty_pages, stored_MB=store.storage_bytes() / 1e6))
+                     dirty_pages=rec.dirty_pages, stored_MB=cluster.storage_bytes() / 1e6))
 
     # restore
     t0 = time.perf_counter()
     ck.restore(1)
     rows.append(dict(kind="restore", seconds=time.perf_counter() - t0,
-                     dirty_pages=0, stored_MB=store.storage_bytes() / 1e6))
+                     dirty_pages=0, stored_MB=cluster.storage_bytes() / 1e6))
     return rows
 
 

@@ -5,8 +5,10 @@ Usage: PYTHONPATH=src python -m benchmarks.compare [--json PATH] [--clients N]
 Loads the current ``BENCH_concurrent.json`` (working tree), walks the git
 history of that file for the most recent committed payload with a different
 ``git_rev`` stamp, and prints per-(mode, clients) deltas of aggregate
-bandwidth — the PR-to-PR perf trajectory check the ROADMAP calls for. Modes
-present on only one side are listed as added/removed rather than diffed.
+bandwidth — the PR-to-PR perf trajectory check the ROADMAP calls for. A mode
+that did not exist in the previous payload reports ``new`` (never an error —
+every PR that adds a benchmark mode hits this case), a mode that disappeared
+reports ``removed``, and rows missing expected keys degrade to ``?`` cells.
 
 Exit status is always 0: this is a reporting tool, not a gate — regressions
 are for the PR author/reviewer to judge with the printed numbers in hand.
@@ -55,7 +57,19 @@ def load_previous(path: pathlib.Path) -> Optional[dict]:
 
 
 def _index(payload: dict) -> Dict[Tuple[str, int], dict]:
-    return {(r["mode"], r["clients"]): r for r in payload.get("rows", [])}
+    return {
+        (r["mode"], r["clients"]): r
+        for r in payload.get("rows", [])
+        if "mode" in r and "clients" in r
+    }
+
+
+def _cell(row: Optional[dict]) -> str:
+    """Format a row's aggregate bandwidth; '?' for schema-mismatched rows."""
+    if row is None:
+        return "-"
+    value = row.get("aggregate_MBps")
+    return f"{value:.1f}" if isinstance(value, (int, float)) else "?"
 
 
 def diff_rows(old: dict, new: dict, clients: Optional[int] = None) -> List[str]:
@@ -73,15 +87,19 @@ def diff_rows(old: dict, new: dict, clients: Optional[int] = None) -> List[str]:
         new_row = new_idx[key]
         old_row = old_idx.get(key)
         if old_row is None:
-            lines.append(f"{mode},{n},-,{new_row['aggregate_MBps']:.1f},added")
+            # a mode this PR introduced: report it, never crash on it
+            lines.append(f"{mode},{n},-,{_cell(new_row)},new")
             continue
-        a, b = old_row["aggregate_MBps"], new_row["aggregate_MBps"]
+        a, b = old_row.get("aggregate_MBps"), new_row.get("aggregate_MBps")
+        if not isinstance(a, (int, float)) or not isinstance(b, (int, float)):
+            lines.append(f"{mode},{n},{_cell(old_row)},{_cell(new_row)},?")
+            continue
         pct = (b - a) / a * 100.0 if a else float("inf")
         lines.append(f"{mode},{n},{a:.1f},{b:.1f},{pct:+.1f}%")
     for key in sorted(set(old_idx) - set(new_idx)):
         if clients is not None and key[1] != clients:
             continue
-        lines.append(f"{key[0]},{key[1]},{old_idx[key]['aggregate_MBps']:.1f},-,removed")
+        lines.append(f"{key[0]},{key[1]},{_cell(old_idx[key])},-,removed")
     return lines
 
 

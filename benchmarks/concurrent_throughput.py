@@ -7,7 +7,13 @@ as N grows (lock-free design, only the version-number interaction is
 serialized). We measure aggregate and per-client wall-clock bandwidth for
 reads, writes, and a mixed R/W workload.
 
-On top of the paper's sweep, three client-side scaling modes:
+Every mode runs on the layered API: one :class:`~repro.core.Cluster` per
+measurement, client threads driving :class:`~repro.core.BlobHandle` ops. The
+legacy modes share ONE session across the client threads (the pre-split
+topology those numbers were always measured on); the ``multi-session`` modes
+give every client its own :class:`~repro.core.Session`.
+
+On top of the paper's sweep, the client-side scaling modes:
 
 * ``hot-read`` vs ``cached-read`` — the same hot-window workload (clients
   re-read overlapping windows, the supernovae-detector access pattern) with
@@ -24,6 +30,17 @@ On top of the paper's sweep, three client-side scaling modes:
   ``skew-read`` turns on the :class:`~repro.core.ReplicaBalancer` — hot pages
   are promoted onto extra providers and fetches spread across replicas — and
   recovers the lost aggregate bandwidth (BlobSeer-style dynamic replication).
+* ``multi-session`` vs ``multi-session-private`` — N sessions on ONE
+  cluster, every session sweeping the SAME fresh hot window exactly once
+  (the detector fleet reading a newly published sky frame: no intra-session
+  re-reads, total cross-session overlap) against service-limited providers.
+  ``multi-session`` enables the cluster's shared intra-node cache tier: the
+  first session to touch a page fetches it (node-wide single-flight), every
+  other session hits RAM — provider traffic for the whole fleet collapses to
+  ONE sweep. ``multi-session-private`` gives each session only a private
+  cache (which never hits — no session re-reads a page), so all N sessions
+  grind through the providers. The A/B is the shared-tier headline:
+  ≥1.5× aggregate read bandwidth at 8 sessions.
 
 The write-plane modes measure the overlapped write pipeline under a modeled
 grid network — finite provider bandwidth (``page_service_seconds`` per page)
@@ -33,7 +50,7 @@ decoupled WRITE protocol:
 
 * ``write`` — fine-grain one-page writes through the pipelined ``writev``
   (data puts, version assignment and metadata weaving all overlapped);
-* ``sync-write`` — the SAME workload with ``BlobStore(sync_write=True)``:
+* ``sync-write`` — the SAME workload with ``session(sync_write=True)``:
   the pre-pipeline write path (full barrier between stages, defensive page
   copies). The A/B pair in one run is the headline: pipelining buys >=1.5x
   aggregate write bandwidth at 16 clients. Off by default; enable with
@@ -50,19 +67,21 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.paper_sky import CONFIG as SKY
-from repro.core import BalancerConfig, BlobStore
+from repro.core import BalancerConfig, Cluster, Session
 
 MODES = ("read", "write", "stream-write", "mixed", "hot-read", "cached-read",
-         "readv", "skew-read-primary", "skew-read")
+         "readv", "skew-read-primary", "skew-read",
+         "multi-session-private", "multi-session")
 #: the pre-pipeline write path, kept out of the default sweep: enable the
 #: A/B with ``python -m benchmarks.run --sync-write``
 SYNC_WRITE_MODE = "sync-write"
 WRITE_MODES = ("write", SYNC_WRITE_MODE, "stream-write", "mixed")
+MULTI_SESSION_MODES = ("multi-session", "multi-session-private")
 
 #: skew workload shape: HOT_FRACTION of reads land on SKEW_HOT_PAGES pages
 SKEW_HOT_PAGES = 2
@@ -73,6 +92,13 @@ HOT_FRACTION = 0.9
 SKEW_SERVICE_SECONDS = 0.01
 #: promoted copies per hot page: spread each hot page over up to 10 providers
 SKEW_MAX_EXTRA_REPLICAS = 9
+
+#: multi-session modes: per-page service time — the provider-side resource a
+#: shared cache tier saves (each page crosses the network once per NODE, not
+#: once per session)
+MULTI_SERVICE_SECONDS = 0.01
+#: shared tier budget for the multi-session A/B (ON side)
+MULTI_SHARED_CACHE_BYTES = 256 << 20
 
 #: write-plane network model: per-page provider service time (finite data
 #: bandwidth) and per-round metadata RTT. Sized so the modeled I/O dominates
@@ -88,13 +114,13 @@ WRITE_WINDOW_PAGES = 1024
 STREAM_WINDOW_PER_CLIENT = 4
 
 
-def _make_store(mode: str, n_providers: int, n_clients: int = 1) -> BlobStore:
+def _make_cluster(mode: str, n_providers: int, n_clients: int = 1) -> Cluster:
     if mode.startswith("skew-read"):
         replicate = mode == "skew-read"
-        return BlobStore(
+        return Cluster(
             n_data_providers=n_providers, n_metadata_providers=n_providers,
-            max_workers=4 * n_providers, cache_bytes=0,
-            replica_spread=replicate, hot_replicas=replicate,
+            max_workers=4 * n_providers, shared_cache_bytes=0,
+            hot_replicas=replicate,
             balancer_config=BalancerConfig(
                 hot_threshold=4, skew_ratio=1.2, check_interval=16,
                 max_extra_replicas=min(SKEW_MAX_EXTRA_REPLICAS, n_providers - 1),
@@ -102,75 +128,126 @@ def _make_store(mode: str, n_providers: int, n_clients: int = 1) -> BlobStore:
             ),
             page_service_seconds=SKEW_SERVICE_SECONDS,
         )
-    if mode in WRITE_MODES:
-        return BlobStore(
+    if mode in MULTI_SESSION_MODES:
+        shared = mode == "multi-session"
+        return Cluster(
             n_data_providers=n_providers, n_metadata_providers=n_providers,
             max_workers=4 * n_providers,
-            # mixed keeps the cache: its re-reads are the write-through demo
-            cache_bytes=(128 << 20) if mode == "mixed" else 0,
+            shared_cache_bytes=MULTI_SHARED_CACHE_BYTES if shared else 0,
+            page_service_seconds=MULTI_SERVICE_SECONDS,
+        )
+    if mode in WRITE_MODES:
+        return Cluster(
+            n_data_providers=n_providers, n_metadata_providers=n_providers,
+            max_workers=4 * n_providers, shared_cache_bytes=0,
             page_service_seconds=WRITE_SERVICE_SECONDS,
             metadata_latency_seconds=METADATA_LATENCY_SECONDS,
+        )
+    return Cluster(
+        n_data_providers=n_providers, n_metadata_providers=n_providers,
+        max_workers=4 * n_providers, shared_cache_bytes=0,
+    )
+
+
+def _make_sessions(mode: str, cluster: Cluster, n_clients: int) -> List[Session]:
+    """Per-client sessions for the multi-session modes; ONE session shared by
+    every client thread otherwise (the topology the legacy numbers were
+    always measured on)."""
+    if mode in MULTI_SESSION_MODES:
+        # OFF side: a private per-session cache (it never hits — the sweep
+        # has no intra-session re-reads, which is exactly the point);
+        # ON side: no private caches, everything rides the shared tier
+        cache = 0 if mode == "multi-session" else (64 << 20)
+        return [cluster.session(cache_bytes=cache) for _ in range(n_clients)]
+    if mode.startswith("skew-read"):
+        session = cluster.session(
+            cache_bytes=0, replica_spread=(mode == "skew-read")
+        )
+    elif mode in WRITE_MODES:
+        session = cluster.session(
+            # mixed keeps the cache: its re-reads are the write-through demo
+            cache_bytes=(128 << 20) if mode == "mixed" else 0,
             sync_write=(mode == SYNC_WRITE_MODE),
             max_inflight_writes=STREAM_WINDOW_PER_CLIENT * n_clients,
         )
-    # the cache is the measured subject of cached-read; every other mode
-    # runs uncached so the paper's baseline stays the baseline
-    cache_bytes = (128 << 20) if mode == "cached-read" else 0
-    return BlobStore(
-        n_data_providers=n_providers, n_metadata_providers=n_providers,
-        max_workers=4 * n_providers, cache_bytes=cache_bytes,
-    )
+    else:
+        # the cache is the measured subject of cached-read; every other mode
+        # runs uncached so the paper's baseline stays the baseline
+        session = cluster.session(
+            cache_bytes=(128 << 20) if mode == "cached-read" else 0
+        )
+    return [session] * n_clients
 
 
 def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
         page_size=64 << 10, n_providers=20, modes=MODES) -> List[dict]:
     rows = []
     # client-count-major order: all modes run back-to-back at each client
-    # count, so A/B pairs (write vs sync-write) are measured adjacently in
-    # time — minutes of thermal/CPU-quota drift between the two sides would
-    # otherwise swamp the pipelining signal at high concurrency
+    # count, so A/B pairs (write vs sync-write, multi-session vs -private)
+    # are measured adjacently in time — minutes of thermal/CPU-quota drift
+    # between the two sides would otherwise swamp the signal
     for n_clients in n_clients_list:
         for mode in modes:
-            store = _make_store(mode, n_providers, n_clients)
-            # skew and write modes allocate a window-sized blob: they measure
-            # data-plane behavior under network service limits, so the
-            # metadata depth of the paper's 1 TB blob would only add
-            # identical CPU to both sides of their comparisons
+            cluster = _make_cluster(mode, n_providers, n_clients)
+            sessions = _make_sessions(mode, cluster, n_clients)
+            # the multi-session sweep window: every session reads each page
+            # exactly once, so only CROSS-session sharing can save traffic
+            multi_window = iters * max(seg_bytes // page_size, 1)
+            # skew, multi-session and write modes allocate a window-sized
+            # blob: they measure data-plane behavior under network service
+            # limits, so the metadata depth of the paper's 1 TB blob would
+            # only add identical CPU to both sides of their comparisons
             if mode.startswith("skew-read"):
                 blob_bytes = SKEW_WINDOW_PAGES * page_size
+            elif mode in MULTI_SESSION_MODES:
+                blob_bytes = (1 << (multi_window - 1).bit_length()) * page_size
             elif mode in WRITE_MODES:
                 blob_bytes = WRITE_WINDOW_PAGES * page_size
             else:
                 blob_bytes = SKY.blob_size
-            blob = store.alloc(blob_bytes, page_size)
+            blob = cluster.alloc(blob_bytes, page_size)
             # pre-populate the hot window so reads hit real pages; the
-            # cache-demo modes re-read a (smaller) fully-prefilled window;
-            # pure-write modes need no prefill at all (mixed re-reads only
-            # its own writes, which write through into the cache)
+            # cache-demo modes re-read a (smaller) fully-prefilled window.
+            # Read-mode prefill runs through a DEDICATED writer session so
+            # its write-through entries cannot pre-warm any measured cache;
+            # write modes instead warm up through the measured session on
+            # purpose (pool spin-up must not land in the timed window, and
+            # mixed never re-reads the prefill versions).
             hot = SKY.hot_interval
             if mode in ("hot-read", "cached-read", "readv"):
                 hot = min(hot, 64 << 20)
             if mode.startswith("skew-read"):
                 hot = SKEW_WINDOW_PAGES * page_size
+            if mode in MULTI_SESSION_MODES:
+                hot = multi_window * page_size
             if mode in WRITE_MODES:
                 hot = WRITE_WINDOW_PAGES * page_size
             init = np.ones(seg_bytes, np.uint8)
-            fully_prefilled = mode.startswith("skew-read") or mode in (
-                "hot-read", "cached-read", "readv"
+            fully_prefilled = (
+                mode.startswith("skew-read")
+                or mode in MULTI_SESSION_MODES
+                or mode in ("hot-read", "cached-read", "readv")
             )
             if mode not in WRITE_MODES:
+                writer = cluster.session(cache_bytes=0)
                 prefill = hot if fully_prefilled else min(hot, seg_bytes * n_clients * iters)
-                store.writev(blob, [(off, init[: min(seg_bytes, prefill - off)])
-                                   for off in range(0, prefill, seg_bytes)])
+                writer.open(blob).writev(
+                    [(off, init[: min(seg_bytes, prefill - off)])
+                     for off in range(0, prefill, seg_bytes)]
+                )
+                writer.close()
             elif mode == "stream-write":
                 # warm the lazily-spawned worker + writer pools so the timed
                 # window doesn't pay thread creation
+                sh = sessions[0].open(blob)
                 for p in range(2 * n_clients):
-                    store.write_async(blob, init[:page_size], p * page_size)
-                store.flush()
+                    sh.write_async(init[:page_size], p * page_size)
+                sessions[0].flush()
             else:
-                store.writev(blob, [(p * page_size, init[:page_size])
-                                    for p in range(2 * n_clients)])
+                sessions[0].open(blob).writev(
+                    [(p * page_size, init[:page_size])
+                     for p in range(2 * n_clients)]
+                )
 
             barrier = threading.Barrier(n_clients)
             times: List[float] = [0.0] * n_clients
@@ -187,6 +264,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 mode_iters = iters
 
             def client(cid: int) -> None:
+                handle = sessions[cid].open(blob)
                 buf = np.full(seg_bytes, cid + 1, np.uint8)
                 # write modes hand out an OWNED page-sized buffer: writev
                 # freezes it on first use and stores zero-copy views of it
@@ -203,21 +281,29 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                             p = int(rng.integers(SKEW_HOT_PAGES))
                         else:
                             p = int(rng.integers(SKEW_WINDOW_PAGES))
-                        moved += store.read(blob, None, p * page_size, page_size).data.size
+                        moved += handle.read(p * page_size, page_size).data.size
+                    elif mode in MULTI_SESSION_MODES:
+                        # every session sweeps the SAME window once, phase-
+                        # staggered (each detector starts at a different sky
+                        # region of one freshly published frame): zero intra-
+                        # session re-reads, total cross-session overlap
+                        phase = cid * max(mode_iters // max(n_clients, 1), 1)
+                        seg = (i + phase) % mode_iters
+                        moved += handle.read(seg * seg_bytes, seg_bytes).data.size
                     elif mode in ("hot-read", "cached-read"):
                         # detector re-read pattern: each client cycles over a
                         # few half-overlapping windows that also overlap its
                         # neighbours' — repeat pages dominate
                         span = max(hot - seg_bytes, page_size)
                         off = ((cid * 3 + (i % 4)) * (seg_bytes // 2)) % span
-                        moved += store.read(blob, None, off, seg_bytes).data.size
+                        moved += handle.read(off, seg_bytes).data.size
                     elif mode == "readv":
                         # K overlapping segments fetched in one vectored call
                         span = max(hot - 2 * seg_bytes, page_size)
                         base = ((cid * iters + i) * seg_bytes) % span
                         segs = [(base + k * (seg_bytes // 4), seg_bytes // 2)
                                 for k in range(8)]
-                        moved += sum(o.size for o in store.readv(blob, None, segs))
+                        moved += sum(o.size for o in handle.readv(segs))
                     elif mode in WRITE_MODES:
                         # fine-grain one-page writes, disjoint per client
                         # until offsets wrap the window (16 clients x 80
@@ -227,49 +313,49 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                         # cost — the overlap being measured
                         off = ((cid * mode_iters + i) % WRITE_WINDOW_PAGES) * page_size
                         if mode == "stream-write":
-                            inflight.append(store.write_async(blob, wbuf, off))
+                            inflight.append(handle.write_async(wbuf, off))
                         else:
-                            v = store.write(blob, wbuf, off)
+                            v = handle.write(wbuf, off)
                             if mode == "mixed":
                                 # re-read what we just wrote: a write-through
                                 # cache hit, no provider round-trip (but the
                                 # snapshot is only readable once in-order
                                 # publication reaches it)
-                                store.version_manager.wait_published(blob, v)
-                                moved += store.read(blob, v, off, page_size).data.size
+                                handle.wait_for_version(v)
+                                moved += handle.read(off, page_size, version=v).data.size
                         moved += page_size
                     else:
                         # disjoint segments per client (the paper's workload)
                         off = ((cid * iters + i) * seg_bytes) % hot
-                        moved += store.read(blob, None, off, seg_bytes).data.size
+                        moved += handle.read(off, seg_bytes).data.size
                 for fut in inflight:
-                    fut.result()  # join OWN stream only (flush is store-global)
+                    fut.result()  # join OWN stream only (flush joins a session)
                 times[cid] = time.perf_counter() - t0
                 bytes_moved[cid] = moved
 
-            store.stats.reset()
+            cluster.stats.reset()
             threads = [threading.Thread(target=client, args=(c,)) for c in range(n_clients)]
             for t in threads:
                 t.start()
             for t in threads:
                 t.join()
             per_client = [b / t / 1e6 for b, t in zip(bytes_moved, times)]  # MB/s
-            hits, misses = store.stats.cache_hits, store.stats.cache_misses
-            bal = store.replica_balancer
-            wbytes = list(store.stats.write_bytes_snapshot().values())
+            hits, misses = cluster.stats.cache_hits, cluster.stats.cache_misses
+            bal = cluster.replica_balancer
+            wbytes = list(cluster.stats.write_bytes_snapshot().values())
             rows.append(dict(
                 mode=mode, clients=n_clients,
                 per_client_MBps=float(np.mean(per_client)),
                 min_client_MBps=float(np.min(per_client)),
                 aggregate_MBps=float(sum(per_client)),
-                data_rounds=store.stats.data_rounds,
+                data_rounds=cluster.stats.data_rounds,
                 cache_hit_rate=hits / (hits + misses) if hits + misses else 0.0,
                 promotions=bal.promotions if bal is not None else 0,
                 # per-destination write skew (max/mean): 1.0 = perfectly
                 # balanced placement, >>1 = write hot-spotting
                 write_skew=float(max(wbytes) / np.mean(wbytes)) if wbytes else 0.0,
             ))
-            store.close()
+            cluster.close()
     # present rows mode-major (the historical JSON/CSV layout) regardless of
     # the execution order above
     order = {m: i for i, m in enumerate(modes)}

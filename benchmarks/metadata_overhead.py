@@ -16,7 +16,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.configs.paper_sky import CONFIG as SKY
-from repro.core import BlobStore, count_write_nodes
+from repro.core import Cluster, count_write_nodes
 from repro.core.dht import NODE_WIRE_BYTES
 
 
@@ -45,30 +45,32 @@ def run(n_providers_list=(10, 20, 40), segments=(64 << 10, 256 << 10, 1 << 20, 1
     rows = []
     blob_size = SKY.blob_size  # 1 TB logical (allocate-on-write: fine in RAM)
     for n_prov in n_providers_list:
-        store = BlobStore(n_data_providers=n_prov, n_metadata_providers=n_prov)
-        blob = store.alloc(blob_size, page_size)
+        cluster = Cluster(n_data_providers=n_prov, n_metadata_providers=n_prov,
+                          shared_cache_bytes=0)
+        store = cluster.session()
+        handle = store.create(blob_size, page_size)
         rng = np.random.default_rng(0)
         for seg in segments:
             n_pages = seg // page_size
             # --- write: patch a fresh segment ---
             offset = int(rng.integers(0, blob_size // seg)) * seg
             buf = np.ones(seg, dtype=np.uint8)
-            store.stats.reset()
+            cluster.stats.reset()
             t0 = time.perf_counter()
-            v = store.write(blob, buf, offset)
+            v = handle.write(buf, offset)
             t_write = time.perf_counter() - t0
-            w_msgs = dict(store.stats.per_dest_bytes)
+            w_msgs = dict(cluster.stats.per_dest_bytes)
             w_model = modeled_time(
                 {d: 1 for d in w_msgs}, w_msgs
             )
             n_nodes = count_write_nodes(blob_size // page_size, offset // page_size, n_pages)
 
             # --- read it back (metadata traversal + page fetch) ---
-            store.stats.reset()
+            cluster.stats.reset()
             t0 = time.perf_counter()
-            res = store.read(blob, v, offset, seg)
+            res = handle.read(offset, seg, version=v)
             t_read = time.perf_counter() - t0
-            r_msgs = dict(store.stats.per_dest_bytes)
+            r_msgs = dict(cluster.stats.per_dest_bytes)
             depth = (blob_size // page_size - 1).bit_length()  # tree height
             r_model = modeled_time({d: 1 for d in r_msgs}, r_msgs, rtt_levels=depth)
             assert res.data.sum() == seg  # all ones
@@ -79,7 +81,7 @@ def run(n_providers_list=(10, 20, 40), segments=(64 << 10, 256 << 10, 1 << 20, 1
                 write_model_ms=w_model * 1e3, read_model_ms=r_model * 1e3,
                 aggregated_rpcs=len(w_msgs),
             ))
-        store.close()
+        cluster.close()
     return rows
 
 

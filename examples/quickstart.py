@@ -1,7 +1,9 @@
-"""Quickstart: the paper's blob-store API in 60 lines.
+"""Quickstart: the layered Cluster / Session / BlobHandle API in 60 lines.
 
-ALLOC a terabyte-scale blob, WRITE fine-grain patches from concurrent
-clients, READ any published version (snapshots), watch COW share pages.
+One Cluster (shared plane), many Sessions (concurrent clients), BlobHandles
+for fine-grain ops: ALLOC a terabyte-scale blob, WRITE patches from
+concurrent sessions, pin immutable Snapshots, react to publications with a
+version watch, and survive a provider failure.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,48 +12,52 @@ import threading
 
 import numpy as np
 
-from repro.core import BlobStore
+from repro.core import Cluster
 
 PAGE = 64 << 10  # 64 KB pages (paper §V)
 
-store = BlobStore(n_data_providers=8, n_metadata_providers=8, page_replication=2)
-blob = store.alloc(1 << 40, PAGE)  # 1 TB logical, allocate-on-write
+cluster = Cluster(n_data_providers=8, n_metadata_providers=8, page_replication=2)
+blob = cluster.alloc(1 << 40, PAGE)  # 1 TB logical, allocate-on-write
 print(f"allocated blob {blob}: 1 TB / {PAGE >> 10} KB pages")
 
 # -- version 0 is the all-zero string ---------------------------------------------
-z = store.read(blob, 0, 0, PAGE)
-assert not z.data.any()
+main = cluster.session().open(blob)
+assert not main.read(0, PAGE, version=0).data.any()
 
-# -- concurrent writers on disjoint segments (lock-free W/W) ----------------------
+# -- concurrent writer SESSIONS on disjoint segments (lock-free W/W) --------------
 def writer(i: int) -> None:
+    handle = cluster.session().open(blob)  # one session per client
     seg = np.full(4 * PAGE, i + 1, dtype=np.uint8)
-    v = store.write(blob, seg, i * 4 * PAGE)
-    print(f"  writer {i} published version {v}")
+    v = handle.write(seg, i * 4 * PAGE)
+    print(f"  writer session {i} published version {v}")
 
 threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
 [t.start() for t in threads]
 [t.join() for t in threads]
+print(f"latest published version: {main.latest_published()}")
 
-latest = store.version_manager.latest_published(blob)
-print(f"latest published version: {latest}")
+# -- snapshot isolation: a pinned version stays readable (R/W concurrency) --------
+with main.snapshot() as snap:  # pins the version against writers AND gc
+    main.write(np.full(4 * PAGE, 99, np.uint8), 0)  # overwrite writer 0's data
+    print(f"snapshot v{snap.version} still reads {snap.read(0, PAGE)[0]}; "
+          f"latest reads {main.read(0, PAGE).data[0]}")
 
-# -- snapshot isolation: old versions stay readable (R/W concurrency) -------------
-v_snap = latest
-store.write(blob, np.full(4 * PAGE, 99, np.uint8), 0)  # overwrite writer 0's data
-old = store.read(blob, v_snap, 0, PAGE).data[0]
-new = store.read(blob, None, 0, PAGE).data[0]
-print(f"snapshot v{v_snap} still reads {old}; latest reads {new}")
+# -- watch: react to publications instead of polling ------------------------------
+watch = main.watch()
+threading.Thread(target=lambda: main.write(np.ones(PAGE, np.uint8), 123 * PAGE)).start()
+v = watch.next(timeout=10)
+print(f"watch woke for version {v}")
 
 # -- COW metadata sharing ----------------------------------------------------------
-nodes_before = store.metadata.total_nodes()
-store.write(blob, np.ones(PAGE, np.uint8), 123 * PAGE)  # 1-page patch
-nodes_after = store.metadata.total_nodes()
-print(f"1-page patch on a 1 TB blob created only {nodes_after - nodes_before} "
-      f"metadata nodes (tree height), total bytes stored: {store.storage_bytes() >> 10} KB")
+nodes_before = cluster.metadata.total_nodes()
+main.write(np.ones(PAGE, np.uint8), 200 * PAGE)  # 1-page patch
+print(f"1-page patch on a 1 TB blob created only "
+      f"{cluster.metadata.total_nodes() - nodes_before} metadata nodes (tree height), "
+      f"total bytes stored: {cluster.storage_bytes() >> 10} KB")
 
 # -- fault tolerance: page replication survives provider loss ----------------------
-store.provider_manager.fail_provider(0)
-ok = store.read(blob, None, 0, 4 * PAGE)
+cluster.provider_manager.fail_provider(0)
+ok = main.read(0, 4 * PAGE)
 print(f"provider 0 down: read still fine via replicas ({ok.data[0]})")
-store.close()
+cluster.close()
 print("quickstart OK")

@@ -1,17 +1,21 @@
 """The paper's application: supernovae detection on the versioned sky blob.
 
-A telescope (writer threads) images the sky every epoch into new blob
-versions, while detector clients concurrently difference-image consecutive
-versions region-by-region (fine-grain reads) — reads and writes overlap
-freely (lock-free R/W concurrency).
+One :class:`Cluster` models the deployment; the paper's N concurrent clients
+are real :class:`Session` objects on it:
 
-The detector is the motivating workload for the client page cache and the
-vectored data plane: each epoch it re-reads overlapping sky windows (every
-window spills one page into its neighbour, and epoch N's "after" snapshot is
-epoch N+1's "before"). All windows of one version are fetched in a single
-``readv`` — shared boundary pages are deduplicated, each data provider sees
-one aggregated RPC — and the re-read half of every comparison comes straight
-from the cache, since published versions are immutable.
+* a **writer session** — the telescope — streams each epoch's region patches
+  through ``write_async`` (bounded in-flight window, overlapped write
+  pipelines) while detectors are still reading earlier frames;
+* **N detector sessions** subscribe with ``handle.watch()`` and wake when a
+  frame finishes publishing (version ``epoch * n_regions``) instead of
+  polling; each detector difference-images its share of the sky between two
+  pinned :class:`Snapshot`\\ s (lock-free repeated reads).
+
+The detectors share the cluster's intra-node cache tier: epoch N's "after"
+frame is epoch N+1's "before", so half of every comparison is RAM served —
+and one detector's fetch warms every other session on the node (the
+detector sessions run with no private cache at all). Reads and writes
+overlap freely (lock-free R/W concurrency).
 
     PYTHONPATH=src python examples/supernovae.py
 """
@@ -20,65 +24,80 @@ import threading
 
 import numpy as np
 
-from repro.core import BlobStore
+from repro.core import Cluster
 from repro.data.sky import SkyLayout, SkySimulator, detect_transients
 
-layout = SkyLayout(n_regions=32, region_px=64)
-store = BlobStore(n_data_providers=8, n_metadata_providers=8, max_workers=32)
-sim = SkySimulator(store, layout, seed=7, sn_rate=0.2)
+N_DETECTORS = 4
+N_EPOCHS = 8
 
-print(f"sky blob: {layout.n_regions} regions, {layout.blob_bytes >> 20} MB logical")
+layout = SkyLayout(n_regions=32, region_px=64)
+cluster = Cluster(
+    n_data_providers=8, n_metadata_providers=8, max_workers=32,
+    shared_cache_bytes=256 << 20,
+)
+writer = cluster.session(max_inflight_writes=8)
+sim = SkySimulator(writer, layout, seed=7, sn_rate=0.2)
+
+print(f"sky blob: {layout.n_regions} regions, {layout.blob_bytes >> 20} MB logical, "
+      f"1 telescope session + {N_DETECTORS} detector sessions")
 
 IMG_BYTES = layout.region_px * layout.region_px * 4
 # overlapping sky windows: each region's window spills one page into the next
-# region (difference imaging across region borders), so adjacent windows
-# share pages and readv deduplicates them
+# region (difference imaging across region borders), so adjacent windows —
+# owned by DIFFERENT detector sessions — share pages through the shared tier
 WINDOWS = [
     (r * layout.region_bytes, IMG_BYTES + layout.page_size)
     for r in range(layout.n_regions)
 ]
 
-
-def snapshot_windows(version: int) -> list:
-    """Fetch every region window of one published version in ONE readv."""
-    outs = store.readv(sim.blob_id, version, WINDOWS)
-    return [
-        o[:IMG_BYTES].view(np.float32).reshape(layout.region_px, layout.region_px)
-        for o in outs
-    ]
-
-
-# epoch 1: first light (no detection possible yet)
-v_prev = sim.observe_epoch()
 detections = {}
 det_lock = threading.Lock()
+detector_sessions = [cluster.session(cache_bytes=0) for _ in range(N_DETECTORS)]
 
-for epoch in range(2, 8):
-    # telescope writes the new epoch WHILE detectors read the previous two
-    def detect_epoch(v_a: int, v_b: int) -> None:
-        before = snapshot_windows(v_a)  # re-read → served from the page cache
-        after = snapshot_windows(v_b)
-        for r in range(layout.n_regions):
-            hits = detect_transients(before[r], after[r], threshold=150.0)
+
+def detector(d: int) -> None:
+    """Watch-driven detector: wakes on publications, compares each complete
+    frame against the previous one for its share of the regions."""
+    session = detector_sessions[d]
+    handle = session.open(sim.blob_id)
+    watch = handle.watch(start_version=0)
+    regions = range(d, layout.n_regions, N_DETECTORS)
+    for epoch in range(2, N_EPOCHS + 1):
+        target = epoch * layout.n_regions  # frame `epoch` fully published
+        while True:
+            v = watch.next(timeout=60)
+            assert v is not None, "writer stalled"
+            if v >= target:
+                break
+        # two pinned snapshots: the frame pair is immune to the writer AND
+        # to any GC of older frames while the comparison runs
+        with handle.at(target - layout.n_regions) as before, handle.at(target) as after:
+            segs = [WINDOWS[r] for r in regions]
+            before_w = before.readv(segs)
+            after_w = after.readv(segs)
+        for r, b, a in zip(regions, before_w, after_w):
+            img_b = b[:IMG_BYTES].view(np.float32).reshape(layout.region_px, -1)
+            img_a = a[:IMG_BYTES].view(np.float32).reshape(layout.region_px, -1)
+            hits = detect_transients(img_b, img_a, threshold=150.0)
             if hits:
                 with det_lock:
-                    detections.setdefault(v_b, []).append((r, hits))
+                    detections.setdefault(epoch, []).append((r, hits))
 
-    if v_prev > layout.n_regions:  # have two epochs to compare
-        t_detect = threading.Thread(
-            target=detect_epoch, args=(v_prev - layout.n_regions, v_prev)
-        )
-        t_detect.start()
-    else:
-        t_detect = None
 
-    v_new = sim.observe_epoch()  # concurrent write of the next epoch
-    if t_detect:
-        t_detect.join()
-    print(f"epoch {epoch}: published v{v_new} "
-          f"({store.metadata.total_nodes()} metadata nodes, "
-          f"{store.storage_bytes() >> 20} MB stored)")
-    v_prev = v_new
+threads = [threading.Thread(target=detector, args=(d,)) for d in range(N_DETECTORS)]
+for t in threads:
+    t.start()
+
+# the telescope streams every epoch through the async write window WHILE the
+# detector fleet is comparing earlier frames
+for epoch in range(1, N_EPOCHS + 1):
+    v = sim.observe_epoch_stream()
+    print(f"epoch {epoch}: published v{v} "
+          f"({cluster.metadata.total_nodes()} metadata nodes, "
+          f"{cluster.storage_bytes() >> 20} MB stored)")
+
+for t in threads:
+    t.join()
 
 print("\nground truth supernovae:",
       [(sn.region, sn.x, sn.y, sn.ignite_epoch) for sn in sim.supernovae])
@@ -88,8 +107,13 @@ print("detected transients:   ", found)
 truth = {(sn.region, sn.x, sn.y) for sn in sim.supernovae}
 recovered = truth & set(found)
 print(f"recovered {len(recovered)}/{len(truth)} supernovae")
-hits, misses = store.stats.cache_hits, store.stats.cache_misses
-print(f"page cache: {hits} hits / {misses} misses "
+
+hits = sum(s.stats.cache_hits for s in detector_sessions)
+misses = sum(s.stats.cache_misses for s in detector_sessions)
+print(f"shared cache tier, aggregated over {N_DETECTORS} detector sessions: "
+      f"{hits} hits / {misses} misses "
       f"({hits / (hits + misses):.0%} hit rate), "
-      f"{store.stats.data_rounds} aggregated provider RPC rounds")
-store.close()
+      f"{cluster.stats.data_rounds} aggregated provider RPC rounds")
+for d, s in enumerate(detector_sessions):
+    print(f"  detector {d}: hit rate {s.cache_hit_rate:.0%}")
+cluster.close()

@@ -53,7 +53,7 @@ def main():
     print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
     ck = out["checkpointer"]
     print(f"checkpoints retained: {[c.step for c in ck.checkpoints]}, "
-          f"store holds {out['store'].storage_bytes() >> 20} MB "
+          f"store holds {out['session'].cluster.storage_bytes() >> 20} MB "
           f"(incremental dirty pages last save: {ck.checkpoints[-1].dirty_pages})")
     assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not decrease"
     print("train_lm OK")

@@ -1,10 +1,24 @@
 """The paper's contribution: lock-free versioned blob storage.
 
-Public API: :class:`BlobStore` (ALLOC/READ/WRITE/GC), plus the individual
-actors for tests and benchmarks.
+Public API: :class:`Cluster` (shared plane: version manager, metadata DHT,
+data providers, replica balancer, shared cache tier) → :class:`Session`
+(per-client state) → :class:`BlobHandle` (fine-grain ALLOC/READ/WRITE ops,
+:class:`Snapshot` pinning, :class:`VersionWatch` subscriptions), plus the
+individual actors for tests and benchmarks. :class:`BlobStore` is the
+deprecated single-object facade.
 """
 
-from repro.core.blob import BlobStore, DEFAULT_CACHE_BYTES, ReadResult
+from repro.core.blob import BlobStore
+from repro.core.cluster import (
+    BlobHandle,
+    Cluster,
+    DEFAULT_CACHE_BYTES,
+    DEFAULT_SHARED_CACHE_BYTES,
+    ReadResult,
+    Session,
+    Snapshot,
+    VersionWatch,
+)
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
@@ -26,9 +40,15 @@ from repro.core.segment_tree import (
 from repro.core.version_manager import JournalEntry, VersionManager
 
 __all__ = [
+    "BlobHandle",
     "BlobStore",
+    "Cluster",
     "DEFAULT_CACHE_BYTES",
+    "DEFAULT_SHARED_CACHE_BYTES",
     "ReadResult",
+    "Session",
+    "Snapshot",
+    "VersionWatch",
     "CacheKey",
     "FetchPlan",
     "PageCache",

@@ -1,131 +1,59 @@
-"""BlobStore: the paper's client-side access protocol (§III.B).
+"""Deprecated facade: ``BlobStore`` = one :class:`Cluster` + one
+:class:`Session`.
 
-WRITE(id, buffer, offset, size) — an **overlapped pipeline**. The paper's
-stages (data pages, version assignment, metadata weaving) are independent and
-serialize only at the version manager, so the client never runs them with
-barriers in between:
+The god-object API this module used to implement was split into the layered
+:mod:`repro.core.cluster` API — :class:`~repro.core.cluster.Cluster` (shared
+plane), :class:`~repro.core.cluster.Session` (per-client state) and
+:class:`~repro.core.cluster.BlobHandle` (fine-grain ops, snapshots, version
+watches). ``BlobStore`` remains as a thin compatibility wrapper so external
+callers keep working one release longer; it constructs a private cluster
+with the shared cache tier DISABLED (the pre-split topology: one client, one
+cache) and forwards every old entry point to the single session. It emits a
+:class:`DeprecationWarning` on construction and is used nowhere else inside
+this repository — CI runs a ``-W error::DeprecationWarning`` leg to keep it
+that way.
 
-  1. ask the provider manager for placements (one per fresh page), then
-     **launch** the per-provider ``put_pages`` RPCs — one aggregated put per
-     provider — and do NOT wait for them;
-  2. while the data puts are in flight, ask the version manager for version
-     numbers + precomputed border links (the only serialized step — it does
-     not depend on data-put completion);
-  3. still while data flies, build every patch's metadata tree (weaving
-     happens through the precomputed links — complete isolation from
-     concurrent writers) and **launch** the per-shard ``put_nodes`` RPCs —
-     one aggregated RPC per shard across the whole writev — the moment the
-     shard batches are grouped;
-  4. join ALL outstanding data and metadata futures — the single sync point;
-  5. report success; the version manager publishes versions in order. The
-     just-written pages are **written through** into the local page cache, so
-     the writer's own re-reads skip the network entirely.
+Migration map (old → new)::
 
-  If any put fails mid-pipeline, the write plane cleans up after itself:
-  stored pages are deleted, placement load credits are released, stored
-  metadata nodes are dropped, and the assigned versions are withdrawn via
-  ``VersionManager.abandon`` so in-order publication can never wedge behind a
-  writer that will never report success.
-
-  ``BlobStore(sync_write=True)`` keeps the pre-pipeline behavior — a full
-  barrier after every stage and a defensive copy per page — as the A/B
-  baseline for the ``sync-write`` benchmark mode.
-
-WRITE_ASYNC / FLUSH — cross-write overlap. :meth:`BlobStore.write_async`
-queues a write into a bounded in-flight window (backpressure once
-``max_inflight_writes`` are outstanding) and returns a future; a client can
-stream many writes whose pipelines overlap each other while the version
-manager still publishes strictly in assignment order. :meth:`BlobStore.flush`
-joins the window and returns the assigned versions.
-
-READ(id, v, buffer, offset, size):
-  1. ask the version manager for the latest published version (fails if the
-     requested version is unpublished or was abandoned) — one lock pass;
-  2. traverse the segment tree of version v over the DHT (parallel per level);
-  3. fetch the leaves' pages from the data providers in parallel.
-
-Page transport is **zero-copy end to end**: ``writev`` freezes the source
-buffer (read-only) and hands page-sized views to the providers — no per-page
-copy on the hot path; providers store and return those arrays without
-defensive copies (immutability makes sharing safe); ``readv`` assembles
-multi-page segments by writing fetched pages directly into one preallocated
-output buffer and serves a full-page single-page segment as a read-only view
-of the stored/cached page itself.
-
-On top of the paper's protocol this client adds two scaling layers that its
-immutability guarantees make safe:
-
-* a **versioned page cache** (:mod:`repro.core.page_cache`): a version's
-  pages can never change once stored, so snapshot re-reads hit RAM with no
-  invalidation protocol; concurrent cold misses on a page are collapsed into
-  one provider fetch (single-flight); published writes write through;
-* a **batched multi-segment data plane** — :meth:`BlobStore.readv` /
-  :meth:`BlobStore.writev` take many segments, deduplicate shared pages, run
-  ONE level-synchronous metadata traversal and ONE aggregated page RPC per
-  provider across all segments (the paper's §V.A RPC aggregation, applied
-  across an entire vectored request). ``read``/``write``/``write_unaligned``
-  are thin wrappers over this plane.
-
-All data-plane steps run on a thread pool to model the paper's concurrent
-RPCs; the version manager interaction is the only serialization point.
+    BlobStore(...)                    Cluster(...); session = cluster.session()
+    store.alloc(size, page)           cluster.alloc(size, page)  /  session.create(size, page)
+    store.read(b, v, off, sz)         session.open(b).read(off, sz, version=v)
+    store.readv(b, v, segs)           session.open(b).readv(segs, version=v)
+    store.write(b, buf, off)          handle.write(buf, off)
+    store.writev(b, patches)          handle.writev(patches)
+    store.write_async(b, buf, off)    handle.write_async(buf, off)
+    store.flush()                     session.flush()
+    store.write_unaligned(...)        handle.write_unaligned(buf, off)
+    store.gc(b, keep)                 cluster.gc(b, keep)
+    store.page_cache                  session.cache  (+ cluster.shared_cache)
+    store.stats                       cluster.stats  (+ session.stats per client)
+    —                                 handle.snapshot() / handle.at(v)   (pinned lock-free reads)
+    —                                 handle.watch() / handle.wait_for_version(v)
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import random
 import threading
-from collections import defaultdict
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+import warnings
+from concurrent.futures import Future
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
-from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
-from repro.core.provider import DataProvider, ProviderManager
-from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
-from repro.core.segment_tree import (
-    NodeKey,
-    PageRef,
-    TreeNode,
-    ZERO_VERSION,
-    build_write_tree,
-    traverse_batch,
+from repro.core.cluster import (
+    BlobHandle,
+    Cluster,
+    DEFAULT_CACHE_BYTES,
+    ReadResult,
+    Session,
 )
-from repro.core.version_manager import VersionManager
+from repro.core.replica_balancer import BalancerConfig
 
-#: Default client page-cache budget (bytes); pass ``cache_bytes=0`` to disable.
-DEFAULT_CACHE_BYTES = 64 << 20
-
-
-@dataclasses.dataclass
-class ReadResult:
-    latest_published: int
-    data: np.ndarray
-
-
-@functools.lru_cache(maxsize=8)
-def _zero_page(page_size: int) -> np.ndarray:
-    page = np.zeros(page_size, dtype=np.uint8)
-    page.flags.writeable = False
-    return page
-
-
-def _merge_ranges(pages: Sequence[int]) -> List[Tuple[int, int]]:
-    """Collapse a sorted page-index list into (offset, size) runs."""
-    ranges: List[Tuple[int, int]] = []
-    for p in pages:
-        if ranges and ranges[-1][0] + ranges[-1][1] == p:
-            ranges[-1] = (ranges[-1][0], ranges[-1][1] + 1)
-        else:
-            ranges.append((p, 1))
-    return ranges
+__all__ = ["BlobStore", "DEFAULT_CACHE_BYTES", "ReadResult"]
 
 
 class BlobStore:
-    """Facade wiring clients to the five actors of the paper's architecture."""
+    """Deprecated single-client facade over ``Cluster`` + ``Session``."""
 
     def __init__(
         self,
@@ -143,356 +71,106 @@ class BlobStore:
         sync_write: bool = False,
         max_inflight_writes: int = 8,
     ) -> None:
-        self.stats = TrafficStats()
-        self.version_manager = VersionManager()
-        self.provider_manager = ProviderManager(replication=page_replication, stats=self.stats)
-        self._pool = ThreadPoolExecutor(max_workers=max_workers)
-        self.metadata = MetadataDHT(
-            n_metadata_providers,
-            replication=metadata_replication,
-            stats=self.stats,
-            executor=self._pool,
-            rpc_latency_seconds=metadata_latency_seconds,
+        warnings.warn(
+            "BlobStore is deprecated: use Cluster/Session/BlobHandle "
+            "(repro.core.cluster) instead",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        #: run writes with the pre-pipeline full barriers + per-page copies
-        #: (the A/B baseline for the ``sync-write`` benchmark mode)
-        self.sync_write = sync_write
-        #: bounded in-flight window for :meth:`write_async`
-        self.max_inflight_writes = max_inflight_writes
-        self._write_window = threading.BoundedSemaphore(max_inflight_writes)
-        self._writer_pool: Optional[ThreadPoolExecutor] = None
-        self._writer_pool_lock = threading.Lock()
-        self._async_lock = threading.Lock()
-        self._async_writes: List[Future] = []
-        self.page_cache: Optional[PageCache] = (
-            PageCache(cache_bytes, stats=self.stats) if cache_bytes else None
+        self.cluster = Cluster(
+            n_data_providers=n_data_providers,
+            n_metadata_providers=n_metadata_providers,
+            page_replication=page_replication,
+            metadata_replication=metadata_replication,
+            max_workers=max_workers,
+            shared_cache_bytes=0,  # pre-split topology: one client, one cache
+            hot_replicas=hot_replicas,
+            balancer_config=balancer_config,
+            page_service_seconds=page_service_seconds,
+            metadata_latency_seconds=metadata_latency_seconds,
         )
-        #: pick the least-read-loaded replica per page instead of always the
-        #: primary (the knob the skew-read benchmark flips)
-        self.replica_spread = replica_spread
-        self.page_service_seconds = page_service_seconds
-        for i in range(n_data_providers):
-            self.provider_manager.register(DataProvider(i, page_service_seconds))
-        self.replica_balancer: Optional[ReplicaBalancer] = (
-            ReplicaBalancer(
-                self.provider_manager, self.metadata, self.stats, balancer_config
-            )
-            if hot_replicas
-            else None
+        self.session: Session = self.cluster.session(
+            cache_bytes=cache_bytes,
+            replica_spread=replica_spread,
+            sync_write=sync_write,
+            max_inflight_writes=max_inflight_writes,
         )
-        self._next_provider_id = n_data_providers
-        self._membership_lock = threading.Lock()
-        self._rng = random.Random(0xB10B)
+        #: blob_id -> handle; blob geometry is immutable after alloc, so the
+        #: facade must not pay a fresh blob_info lock round-trip per call
+        self._handles: dict = {}
+        self._handles_lock = threading.Lock()
 
-    # -- elasticity ------------------------------------------------------------
+    # -- shared-plane attributes the old object exposed directly ---------------
+    @property
+    def stats(self):
+        return self.cluster.stats
+
+    @property
+    def version_manager(self):
+        return self.cluster.version_manager
+
+    @property
+    def provider_manager(self):
+        return self.cluster.provider_manager
+
+    @property
+    def metadata(self):
+        return self.cluster.metadata
+
+    @property
+    def replica_balancer(self):
+        return self.cluster.replica_balancer
+
+    @property
+    def page_cache(self):
+        return self.session.cache
+
+    @property
+    def replica_spread(self) -> bool:
+        return self.session.replica_spread
+
+    @replica_spread.setter
+    def replica_spread(self, value: bool) -> None:
+        self.session.replica_spread = value
+
+    @property
+    def sync_write(self) -> bool:
+        return self.session.sync_write
+
+    @property
+    def max_inflight_writes(self) -> int:
+        return self.session.max_inflight_writes
+
+    # -- old entry points -------------------------------------------------------
     def add_data_provider(self) -> int:
-        with self._membership_lock:
-            pid = self._next_provider_id
-            self._next_provider_id += 1
-        self.provider_manager.register(DataProvider(pid, self.page_service_seconds))
-        return pid
+        return self.cluster.add_data_provider()
 
-    # -- ALLOC -------------------------------------------------------------------
     def alloc(self, size_bytes: int, page_size: int) -> int:
-        if page_size & (page_size - 1):
-            raise ValueError("page_size must be a power of two")
-        if size_bytes % page_size:
-            raise ValueError("blob size must be a multiple of page_size")
-        total_pages = size_bytes // page_size
-        return self.version_manager.alloc(total_pages, page_size)
+        return self.cluster.alloc(size_bytes, page_size)
 
-    # -- WRITE -------------------------------------------------------------------
+    def _handle(self, blob_id: int) -> BlobHandle:
+        with self._handles_lock:
+            handle = self._handles.get(blob_id)
+            if handle is None:
+                handle = self._handles[blob_id] = self.session.open(blob_id)
+            return handle
+
     def write(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
-        """Patch ``blob_id`` with ``buffer`` at ``offset_bytes``; returns the
-        assigned version (published once all earlier versions publish)."""
-        return self.writev(blob_id, [(offset_bytes, buffer)])[0]
+        return self._handle(blob_id).write(buffer, offset_bytes)
 
     def writev(
         self, blob_id: int, patches: Sequence[Tuple[int, np.ndarray]]
     ) -> List[int]:
-        """Vectored WRITE: apply many ``(offset_bytes, buffer)`` page-aligned
-        patches. Each patch gets its own version (identical semantics to a
-        loop of :meth:`write`, in patch order), but the data plane batches
-        AND pipelines: one placement call, ONE aggregated ``put_pages`` RPC
-        per data provider across all patches launched up front, version
-        assignment and metadata weaving while those puts are in flight, and a
-        single join before success is reported. Returns the assigned
-        versions.
+        return self._handle(blob_id).writev(patches)
 
-        Zero-copy hand-off: the write plane freezes each source buffer that
-        owns its memory (``writeable = False``) and providers keep page-sized
-        views of it; a buffer passed to ``writev`` is surrendered to the
-        store for good, whether the write succeeds or fails (another
-        overlapping write may already share the frozen buffer, so failure
-        cannot safely hand it back). Views of larger writable arrays cannot
-        be frozen and are bulk-copied once per patch instead. Caveat the
-        store cannot detect: a writable view the caller created BEFORE the
-        call still aliases the frozen memory — mutating through it corrupts
-        published data, exactly like scribbling over an O_DIRECT buffer with
-        I/O in flight.
-        """
-        total_pages, page_size = self.version_manager.blob_info(blob_id)
-        sync = self.sync_write
-        # pass 1: validate and normalize every patch — no side effects yet,
-        # so a bad later patch cannot leave earlier buffers frozen
-        bufs: List[np.ndarray] = []
-        spans: List[Tuple[int, int]] = []  # (page_offset, n_pages) per patch
-        for offset_bytes, buffer in patches:
-            src = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
-            if offset_bytes % page_size or src.size % page_size:
-                raise ValueError("WRITE must be page-aligned (paper §II)")
-            n_pages = src.size // page_size
-            if n_pages == 0:
-                raise ValueError("empty write")
-            bufs.append(src)
-            spans.append((offset_bytes // page_size, n_pages))
-        if not bufs:
-            return []
-        # pass 2 (pipelined only; the sync baseline copies every page anyway):
-        # make each source immutable before any view of it is handed out.
-        # Zero-copy is only safe when freezing the array that OWNS the memory
-        # actually cuts off future writes — i.e. the caller passed the owning
-        # array itself (or our normalization already copied). A view of some
-        # larger writable array cannot be protected by freezing (writes
-        # through the base would still mutate the stored pages), so that case
-        # falls back to ONE bulk copy per patch — never a per-page copy.
-        if not sync:
-            for i, (src, (_, buffer)) in enumerate(zip(bufs, patches)):
-                root = src
-                while isinstance(root.base, np.ndarray):
-                    root = root.base
-                if root.flags.writeable:
-                    caller_root = buffer
-                    while isinstance(caller_root, np.ndarray) and isinstance(
-                        caller_root.base, np.ndarray
-                    ):
-                        caller_root = caller_root.base
-                    owns = root is not caller_root or (
-                        isinstance(buffer, np.ndarray) and buffer.base is None
-                    )
-                    if owns:
-                        root.flags.writeable = False
-                    else:
-                        src = bufs[i] = src.copy()
-                        src.flags.writeable = False
-                ro = src.view()
-                ro.flags.writeable = False
-                bufs[i] = ro
-
-        # (1) placements for every fresh page of every patch, in one call
-        placements = self.provider_manager.allocate(sum(n for _, n in spans))
-
-        by_provider: Dict[int, List[Tuple[int, np.ndarray]]] = {}
-        per_patch: List[List[Tuple[PageRef, Tuple[PageRef, ...]]]] = []
-        #: per patch, the page arrays actually handed to the store (views in
-        #: the pipelined path, copies in the sync baseline) — the write-through
-        #: cache must reference these, never a possibly-writable source
-        stored_pages: List[List[np.ndarray]] = []
-        versions: List[int] = []
-        node_keys: List[NodeKey] = []
-        data_futures: List[Future] = []
-        meta_futures: List[Future] = []
-        try:
-            cursor = 0
-            for src, (_, n_pages) in zip(bufs, spans):
-                mine = placements[cursor : cursor + n_pages]
-                cursor += n_pages
-                per_patch.append(mine)
-                pages: List[np.ndarray] = []
-                for i, (primary, replicas) in enumerate(mine):
-                    page = src[i * page_size : (i + 1) * page_size]
-                    if sync:
-                        page = page.copy()  # pre-pipeline baseline: defensive copy
-                    pages.append(page)
-                    for pid, key in (primary,) + replicas:
-                        by_provider.setdefault(pid, []).append((key, page))
-                stored_pages.append(pages)
-
-            # (2) LAUNCH the aggregated per-provider puts; the pipeline only
-            #     joins them at the end (sync baseline: full barrier here)
-            data_futures = [
-                self._pool.submit(self._put_batch, pid, items)
-                for pid, items in by_provider.items()
-            ]
-            if sync:
-                for f in data_futures:
-                    f.result()
-
-            # (3) version numbers + border links for ALL patches under ONE
-            #     manager lock acquisition (the only serialized step) — this
-            #     does not depend on data-put completion, so it runs while
-            #     the pages are still in flight
-            assigned = self.version_manager.assign_versions(blob_id, spans)
-            versions = [v for v, _ in assigned]
-
-            # (4) weave every patch's tree while the data puts are still in
-            #     flight, then LAUNCH one aggregated node put per shard
-            #     (paper §V.A aggregation across the whole writev); the sync
-            #     baseline runs the same aggregated put behind a barrier
-            all_nodes: List[TreeNode] = []
-            for (page_offset, n_pages), mine, (version, links) in zip(
-                spans, per_patch, assigned
-            ):
-                all_nodes.extend(
-                    build_write_tree(
-                        blob_id, version, total_pages, page_offset, n_pages, mine, links
-                    )
-                )
-            node_keys.extend(node.key for node in all_nodes)
-            if sync:
-                self.metadata.put_nodes(all_nodes)
-            else:
-                meta_futures.extend(self.metadata.put_nodes_async(all_nodes))
-
-            # join: every page and node must be durable before success
-            for f in data_futures + meta_futures:
-                err = f.exception()
-                if err is not None:
-                    raise err
-
-            # (5) report success (one lock for the batch) → in-order publish
-            self.version_manager.report_successes(blob_id, versions)
-        except BaseException:
-            # NOTE: frozen sources stay frozen — a concurrent write may
-            # already hold zero-copy views of the same root, so restoring
-            # writability here would let the caller mutate ITS published
-            # pages through the shared memory
-            self._abort_writev(
-                blob_id, versions, placements, by_provider, node_keys,
-                data_futures, meta_futures,
-            )
-            raise
-
-        # write-through: the just-stored pages are already immutable, so the
-        # writer's re-reads of these versions come straight from RAM
-        if self.page_cache is not None:
-            items: List[Tuple[Tuple[int, int, int], np.ndarray]] = []
-            for pages, (page_offset, _), version in zip(
-                stored_pages, spans, versions
-            ):
-                for i, page in enumerate(pages):
-                    items.append(((blob_id, version, page_offset + i), page))
-            self.page_cache.put_many(items)
-        return versions
-
-    def _put_batch(self, pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
-        self.provider_manager.get_provider(pid).put_pages(items)
-        self.stats.record_data(pid, len(items), sum(p.nbytes for _, p in items))
-
-    def _abort_writev(
-        self,
-        blob_id: int,
-        versions: List[int],
-        placements: List[Tuple[PageRef, Tuple[PageRef, ...]]],
-        by_provider: Dict[int, List[Tuple[int, np.ndarray]]],
-        node_keys: List[NodeKey],
-        data_futures: List[Future],
-        meta_futures: List[Future],
-    ) -> None:
-        """Failure cleanup for a mid-flight ``writev``: without this, the
-        placement load heap keeps phantom load, stored pages and nodes of the
-        doomed versions leak forever, and in-order publication wedges behind
-        versions that will never report success.
-
-        The doomed versions are withdrawn first; what happens to their
-        stored wreckage depends on how :meth:`VersionManager.abandon`
-        resolved them. Fully *erased* versions (no concurrent writer assigned
-        after them) are scrubbed: pages deleted, nodes deleted, placement
-        credits released. Versions that became publication *holes* are left
-        in place instead — a later writer may already have woven border links
-        into their trees, so deleting whatever did land would turn that
-        writer's published version unreadable; the wreckage stays until
-        :meth:`BlobStore.gc` collects it (which also returns the load
-        credit), the same stance taken for orphans on a down provider."""
-        for f in data_futures + meta_futures:
-            f.exception()  # quiesce: no put may still be in flight
-        if versions:
-            holes = self.version_manager.abandon(blob_id, versions)
-            if holes:
-                return  # leak to GC: later versions may reference the nodes
-        for pid, items in by_provider.items():
-            try:  # best-effort: a down provider keeps its orphans until GC
-                self.provider_manager.get_provider(pid).delete_pages(
-                    [key for key, _ in items]
-                )
-            except (ProviderFailed, KeyError):
-                pass
-        try:
-            self.metadata.delete_nodes(node_keys)
-        except ProviderFailed:
-            pass
-        self.provider_manager.release(
-            [ref for primary, replicas in placements for ref in (primary,) + replicas]
-        )
-
-    # -- asynchronous write streaming ------------------------------------------
     def write_async(
         self, blob_id: int, buffer: np.ndarray, offset_bytes: int
     ) -> "Future[int]":
-        """Queue a :meth:`write` into the bounded in-flight window and return
-        a future of its assigned version. Blocks (backpressure) once
-        ``max_inflight_writes`` writes are outstanding. Successive writes'
-        pipelines overlap — a later write's pages may land before an earlier
-        write's metadata — while the version manager still publishes strictly
-        in assignment order. Join the window with :meth:`flush` (or await the
-        returned future)."""
-        self._write_window.acquire()
-        try:
-            future = self._writers().submit(
-                self._windowed_write, blob_id, buffer, offset_bytes
-            )
-        except BaseException:
-            self._write_window.release()
-            raise
-        with self._async_lock:
-            # prune successfully-completed futures so a long-running streamer
-            # that joins its own returned futures (never calls flush) does
-            # not accumulate them forever; FAILED futures are kept until
-            # flush()/close() so their errors cannot vanish unobserved
-            self._async_writes = [
-                f for f in self._async_writes
-                if not f.done() or f.exception() is not None
-            ]
-            self._async_writes.append(future)
-        return future
-
-    def _writers(self) -> ThreadPoolExecutor:
-        with self._writer_pool_lock:
-            if self._writer_pool is None:
-                self._writer_pool = ThreadPoolExecutor(
-                    max_workers=self.max_inflight_writes
-                )
-            return self._writer_pool
-
-    def _windowed_write(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
-        try:
-            return self.writev(blob_id, [(offset_bytes, buffer)])[0]
-        finally:
-            self._write_window.release()
+        return self._handle(blob_id).write_async(buffer, offset_bytes)
 
     def flush(self) -> List[int]:
-        """Join every outstanding :meth:`write_async` — STORE-GLOBAL: it
-        drains the whole window, including writes queued by other threads
-        sharing this store (a multi-writer client should instead join the
-        futures ``write_async`` returned to it). Returns the versions of the
-        writes still tracked by the window (writes that completed and were
-        already pruned are not re-reported) and re-raises the first
-        failure."""
-        with self._async_lock:
-            futures, self._async_writes = self._async_writes, []
-        versions: List[int] = []
-        first_err: Optional[BaseException] = None
-        for f in futures:
-            try:
-                versions.append(f.result())
-            except BaseException as err:  # keep joining; surface the first
-                if first_err is None:
-                    first_err = err
-        if first_err is not None:
-            raise first_err
-        return versions
+        return self.session.flush()
 
-    # -- READ --------------------------------------------------------------------
     def read(
         self,
         blob_id: int,
@@ -500,19 +178,7 @@ class BlobStore:
         offset_bytes: int,
         size_bytes: int,
     ) -> ReadResult:
-        """Read ``[offset_bytes, offset_bytes+size_bytes)`` of ``version``
-        (``None`` = latest published). Fails if ``version`` is unpublished,
-        abandoned, or the range is fully out of bounds; a range overlapping
-        the blob's end is clamped (short read). A read of exactly one whole
-        page returns a read-only view of the stored/cached page (zero-copy);
-        copy before mutating."""
-        total_pages, page_size, version, latest = (
-            self.version_manager.resolve_read_version(blob_id, version)
-        )
-        data = self._readv(
-            blob_id, version, [(offset_bytes, size_bytes)], total_pages, page_size
-        )[0]
-        return ReadResult(latest, data)
+        return self._handle(blob_id).read(offset_bytes, size_bytes, version=version)
 
     def readv(
         self,
@@ -520,322 +186,18 @@ class BlobStore:
         version: Optional[int],
         segments: Sequence[Tuple[int, int]],
     ) -> List[np.ndarray]:
-        """Vectored READ: fetch many ``(offset_bytes, size_bytes)`` segments
-        of one version in a single batched pass. Pages shared between
-        segments are deduplicated; cache hits skip the network entirely; the
-        remaining pages cost one level-synchronous metadata traversal (one
-        aggregated RPC per shard per level) plus ONE aggregated ``get_pages``
-        RPC per data provider. Returns one ``np.uint8`` array per segment
-        (full-single-page segments are read-only zero-copy views).
-        """
-        total_pages, page_size, version, _ = (
-            self.version_manager.resolve_read_version(blob_id, version)
-        )
-        return self._readv(blob_id, version, segments, total_pages, page_size)
+        return self._handle(blob_id).readv(segments, version=version)
 
-    def _readv(
-        self,
-        blob_id: int,
-        version: int,
-        segments: Sequence[Tuple[int, int]],
-        total_pages: int,
-        page_size: int,
-    ) -> List[np.ndarray]:
-        """``readv`` body with the version-manager state already resolved —
-        the serialized actor is consulted exactly once per public call."""
-        # clamp segments; collect the deduplicated union of needed pages
-        total_bytes = total_pages * page_size
-        clamped: List[Tuple[int, int]] = []
-        needed: Set[int] = set()
-        for offset, size in segments:
-            if offset < 0 or size < 0:
-                raise ValueError(f"negative read offset/size ({offset}, {size})")
-            if size == 0:
-                clamped.append((offset, 0))
-                continue
-            if offset >= total_bytes:
-                raise ValueError(
-                    f"read at offset {offset} out of range (blob is {total_bytes} bytes)"
-                )
-            size = min(size, total_bytes - offset)  # clamp to blob end
-            clamped.append((offset, size))
-            first_page = offset // page_size
-            last_page = min(-(-(offset + size) // page_size), total_pages)
-            needed.update(range(first_page, last_page))
+    def write_unaligned(
+        self, blob_id: int, buffer: np.ndarray, offset_bytes: int
+    ) -> int:
+        return self._handle(blob_id).write_unaligned(buffer, offset_bytes)
 
-        # cache phase: hits are served from RAM; exactly one concurrent
-        # reader becomes the fetch leader for each missing page
-        pages: Dict[int, Optional[np.ndarray]] = {}
-        cache = self.page_cache
-        owned: List[int] = []
-        waits: Dict[Tuple[int, int, int], object] = {}
-        if cache is not None and needed:
-            plan = cache.plan([(blob_id, version, p) for p in sorted(needed)])
-            pages.update({key[2]: page for key, page in plan.hits.items()})
-            owned = sorted(key[2] for key in plan.owned)
-            waits = plan.waits
-        else:
-            owned = sorted(needed)
-
-        if owned:
-            fulfilled: Set[int] = set()
-            try:
-                # (2) ONE metadata traversal pass over all missed ranges
-                leaves = traverse_batch(
-                    self.metadata.get_nodes, blob_id, version, total_pages,
-                    _merge_ranges(owned),
-                )
-                # (3) ONE aggregated page fetch per provider
-                fetched = self._fetch_pages(leaves, page_size)
-                for p, page in fetched.items():
-                    pages[p] = page
-                    if cache is not None:
-                        # zero pages share one buffer — charge them the LRU
-                        # slot, not a full page, so repeat sparse reads skip
-                        # the metadata walk without evicting real pages
-                        cache.fulfill(
-                            (blob_id, version, p),
-                            page if page is not None else _zero_page(page_size),
-                            charge=None if page is not None else ZERO_PAGE_CHARGE,
-                        )
-                        fulfilled.add(p)
-            except BaseException as err:
-                if cache is not None:
-                    for p in owned:
-                        if p not in fulfilled:
-                            cache.abort((blob_id, version, p), err)
-                raise
-
-        # follower phase: collect pages fetched by concurrent leaders
-        for key, flight in waits.items():
-            pages[key[2]] = cache.wait(key, flight)  # type: ignore[union-attr, arg-type]
-
-        # assemble per-segment outputs from the shared page map: a segment
-        # covering exactly one whole page is served as a zero-copy read-only
-        # view of that page; anything else is written page-by-page directly
-        # into one preallocated output buffer
-        outs: List[np.ndarray] = []
-        for offset, size in clamped:
-            if size == page_size and offset % page_size == 0:
-                page = pages.get(offset // page_size)
-                outs.append(page if page is not None else _zero_page(page_size))
-                continue
-            out = np.zeros(size, dtype=np.uint8)
-            for p in range(offset // page_size, -(-(offset + size) // page_size)):
-                page = pages.get(p)
-                if page is None:
-                    continue  # implicit zero page
-                page_lo = p * page_size
-                a = max(offset, page_lo)
-                b = min(offset + size, page_lo + page_size)
-                out[a - offset : b - offset] = page[a - page_lo : b - page_lo]
-            outs.append(out)
-        return outs
-
-    def _choose_ref(
-        self, leaf: TreeNode, read_load: Dict[int, int], page_size: int
-    ) -> PageRef:
-        """Pick which replica serves this page via power-of-two random
-        choices: sample two replicas, take the one with less read traffic so
-        far, charging ``read_load`` tentatively so one batch also spreads.
-        The random sampling is what prevents the herd effect — a
-        deterministic global minimum sends every concurrent client to the
-        same momentarily-idle provider, re-serializing the hot page there."""
-        refs = leaf.all_page_refs()
-        a, b = self._rng.sample(range(len(refs)), 2)
-        pid, key = min(
-            refs[a], refs[b], key=lambda r: read_load.get(r[0], 0)
-        )
-        read_load[pid] = read_load.get(pid, 0) + page_size
-        return pid, key
-
-    def _fetch_pages(
-        self, leaves: Dict[int, Optional[TreeNode]], page_size: int
-    ) -> Dict[int, Optional[np.ndarray]]:
-        """Fetch all leaf pages: one aggregated RPC per serving provider (in
-        parallel), per-page replica fallback if a provider batch fails. The
-        serving provider per page is replica-spread (least read load) rather
-        than always the primary, and every provider fetch feeds the replica
-        balancer's heat counters."""
-        result: Dict[int, Optional[np.ndarray]] = {}
-        by_provider: Dict[int, List[Tuple[int, int, TreeNode]]] = defaultdict(list)
-        # stats snapshot is deferred until a leaf actually has a choice to
-        # make — single-replica reads must not pay a global-lock round-trip
-        read_load: Optional[Dict[int, int]] = None
-        for page_index, leaf in leaves.items():
-            if leaf is None:
-                result[page_index] = None  # implicit zero page
-                continue
-            if self.replica_spread and len(leaf.all_page_refs()) > 1:
-                if read_load is None:
-                    read_load = self.stats.read_bytes_snapshot()
-                pid, key = self._choose_ref(leaf, read_load, page_size)
-            else:
-                pid, key = leaf.page  # type: ignore[misc]
-            by_provider[pid].append((page_index, key, leaf))
-
-        def _get_batch(
-            pid: int, items: List[Tuple[int, int, TreeNode]]
-        ) -> Optional[Dict[int, np.ndarray]]:
-            try:
-                provider = self.provider_manager.get_provider(pid)
-                fetched = provider.get_pages([key for _, key, _ in items])
-            except (ProviderFailed, KeyError):
-                return None  # provider down/deregistered: caller falls back
-            self.stats.record_data(
-                pid, len(items), sum(pg.nbytes for pg in fetched), read=True
-            )
-            return {p: pg for (p, _, _), pg in zip(items, fetched)}
-
-        batches = list(by_provider.items())
-        futures = [self._pool.submit(_get_batch, pid, items) for pid, items in batches]
-        fallback: List[Tuple[int, TreeNode, int]] = []
-        for (pid, items), f in zip(batches, futures):
-            got = f.result()
-            if got is None:
-                fallback.extend((p, leaf, pid) for p, _, leaf in items)
-            else:
-                result.update(got)
-        if fallback:
-            # replica fallback in parallel, skipping the observed-dead choice
-            fb = [
-                self._pool.submit(self._fetch_single, p, leaf, skip)
-                for p, leaf, skip in fallback
-            ]
-            for (p, _, _), f in zip(fallback, fb):
-                result[p] = f.result()
-        if self.replica_balancer is not None:
-            self.replica_balancer.note_fetches(
-                items[2] for batch in by_provider.values() for items in batch
-            )
-        return result
-
-    def _fetch_single(
-        self, page_index: int, leaf: TreeNode, skip_pid: Optional[int] = None
-    ) -> np.ndarray:
-        refs = [r for r in leaf.all_page_refs() if r[0] != skip_pid]
-        last_err: Optional[Exception] = None
-        for pid, key in refs or leaf.all_page_refs():
-            try:
-                page = self.provider_manager.get_provider(pid).get_page(key)
-                self.stats.record_data(pid, 1, page.nbytes, read=True)
-                return page
-            except (ProviderFailed, KeyError) as err:
-                last_err = err
-        raise last_err if last_err else KeyError(f"page {page_index} unavailable")
-
-    def write_unaligned(self, blob_id: int, buffer: np.ndarray, offset_bytes: int) -> int:
-        """WRITE at arbitrary byte offset/size via client-side read-modify-write
-        of the boundary pages (the paper's API allows arbitrary segments; pages
-        are the storage granularity, so partial boundary pages are merged from
-        the latest published version before patching). Both boundary pages are
-        fetched in one :meth:`readv` call, so hot boundary pages come straight
-        from the page cache.
-
-        Note the concurrency caveat the paper implies: the boundary merge reads
-        the LATEST version, so two concurrent unaligned writers sharing a
-        boundary page serialize at page granularity like any COW system.
-        """
-        _, page_size = self.version_manager.blob_info(blob_id)
-        buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
-        lo = offset_bytes // page_size * page_size
-        hi = -(-(offset_bytes + buffer.size) // page_size) * page_size
-        if lo == offset_bytes and hi == offset_bytes + buffer.size:
-            return self.write(blob_id, buffer, offset_bytes)
-        merged = np.zeros(hi - lo, np.uint8)
-        boundary_segs: List[Tuple[int, int]] = []
-        if lo < offset_bytes:  # left boundary page
-            boundary_segs.append((lo, page_size))
-        if hi > offset_bytes + buffer.size:  # right boundary page
-            boundary_segs.append((hi - page_size, page_size))
-        boundary = self.readv(blob_id, None, boundary_segs)
-        for (seg_off, _), data in zip(boundary_segs, boundary):
-            merged[seg_off - lo : seg_off - lo + page_size] = data
-        merged[offset_bytes - lo : offset_bytes - lo + buffer.size] = buffer
-        return self.write(blob_id, merged, lo)
-
-    # -- GC (paper future work) -----------------------------------------------------
     def gc(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
-        """Drop all tree nodes / pages unreachable from ``keep_versions``.
+        return self.cluster.gc(blob_id, keep_versions)
 
-        Must be invoked only when no concurrent accesses target the dropped
-        versions (the paper's "ordered by the client" semantics). Cached pages
-        of dropped versions are purged as well. Promotion passes are paused
-        for the duration — an in-flight promotion could otherwise re-create a
-        just-deleted leaf node or copy a page GC is about to drop. Returns
-        (nodes_freed, pages_freed).
-        """
-        if self.replica_balancer is not None:
-            with self.replica_balancer.paused():
-                return self._gc_locked(blob_id, keep_versions)
-        return self._gc_locked(blob_id, keep_versions)
-
-    def _gc_locked(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
-        total_pages, _ = self.version_manager.blob_info(blob_id)
-        latest = self.version_manager.latest_published(blob_id)
-        keep = sorted(set(v for v in keep_versions if v != ZERO_VERSION))
-        reachable_nodes: Set[NodeKey] = set()
-        reachable_pages: Set[PageRef] = set()
-
-        def mark(version: int, offset: int, size: int) -> None:
-            if version == ZERO_VERSION:
-                return
-            key = NodeKey(blob_id, version, offset, size)
-            if key in reachable_nodes:
-                return
-            node = self.metadata.get_node(key)
-            reachable_nodes.add(key)
-            if node.is_leaf:
-                reachable_pages.update(node.all_page_refs())
-                return
-            half = size // 2
-            mark(node.left_version, offset, half)
-            mark(node.right_version, offset + half, half)
-
-        for v in keep:
-            mark(v, 0, total_pages)
-
-        # Enumerate every stored node of this blob and drop unreachable ones.
-        doomed_nodes: List[NodeKey] = []
-        doomed_pages: Set[PageRef] = set()
-        for key, node in self.metadata.iter_nodes(blob_id):
-            if key.version > latest:
-                continue  # never GC in-flight (unpublished) versions
-            if key not in reachable_nodes:
-                doomed_nodes.append(key)
-                if node.is_leaf:
-                    doomed_pages.update(ref for ref in node.all_page_refs())
-        doomed_pages -= reachable_pages
-        self.metadata.delete_nodes(doomed_nodes)
-        if self.replica_balancer is not None:
-            # demote-on-GC: the promoted copies die with the doomed leaves
-            # (they are in the rewritten nodes' all_page_refs above); drop the
-            # balancer's heat/promotion records so they can't be re-targeted
-            self.replica_balancer.forget(doomed_nodes)
-        by_provider: Dict[int, List[int]] = {}
-        for pid, key in doomed_pages:
-            by_provider.setdefault(pid, []).append(key)
-        for pid, keys in by_provider.items():
-            self.provider_manager.get_provider(pid).delete_pages(keys)
-        self.provider_manager.release(sorted(doomed_pages))
-        if self.page_cache is not None:
-            self.page_cache.drop_versions(blob_id, set(keep) | {ZERO_VERSION})
-        return len(doomed_nodes), len(doomed_pages)
-
-    # -- introspection ------------------------------------------------------------
     def storage_bytes(self) -> int:
-        return sum(p.used_bytes() for p in self.provider_manager.providers())
+        return self.cluster.storage_bytes()
 
     def close(self) -> None:
-        # quiesce the async write window first; errors are the caller's to
-        # observe via flush()/the returned futures, not close()
-        with self._async_lock:
-            futures, self._async_writes = self._async_writes, []
-        for f in futures:
-            f.exception()
-        with self._writer_pool_lock:
-            if self._writer_pool is not None:
-                self._writer_pool.shutdown(wait=True)
-                self._writer_pool = None
-        self.metadata.close()
-        self._pool.shutdown(wait=True)
+        self.cluster.close()

@@ -1,0 +1,1202 @@
+"""Cluster / Session / BlobHandle: the layered client API (paper §III).
+
+The paper's architecture separates the *shared infrastructure* — version
+manager, metadata providers, data providers — from the *client library* each
+concurrent reader/writer embeds (§III.A vs §III.B). This module makes that
+split explicit in the API, the way BlobSeer exposes its versioned
+``create/read/write/clone`` client interface:
+
+* :class:`Cluster` owns the shared plane: the :class:`VersionManager` (the
+  system's only serialization point), the :class:`MetadataDHT`, the
+  :class:`ProviderManager` and its :class:`DataProvider`\\ s, the
+  :class:`ReplicaBalancer`, the data-plane thread pool, and a **node-level
+  shared page-cache tier** (many detector threads on one node, one cache).
+* :class:`Session` (``cluster.session()``) owns per-client state: a private
+  write-through page cache in front of the shared tier, its own
+  :class:`TrafficStats`, the ``write_async`` bounded in-flight window, and
+  replica-choice randomness. N sessions on one cluster model the paper's
+  N-concurrent-clients topology in-process without N copies of the providers.
+* :class:`BlobHandle` (``session.open(blob_id)``) carries the fine-grain data
+  ops — ``read``/``readv``/``write``/``writev``/``write_async`` — plus
+  :meth:`BlobHandle.snapshot`/:meth:`BlobHandle.at` returning an immutable
+  :class:`Snapshot` that pins a published version for lock-free repeated
+  reads (no version-manager round-trip per read, and GC will not collect a
+  pinned version), and :meth:`BlobHandle.watch`, a publish-subscription built
+  on ``VersionManager.wait_published`` so readers react to newly published
+  versions instead of polling.
+
+Cache coherence across sessions is the publish frontier: a session's private
+cache is write-through under the versions the manager assigned to it, so the
+moment one of its writes publishes, its own re-reads are RAM hits (reads of
+still-unpublished versions are rejected at the frontier for everyone,
+including the writer). The shared tier is filled exclusively by the read
+path, which resolves and validates the version against the publish frontier
+first — so an unpublished page can never enter the shared tier, and a
+cross-session read of an unpublished version is impossible by construction.
+
+The write path is the overlapped pipeline of the write-plane PR (data puts
+launched first; version assignment, tree weaving and per-shard node puts all
+run while data is in flight; one join before success is reported; failures
+clean up after themselves via ``VersionManager.abandon``), and transport is
+zero-copy end to end. See :mod:`repro.core.blob` for the deprecated
+single-object facade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import random
+import threading
+import time
+from collections import defaultdict
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
+from repro.core.provider import DataProvider, ProviderManager
+from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
+from repro.core.segment_tree import (
+    NodeKey,
+    PageRef,
+    TreeNode,
+    ZERO_VERSION,
+    build_write_tree,
+    traverse_batch,
+)
+from repro.core.version_manager import VersionManager
+
+#: Default per-session (private) page-cache budget in bytes; ``cache_bytes=0``
+#: disables the private tier.
+DEFAULT_CACHE_BYTES = 64 << 20
+#: Default node-level shared cache tier budget in bytes;
+#: ``shared_cache_bytes=0`` disables the shared tier (each session then runs
+#: a standalone private cache, the pre-split topology).
+DEFAULT_SHARED_CACHE_BYTES = 256 << 20
+
+
+@dataclasses.dataclass
+class ReadResult:
+    latest_published: int
+    data: np.ndarray
+
+
+@functools.lru_cache(maxsize=8)
+def _zero_page(page_size: int) -> np.ndarray:
+    page = np.zeros(page_size, dtype=np.uint8)
+    page.flags.writeable = False
+    return page
+
+
+def _merge_ranges(pages: Sequence[int]) -> List[Tuple[int, int]]:
+    """Collapse a sorted page-index list into (offset, size) runs."""
+    ranges: List[Tuple[int, int]] = []
+    for p in pages:
+        if ranges and ranges[-1][0] + ranges[-1][1] == p:
+            ranges[-1] = (ranges[-1][0], ranges[-1][1] + 1)
+        else:
+            ranges.append((p, 1))
+    return ranges
+
+
+class Cluster:
+    """The shared plane: the five actors of the paper's architecture plus the
+    node-level shared cache tier, wired once and shared by every
+    :class:`Session`."""
+
+    def __init__(
+        self,
+        n_data_providers: int = 4,
+        n_metadata_providers: int = 4,
+        page_replication: int = 1,
+        metadata_replication: int = 1,
+        max_workers: int = 8,
+        shared_cache_bytes: int = DEFAULT_SHARED_CACHE_BYTES,
+        hot_replicas: bool = True,
+        balancer_config: Optional[BalancerConfig] = None,
+        page_service_seconds: float = 0.0,
+        metadata_latency_seconds: float = 0.0,
+    ) -> None:
+        #: cluster-wide aggregate traffic (every session records here too)
+        self.stats = TrafficStats()
+        self.version_manager = VersionManager()
+        self.provider_manager = ProviderManager(
+            replication=page_replication, stats=self.stats
+        )
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.metadata = MetadataDHT(
+            n_metadata_providers,
+            replication=metadata_replication,
+            stats=self.stats,
+            executor=self._pool,
+            rpc_latency_seconds=metadata_latency_seconds,
+        )
+        #: shared intra-node cache tier: filled ONLY by the read path (whose
+        #: versions are validated against the publish frontier), hit by every
+        #: session — the coherence argument is published-version immutability
+        #: plus frontier gating, never an invalidation protocol
+        self.shared_cache: Optional[PageCache] = (
+            PageCache(shared_cache_bytes) if shared_cache_bytes else None
+        )
+        self.page_service_seconds = page_service_seconds
+        for i in range(n_data_providers):
+            self.provider_manager.register(DataProvider(i, page_service_seconds))
+        self.replica_balancer: Optional[ReplicaBalancer] = (
+            ReplicaBalancer(
+                self.provider_manager, self.metadata, self.stats, balancer_config
+            )
+            if hot_replicas
+            else None
+        )
+        self._next_provider_id = n_data_providers
+        self._membership_lock = threading.Lock()
+        #: registered sessions (GC must purge every private cache tier)
+        self._sessions: List["Session"] = []
+        self._sessions_lock = threading.Lock()
+        #: snapshot pins: blob_id -> version -> refcount; GC keeps pinned
+        #: versions alive no matter what ``keep_versions`` says
+        self._pins: Dict[int, Dict[int, int]] = {}
+        self._pins_lock = threading.Lock()
+        #: linearizes snapshot creation against GC: a pin is taken either
+        #: strictly before a GC pass reads the pin set (and is honored) or
+        #: strictly after the pass completes — never mid-sweep, where the
+        #: just-pinned version could still be collected (``_pins_lock`` alone
+        #: cannot give that guarantee; it is held only for the dict ops)
+        self._gc_guard = threading.Lock()
+        #: monotonically numbers sessions (diversifies their RNG streams)
+        self._session_counter = 0
+
+    # -- sessions ------------------------------------------------------------
+    def session(
+        self,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
+        replica_spread: bool = True,
+        sync_write: bool = False,
+        max_inflight_writes: int = 8,
+    ) -> "Session":
+        """Create one client :class:`Session` on this cluster. Every
+        concurrent reader/writer of the paper's topology is one session."""
+        with self._sessions_lock:
+            index = self._session_counter
+            self._session_counter += 1
+        sess = Session(
+            self,
+            cache_bytes=cache_bytes,
+            replica_spread=replica_spread,
+            sync_write=sync_write,
+            max_inflight_writes=max_inflight_writes,
+            _index=index,
+        )
+        with self._sessions_lock:
+            self._sessions.append(sess)
+        return sess
+
+    def _forget_session(self, sess: "Session") -> None:
+        with self._sessions_lock:
+            try:
+                self._sessions.remove(sess)
+            except ValueError:
+                pass
+
+    def sessions(self) -> List["Session"]:
+        with self._sessions_lock:
+            return list(self._sessions)
+
+    # -- elasticity ----------------------------------------------------------
+    def add_data_provider(self) -> int:
+        with self._membership_lock:
+            pid = self._next_provider_id
+            self._next_provider_id += 1
+        self.provider_manager.register(DataProvider(pid, self.page_service_seconds))
+        return pid
+
+    # -- ALLOC ---------------------------------------------------------------
+    def alloc(self, size_bytes: int, page_size: int) -> int:
+        if page_size & (page_size - 1):
+            raise ValueError("page_size must be a power of two")
+        if size_bytes % page_size:
+            raise ValueError("blob size must be a multiple of page_size")
+        total_pages = size_bytes // page_size
+        return self.version_manager.alloc(total_pages, page_size)
+
+    # -- snapshot pins --------------------------------------------------------
+    def pin_version(self, blob_id: int, version: int) -> None:
+        if version == ZERO_VERSION:
+            return  # the implicit zero version has nothing to collect
+        with self._pins_lock:
+            blob_pins = self._pins.setdefault(blob_id, {})
+            blob_pins[version] = blob_pins.get(version, 0) + 1
+
+    def unpin_version(self, blob_id: int, version: int) -> None:
+        with self._pins_lock:
+            blob_pins = self._pins.get(blob_id)
+            if not blob_pins or version not in blob_pins:
+                return
+            blob_pins[version] -= 1
+            if blob_pins[version] <= 0:
+                del blob_pins[version]
+            if not blob_pins:
+                del self._pins[blob_id]
+
+    def pinned_versions(self, blob_id: int) -> Set[int]:
+        with self._pins_lock:
+            return set(self._pins.get(blob_id, ()))
+
+    # -- GC (paper future work) ----------------------------------------------
+    def gc(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
+        """Drop all tree nodes / pages unreachable from ``keep_versions``
+        (plus every snapshot-pinned version — a live :class:`Snapshot` keeps
+        its version readable no matter what the GC caller asks for).
+
+        Must be invoked only when no concurrent accesses target the dropped
+        versions (the paper's "ordered by the client" semantics). Dropped
+        versions are purged from the shared cache tier AND from every
+        registered session's private cache, so no client on this node can
+        serve a collected version from RAM — the local half of GC↔cache
+        coherence (a *distributed* deployment still needs a GC epoch/lease
+        protocol before remote nodes' caches can be trusted). Promotion
+        passes are paused for the duration, and snapshot creation serializes
+        against the pass (``_gc_guard``), so a pin can never land mid-sweep
+        and lose its version. Returns (nodes_freed, pages_freed)."""
+        with self._gc_guard:
+            keep = set(keep_versions) | self.pinned_versions(blob_id)
+            if self.replica_balancer is not None:
+                with self.replica_balancer.paused():
+                    return self._gc_locked(blob_id, keep)
+            return self._gc_locked(blob_id, keep)
+
+    def _gc_locked(self, blob_id: int, keep_versions: Set[int]) -> Tuple[int, int]:
+        total_pages, _ = self.version_manager.blob_info(blob_id)
+        latest = self.version_manager.latest_published(blob_id)
+        keep = sorted(v for v in keep_versions if v != ZERO_VERSION)
+        reachable_nodes: Set[NodeKey] = set()
+        reachable_pages: Set[PageRef] = set()
+
+        def mark(version: int, offset: int, size: int) -> None:
+            if version == ZERO_VERSION:
+                return
+            key = NodeKey(blob_id, version, offset, size)
+            if key in reachable_nodes:
+                return
+            node = self.metadata.get_node(key)
+            reachable_nodes.add(key)
+            if node.is_leaf:
+                reachable_pages.update(node.all_page_refs())
+                return
+            half = size // 2
+            mark(node.left_version, offset, half)
+            mark(node.right_version, offset + half, half)
+
+        for v in keep:
+            mark(v, 0, total_pages)
+
+        # Enumerate every stored node of this blob and drop unreachable ones.
+        doomed_nodes: List[NodeKey] = []
+        doomed_pages: Set[PageRef] = set()
+        for key, node in self.metadata.iter_nodes(blob_id):
+            if key.version > latest:
+                continue  # never GC in-flight (unpublished) versions
+            if key not in reachable_nodes:
+                doomed_nodes.append(key)
+                if node.is_leaf:
+                    doomed_pages.update(ref for ref in node.all_page_refs())
+        doomed_pages -= reachable_pages
+        self.metadata.delete_nodes(doomed_nodes)
+        if self.replica_balancer is not None:
+            # demote-on-GC: the promoted copies die with the doomed leaves
+            # (they are in the rewritten nodes' all_page_refs above); drop the
+            # balancer's heat/promotion records so they can't be re-targeted
+            self.replica_balancer.forget(doomed_nodes)
+        by_provider: Dict[int, List[int]] = {}
+        for pid, key in doomed_pages:
+            by_provider.setdefault(pid, []).append(key)
+        for pid, keys in by_provider.items():
+            self.provider_manager.get_provider(pid).delete_pages(keys)
+        self.provider_manager.release(sorted(doomed_pages))
+        # cache coherence: purge the dropped versions from the shared tier
+        # and from EVERY session's private cache. In-flight (unpublished)
+        # versions stay cached — their pages were not collected above, and a
+        # concurrent writer's write-through entries must survive another
+        # session's GC call.
+        keep_cached = set(keep) | {ZERO_VERSION}
+        caches = [self.shared_cache] + [s.cache for s in self.sessions()]
+        for cache in caches:
+            if cache is not None:
+                cache.drop_versions(blob_id, keep_cached, max_version=latest)
+        return len(doomed_nodes), len(doomed_pages)
+
+    # -- introspection --------------------------------------------------------
+    def storage_bytes(self) -> int:
+        return sum(p.used_bytes() for p in self.provider_manager.providers())
+
+    def close(self) -> None:
+        for sess in self.sessions():
+            sess.close()
+        self.metadata.close()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "Cluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class Session:
+    """One client of the cluster: private cache tier, private traffic stats,
+    private async-write window. Create via :meth:`Cluster.session`; get data
+    ops via :meth:`Session.open` / :meth:`Session.create`.
+
+    The fine-grain data plane (the paper's §III.B client protocol — the
+    overlapped write pipeline and the batched, cache-fronted read path) lives
+    here as ``_readv``/``_writev``; :class:`BlobHandle` is its public face.
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
+        replica_spread: bool = True,
+        sync_write: bool = False,
+        max_inflight_writes: int = 8,
+        _index: int = 0,
+    ) -> None:
+        self.cluster = cluster
+        #: this session's traffic only; the cluster's ``stats`` aggregates all
+        self.stats = TrafficStats()
+        #: private tier: write-through under the session's own assigned
+        #: versions (a writer's re-reads are RAM hits before anyone else can
+        #: even see the version); ALSO serves as the read-fill cache when the
+        #: cluster runs without a shared tier
+        self.cache: Optional[PageCache] = (
+            PageCache(cache_bytes) if cache_bytes else None
+        )
+        #: pick the least-read-loaded replica per page instead of always the
+        #: primary (the knob the skew-read benchmark flips)
+        self.replica_spread = replica_spread
+        #: run writes with the pre-pipeline full barriers + per-page copies
+        #: (the A/B baseline for the ``sync-write`` benchmark mode)
+        self.sync_write = sync_write
+        #: bounded in-flight window for :meth:`BlobHandle.write_async`
+        self.max_inflight_writes = max_inflight_writes
+        self._write_window = threading.BoundedSemaphore(max_inflight_writes)
+        self._writer_pool: Optional[ThreadPoolExecutor] = None
+        self._writer_pool_lock = threading.Lock()
+        self._async_lock = threading.Lock()
+        self._async_writes: List[Future] = []
+        self._pool = cluster._pool
+        # per-session stream, DISTINCT per session: N sessions seeded alike
+        # would sample identical replica pairs in lockstep and re-herd the
+        # very hot pages replica spreading exists to fan out
+        self._rng = random.Random(0xB10B + 0x9E3779B1 * _index)
+        self._closed = False
+
+    # -- handles ---------------------------------------------------------------
+    def open(self, blob_id: int) -> "BlobHandle":
+        return BlobHandle(self, blob_id)
+
+    def create(self, size_bytes: int, page_size: int) -> "BlobHandle":
+        """ALLOC a fresh blob on the cluster and open it in this session."""
+        return self.open(self.cluster.alloc(size_bytes, page_size))
+
+    # -- stats plumbing --------------------------------------------------------
+    def _record_data(
+        self, dest: int, n_messages: int, n_bytes: int, read: bool = False
+    ) -> None:
+        self.stats.record_data(dest, n_messages, n_bytes, read=read)
+        self.cluster.stats.record_data(dest, n_messages, n_bytes, read=read)
+
+    def _record_cache(self, hits: int, misses: int) -> None:
+        self.stats.record_cache(hits=hits, misses=misses)
+        self.cluster.stats.record_cache(hits=hits, misses=misses)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        h, m = self.stats.cache_hits, self.stats.cache_misses
+        return h / (h + m) if h + m else 0.0
+
+    # -- WRITE plane -----------------------------------------------------------
+    def _writev(
+        self, blob_id: int, patches: Sequence[Tuple[int, np.ndarray]]
+    ) -> List[int]:
+        """Vectored WRITE (see :meth:`BlobHandle.writev` for semantics and
+        the zero-copy buffer-surrender contract)."""
+        vm = self.cluster.version_manager
+        total_pages, page_size = vm.blob_info(blob_id)
+        sync = self.sync_write
+        # pass 1: validate and normalize every patch — no side effects yet,
+        # so a bad later patch cannot leave earlier buffers frozen
+        bufs: List[np.ndarray] = []
+        spans: List[Tuple[int, int]] = []  # (page_offset, n_pages) per patch
+        for offset_bytes, buffer in patches:
+            src = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
+            if offset_bytes % page_size or src.size % page_size:
+                raise ValueError("WRITE must be page-aligned (paper §II)")
+            n_pages = src.size // page_size
+            if n_pages == 0:
+                raise ValueError("empty write")
+            bufs.append(src)
+            spans.append((offset_bytes // page_size, n_pages))
+        if not bufs:
+            return []
+        # pass 2 (pipelined only; the sync baseline copies every page anyway):
+        # make each source immutable before any view of it is handed out.
+        # Zero-copy is only safe when freezing the array that OWNS the memory
+        # actually cuts off future writes — i.e. the caller passed the owning
+        # array itself (or our normalization already copied). A view of some
+        # larger writable array cannot be protected by freezing (writes
+        # through the base would still mutate the stored pages), so that case
+        # falls back to ONE bulk copy per patch — never a per-page copy.
+        if not sync:
+            for i, (src, (_, buffer)) in enumerate(zip(bufs, patches)):
+                root = src
+                while isinstance(root.base, np.ndarray):
+                    root = root.base
+                if root.flags.writeable:
+                    caller_root = buffer
+                    while isinstance(caller_root, np.ndarray) and isinstance(
+                        caller_root.base, np.ndarray
+                    ):
+                        caller_root = caller_root.base
+                    owns = root is not caller_root or (
+                        isinstance(buffer, np.ndarray) and buffer.base is None
+                    )
+                    if owns:
+                        root.flags.writeable = False
+                    else:
+                        src = bufs[i] = src.copy()
+                        src.flags.writeable = False
+                ro = src.view()
+                ro.flags.writeable = False
+                bufs[i] = ro
+
+        provider_manager = self.cluster.provider_manager
+        metadata = self.cluster.metadata
+
+        # (1) placements for every fresh page of every patch, in one call
+        placements = provider_manager.allocate(sum(n for _, n in spans))
+
+        by_provider: Dict[int, List[Tuple[int, np.ndarray]]] = {}
+        per_patch: List[List[Tuple[PageRef, Tuple[PageRef, ...]]]] = []
+        #: per patch, the page arrays actually handed to the store (views in
+        #: the pipelined path, copies in the sync baseline) — the write-through
+        #: cache must reference these, never a possibly-writable source
+        stored_pages: List[List[np.ndarray]] = []
+        versions: List[int] = []
+        node_keys: List[NodeKey] = []
+        data_futures: List[Future] = []
+        meta_futures: List[Future] = []
+        try:
+            cursor = 0
+            for src, (_, n_pages) in zip(bufs, spans):
+                mine = placements[cursor : cursor + n_pages]
+                cursor += n_pages
+                per_patch.append(mine)
+                pages: List[np.ndarray] = []
+                for i, (primary, replicas) in enumerate(mine):
+                    page = src[i * page_size : (i + 1) * page_size]
+                    if sync:
+                        page = page.copy()  # pre-pipeline baseline: defensive copy
+                    pages.append(page)
+                    for pid, key in (primary,) + replicas:
+                        by_provider.setdefault(pid, []).append((key, page))
+                stored_pages.append(pages)
+
+            # (2) LAUNCH the aggregated per-provider puts; the pipeline only
+            #     joins them at the end (sync baseline: full barrier here)
+            data_futures = [
+                self._pool.submit(self._put_batch, pid, items)
+                for pid, items in by_provider.items()
+            ]
+            if sync:
+                for f in data_futures:
+                    f.result()
+
+            # (3) version numbers + border links for ALL patches under ONE
+            #     manager lock acquisition (the only serialized step) — this
+            #     does not depend on data-put completion, so it runs while
+            #     the pages are still in flight
+            assigned = vm.assign_versions(blob_id, spans)
+            versions = [v for v, _ in assigned]
+
+            # (4) weave every patch's tree while the data puts are still in
+            #     flight, then LAUNCH one aggregated node put per shard
+            #     (paper §V.A aggregation across the whole writev); the sync
+            #     baseline runs the same aggregated put behind a barrier
+            all_nodes: List[TreeNode] = []
+            for (page_offset, n_pages), mine, (version, links) in zip(
+                spans, per_patch, assigned
+            ):
+                all_nodes.extend(
+                    build_write_tree(
+                        blob_id, version, total_pages, page_offset, n_pages, mine, links
+                    )
+                )
+            node_keys.extend(node.key for node in all_nodes)
+            if sync:
+                metadata.put_nodes(all_nodes)
+            else:
+                meta_futures.extend(metadata.put_nodes_async(all_nodes))
+
+            # join: every page and node must be durable before success
+            for f in data_futures + meta_futures:
+                err = f.exception()
+                if err is not None:
+                    raise err
+
+            # (5) report success (one lock for the batch) → in-order publish
+            vm.report_successes(blob_id, versions)
+        except BaseException:
+            # NOTE: frozen sources stay frozen — a concurrent write may
+            # already hold zero-copy views of the same root, so restoring
+            # writability here would let the caller mutate ITS published
+            # pages through the shared memory
+            self._abort_writev(
+                blob_id, versions, placements, by_provider, node_keys,
+                data_futures, meta_futures,
+            )
+            raise
+
+        # write-through into the PRIVATE tier only: the just-stored pages are
+        # already immutable, so this session's re-reads of these versions come
+        # straight from RAM — but the versions may not have published yet, and
+        # the shared tier must never hold a page another session could not
+        # also fetch from the providers after frontier validation
+        if self.cache is not None:
+            items: List[Tuple[Tuple[int, int, int], np.ndarray]] = []
+            for pages, (page_offset, _), version in zip(
+                stored_pages, spans, versions
+            ):
+                for i, page in enumerate(pages):
+                    items.append(((blob_id, version, page_offset + i), page))
+            self.cache.put_many(items)
+        return versions
+
+    def _put_batch(self, pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
+        self.cluster.provider_manager.get_provider(pid).put_pages(items)
+        self._record_data(pid, len(items), sum(p.nbytes for _, p in items))
+
+    def _abort_writev(
+        self,
+        blob_id: int,
+        versions: List[int],
+        placements: List[Tuple[PageRef, Tuple[PageRef, ...]]],
+        by_provider: Dict[int, List[Tuple[int, np.ndarray]]],
+        node_keys: List[NodeKey],
+        data_futures: List[Future],
+        meta_futures: List[Future],
+    ) -> None:
+        """Failure cleanup for a mid-flight ``writev``: without this, the
+        placement load heap keeps phantom load, stored pages and nodes of the
+        doomed versions leak forever, and in-order publication wedges behind
+        versions that will never report success.
+
+        The doomed versions are withdrawn first; what happens to their
+        stored wreckage depends on how :meth:`VersionManager.abandon`
+        resolved them. Fully *erased* versions (no concurrent writer assigned
+        after them) are scrubbed: pages deleted, nodes deleted, placement
+        credits released. Versions that became publication *holes* are left
+        in place instead — a later writer may already have woven border links
+        into their trees, so deleting whatever did land would turn that
+        writer's published version unreadable; the wreckage stays until
+        :meth:`Cluster.gc` collects it (which also returns the load
+        credit), the same stance taken for orphans on a down provider."""
+        provider_manager = self.cluster.provider_manager
+        for f in data_futures + meta_futures:
+            f.exception()  # quiesce: no put may still be in flight
+        if versions:
+            holes = self.cluster.version_manager.abandon(blob_id, versions)
+            if holes:
+                return  # leak to GC: later versions may reference the nodes
+        for pid, items in by_provider.items():
+            try:  # best-effort: a down provider keeps its orphans until GC
+                provider_manager.get_provider(pid).delete_pages(
+                    [key for key, _ in items]
+                )
+            except (ProviderFailed, KeyError):
+                pass
+        try:
+            self.cluster.metadata.delete_nodes(node_keys)
+        except ProviderFailed:
+            pass
+        provider_manager.release(
+            [ref for primary, replicas in placements for ref in (primary,) + replicas]
+        )
+
+    # -- asynchronous write streaming ------------------------------------------
+    def _write_async(
+        self, blob_id: int, buffer: np.ndarray, offset_bytes: int
+    ) -> "Future[int]":
+        if self._closed:
+            # a closed session's writer pool is already shut down and the
+            # cluster no longer tracks the session (GC would skip its cache);
+            # silently resurrecting the pool here would leak its threads
+            raise RuntimeError("write_async on a closed session")
+        self._write_window.acquire()
+        try:
+            future = self._writers().submit(
+                self._windowed_write, blob_id, buffer, offset_bytes
+            )
+        except BaseException:
+            self._write_window.release()
+            raise
+        with self._async_lock:
+            # prune successfully-completed futures so a long-running streamer
+            # that joins its own returned futures (never calls flush) does
+            # not accumulate them forever; FAILED futures are kept until
+            # flush()/close() so their errors cannot vanish unobserved
+            self._async_writes = [
+                f for f in self._async_writes
+                if not f.done() or f.exception() is not None
+            ]
+            self._async_writes.append(future)
+        return future
+
+    def _writers(self) -> ThreadPoolExecutor:
+        with self._writer_pool_lock:
+            if self._writer_pool is None:
+                self._writer_pool = ThreadPoolExecutor(
+                    max_workers=self.max_inflight_writes
+                )
+            return self._writer_pool
+
+    def _windowed_write(
+        self, blob_id: int, buffer: np.ndarray, offset_bytes: int
+    ) -> int:
+        try:
+            return self._writev(blob_id, [(offset_bytes, buffer)])[0]
+        finally:
+            self._write_window.release()
+
+    def flush(self) -> List[int]:
+        """Join every outstanding ``write_async`` of this session —
+        SESSION-GLOBAL: it drains the whole window, including writes queued
+        by other threads sharing this session (a multi-writer client should
+        instead join the futures ``write_async`` returned to it). Returns the
+        versions of the writes still tracked by the window (writes that
+        completed and were already pruned are not re-reported) and re-raises
+        the first failure."""
+        with self._async_lock:
+            futures, self._async_writes = self._async_writes, []
+        versions: List[int] = []
+        first_err: Optional[BaseException] = None
+        for f in futures:
+            try:
+                versions.append(f.result())
+            except BaseException as err:  # keep joining; surface the first
+                if first_err is None:
+                    first_err = err
+        if first_err is not None:
+            raise first_err
+        return versions
+
+    # -- READ plane --------------------------------------------------------------
+    def _readv(
+        self,
+        blob_id: int,
+        version: int,
+        segments: Sequence[Tuple[int, int]],
+        total_pages: int,
+        page_size: int,
+    ) -> List[np.ndarray]:
+        """``readv`` body with the version-manager state already resolved —
+        the serialized actor is consulted exactly once per public call (and
+        not at all for :class:`Snapshot` re-reads)."""
+        # clamp segments; collect the deduplicated union of needed pages
+        total_bytes = total_pages * page_size
+        clamped: List[Tuple[int, int]] = []
+        needed: Set[int] = set()
+        for offset, size in segments:
+            if offset < 0 or size < 0:
+                raise ValueError(f"negative read offset/size ({offset}, {size})")
+            if size == 0:
+                clamped.append((offset, 0))
+                continue
+            if offset >= total_bytes:
+                raise ValueError(
+                    f"read at offset {offset} out of range (blob is {total_bytes} bytes)"
+                )
+            size = min(size, total_bytes - offset)  # clamp to blob end
+            clamped.append((offset, size))
+            first_page = offset // page_size
+            last_page = min(-(-(offset + size) // page_size), total_pages)
+            needed.update(range(first_page, last_page))
+
+        # cache phase. Tier order: the private cache first (it may hold this
+        # session's own write-through pages), then the shared tier, which
+        # also provides cross-session single-flight — exactly one reader on
+        # the whole node becomes the fetch leader for each missing page. The
+        # version was already validated against the publish frontier, so
+        # everything that enters the shared tier here is published data.
+        pages: Dict[int, Optional[np.ndarray]] = {}
+        private = self.cache
+        shared = self.cluster.shared_cache
+        flight_cache = shared if shared is not None else private
+        owned: List[int] = []
+        waits: Dict[Tuple[int, int, int], object] = {}
+        if needed:
+            keys = [(blob_id, version, p) for p in sorted(needed)]
+            hits = 0
+            if shared is not None and private is not None:
+                got = private.get_many(keys)
+                pages.update({key[2]: pg for key, pg in got.items()})
+                hits += len(got)
+                keys = [k for k in keys if k not in got]
+            if flight_cache is not None:
+                plan = flight_cache.plan(keys, record=False)
+                pages.update({key[2]: page for key, page in plan.hits.items()})
+                hits += len(plan.hits)
+                owned = sorted(key[2] for key in plan.owned)
+                waits = plan.waits
+                self._record_cache(hits, len(owned) + len(waits))
+            else:
+                owned = sorted(key[2] for key in keys)
+
+        if owned:
+            fulfilled: Set[int] = set()
+            try:
+                # (2) ONE metadata traversal pass over all missed ranges
+                leaves = traverse_batch(
+                    self.cluster.metadata.get_nodes, blob_id, version, total_pages,
+                    _merge_ranges(owned),
+                )
+                # (3) ONE aggregated page fetch per provider
+                fetched = self._fetch_pages(leaves, page_size)
+                for p, page in fetched.items():
+                    pages[p] = page
+                    if flight_cache is not None:
+                        # zero pages share one buffer — charge them the LRU
+                        # slot, not a full page, so repeat sparse reads skip
+                        # the metadata walk without evicting real pages
+                        flight_cache.fulfill(
+                            (blob_id, version, p),
+                            page if page is not None else _zero_page(page_size),
+                            charge=None if page is not None else ZERO_PAGE_CHARGE,
+                        )
+                        fulfilled.add(p)
+            except BaseException as err:
+                if flight_cache is not None:
+                    for p in owned:
+                        if p not in fulfilled:
+                            flight_cache.abort((blob_id, version, p), err)
+                raise
+
+        # follower phase: collect pages fetched by concurrent leaders
+        for key, flight in waits.items():
+            pages[key[2]] = flight_cache.wait(key, flight)  # type: ignore[union-attr, arg-type]
+
+        # assemble per-segment outputs from the shared page map: a segment
+        # covering exactly one whole page is served as a zero-copy read-only
+        # view of that page; anything else is written page-by-page directly
+        # into one preallocated output buffer
+        outs: List[np.ndarray] = []
+        for offset, size in clamped:
+            if size == page_size and offset % page_size == 0:
+                page = pages.get(offset // page_size)
+                outs.append(page if page is not None else _zero_page(page_size))
+                continue
+            out = np.zeros(size, dtype=np.uint8)
+            for p in range(offset // page_size, -(-(offset + size) // page_size)):
+                page = pages.get(p)
+                if page is None:
+                    continue  # implicit zero page
+                page_lo = p * page_size
+                a = max(offset, page_lo)
+                b = min(offset + size, page_lo + page_size)
+                out[a - offset : b - offset] = page[a - page_lo : b - page_lo]
+            outs.append(out)
+        return outs
+
+    def _choose_ref(
+        self, leaf: TreeNode, read_load: Dict[int, int], page_size: int
+    ) -> PageRef:
+        """Pick which replica serves this page via power-of-two random
+        choices: sample two replicas, take the one with less read traffic so
+        far, charging ``read_load`` tentatively so one batch also spreads.
+        The random sampling is what prevents the herd effect — a
+        deterministic global minimum sends every concurrent client to the
+        same momentarily-idle provider, re-serializing the hot page there."""
+        refs = leaf.all_page_refs()
+        a, b = self._rng.sample(range(len(refs)), 2)
+        pid, key = min(
+            refs[a], refs[b], key=lambda r: read_load.get(r[0], 0)
+        )
+        read_load[pid] = read_load.get(pid, 0) + page_size
+        return pid, key
+
+    def _fetch_pages(
+        self, leaves: Dict[int, Optional[TreeNode]], page_size: int
+    ) -> Dict[int, Optional[np.ndarray]]:
+        """Fetch all leaf pages: one aggregated RPC per serving provider (in
+        parallel), per-page replica fallback if a provider batch fails. The
+        serving provider per page is replica-spread (least read load,
+        judged against the CLUSTER-wide read traffic) rather than always the
+        primary, and every provider fetch feeds the replica balancer's heat
+        counters."""
+        provider_manager = self.cluster.provider_manager
+        result: Dict[int, Optional[np.ndarray]] = {}
+        by_provider: Dict[int, List[Tuple[int, int, TreeNode]]] = defaultdict(list)
+        # stats snapshot is deferred until a leaf actually has a choice to
+        # make — single-replica reads must not pay a global-lock round-trip
+        read_load: Optional[Dict[int, int]] = None
+        for page_index, leaf in leaves.items():
+            if leaf is None:
+                result[page_index] = None  # implicit zero page
+                continue
+            if self.replica_spread and len(leaf.all_page_refs()) > 1:
+                if read_load is None:
+                    read_load = self.cluster.stats.read_bytes_snapshot()
+                pid, key = self._choose_ref(leaf, read_load, page_size)
+            else:
+                pid, key = leaf.page  # type: ignore[misc]
+            by_provider[pid].append((page_index, key, leaf))
+
+        def _get_batch(
+            pid: int, items: List[Tuple[int, int, TreeNode]]
+        ) -> Optional[Dict[int, np.ndarray]]:
+            try:
+                provider = provider_manager.get_provider(pid)
+                fetched = provider.get_pages([key for _, key, _ in items])
+            except (ProviderFailed, KeyError):
+                return None  # provider down/deregistered: caller falls back
+            self._record_data(
+                pid, len(items), sum(pg.nbytes for pg in fetched), read=True
+            )
+            return {p: pg for (p, _, _), pg in zip(items, fetched)}
+
+        batches = list(by_provider.items())
+        futures = [self._pool.submit(_get_batch, pid, items) for pid, items in batches]
+        fallback: List[Tuple[int, TreeNode, int]] = []
+        for (pid, items), f in zip(batches, futures):
+            got = f.result()
+            if got is None:
+                fallback.extend((p, leaf, pid) for p, _, leaf in items)
+            else:
+                result.update(got)
+        if fallback:
+            # replica fallback in parallel, skipping the observed-dead choice
+            fb = [
+                self._pool.submit(self._fetch_single, p, leaf, skip)
+                for p, leaf, skip in fallback
+            ]
+            for (p, _, _), f in zip(fallback, fb):
+                result[p] = f.result()
+        if self.cluster.replica_balancer is not None:
+            self.cluster.replica_balancer.note_fetches(
+                items[2] for batch in by_provider.values() for items in batch
+            )
+        return result
+
+    def _fetch_single(
+        self, page_index: int, leaf: TreeNode, skip_pid: Optional[int] = None
+    ) -> np.ndarray:
+        refs = [r for r in leaf.all_page_refs() if r[0] != skip_pid]
+        last_err: Optional[Exception] = None
+        for pid, key in refs or leaf.all_page_refs():
+            try:
+                page = self.cluster.provider_manager.get_provider(pid).get_page(key)
+                self._record_data(pid, 1, page.nbytes, read=True)
+                return page
+            except (ProviderFailed, KeyError) as err:
+                last_err = err
+        raise last_err if last_err else KeyError(f"page {page_index} unavailable")
+
+    # -- lifecycle ---------------------------------------------------------------
+    def close(self) -> None:
+        """Quiesce the async write window and detach from the cluster.
+        Errors of still-outstanding async writes are the caller's to observe
+        via ``flush()``/the returned futures, not ``close()``."""
+        if self._closed:
+            return
+        self._closed = True
+        with self._async_lock:
+            futures, self._async_writes = self._async_writes, []
+        for f in futures:
+            f.exception()
+        with self._writer_pool_lock:
+            if self._writer_pool is not None:
+                self._writer_pool.shutdown(wait=True)
+                self._writer_pool = None
+        self.cluster._forget_session(self)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class BlobHandle:
+    """Fine-grain access to one blob through one session (paper §III.B).
+
+    WRITE is the overlapped pipeline (data puts in flight while versions are
+    assigned and metadata is woven; one join; in-order publication), READ is
+    the cache-fronted batched plane (private tier, then the cluster's shared
+    tier with node-wide single-flight, then one level-synchronous metadata
+    traversal + one aggregated page RPC per provider). Page transport is
+    zero-copy end to end: ``writev`` freezes owning source buffers and hands
+    page views to the providers; a full-single-page read returns a read-only
+    view of the stored/cached page.
+    """
+
+    def __init__(self, session: Session, blob_id: int) -> None:
+        self.session = session
+        self.blob_id = blob_id
+        self.total_pages, self.page_size = (
+            session.cluster.version_manager.blob_info(blob_id)
+        )
+
+    @property
+    def size_bytes(self) -> int:
+        return self.total_pages * self.page_size
+
+    @property
+    def _vm(self) -> VersionManager:
+        return self.session.cluster.version_manager
+
+    # -- versions ---------------------------------------------------------------
+    def latest_published(self) -> int:
+        """Latest readable published version."""
+        return self._vm.latest_published(self.blob_id)
+
+    def wait_for_version(self, version: int, timeout: Optional[float] = None) -> bool:
+        """Block until ``version`` publishes; False on timeout."""
+        return self._vm.wait_published(self.blob_id, version, timeout)
+
+    def snapshot(self) -> "Snapshot":
+        """Pin the latest published version; see :class:`Snapshot`."""
+        return self.at(None)
+
+    def at(self, version: Optional[int]) -> "Snapshot":
+        """Pin ``version`` (validated published and readable) for lock-free
+        repeated reads; ``None`` pins the latest published version. Pinning
+        serializes against :meth:`Cluster.gc` so a returned snapshot's
+        version was either visible to every earlier GC pass or created after
+        the pass finished — never silently collected mid-creation. (A
+        snapshot of a version a *completed* GC already dropped still fails
+        on first read: the pin protects the future, not the past.)"""
+        cluster = self.session.cluster
+        with cluster._gc_guard:
+            total_pages, page_size, resolved, _ = self._vm.resolve_read_version(
+                self.blob_id, version
+            )
+            cluster.pin_version(self.blob_id, resolved)
+        return Snapshot(self, resolved, total_pages, page_size)
+
+    def watch(self, start_version: Optional[int] = None) -> "VersionWatch":
+        """Subscribe to publications of this blob: the returned
+        :class:`VersionWatch` delivers every published version greater than
+        ``start_version`` (default: the latest published right now), strictly
+        in version order, waking on :meth:`VersionManager.wait_published`
+        instead of polling."""
+        if start_version is None:
+            start_version = self._vm.latest_published(self.blob_id)
+        return VersionWatch(self._vm, self.blob_id, start_version)
+
+    # -- READ -------------------------------------------------------------------
+    def read(
+        self, offset_bytes: int, size_bytes: int, version: Optional[int] = None
+    ) -> ReadResult:
+        """Read ``[offset_bytes, offset_bytes+size_bytes)`` of ``version``
+        (``None`` = latest published). Fails if ``version`` is unpublished,
+        abandoned, or the range is fully out of bounds; a range overlapping
+        the blob's end is clamped (short read). A read of exactly one whole
+        page returns a read-only view of the stored/cached page (zero-copy);
+        copy before mutating."""
+        total_pages, page_size, resolved, latest = self._vm.resolve_read_version(
+            self.blob_id, version
+        )
+        data = self.session._readv(
+            self.blob_id, resolved, [(offset_bytes, size_bytes)],
+            total_pages, page_size,
+        )[0]
+        return ReadResult(latest, data)
+
+    def readv(
+        self, segments: Sequence[Tuple[int, int]], version: Optional[int] = None
+    ) -> List[np.ndarray]:
+        """Vectored READ: fetch many ``(offset_bytes, size_bytes)`` segments
+        of one version in a single batched pass. Pages shared between
+        segments are deduplicated; cache hits skip the network entirely; the
+        remaining pages cost one level-synchronous metadata traversal (one
+        aggregated RPC per shard per level) plus ONE aggregated ``get_pages``
+        RPC per data provider. Returns one ``np.uint8`` array per segment
+        (full-single-page segments are read-only zero-copy views)."""
+        total_pages, page_size, resolved, _ = self._vm.resolve_read_version(
+            self.blob_id, version
+        )
+        return self.session._readv(
+            self.blob_id, resolved, segments, total_pages, page_size
+        )
+
+    # -- WRITE ------------------------------------------------------------------
+    def write(self, buffer: np.ndarray, offset_bytes: int) -> int:
+        """Patch the blob with ``buffer`` at ``offset_bytes``; returns the
+        assigned version (published once all earlier versions publish)."""
+        return self.writev([(offset_bytes, buffer)])[0]
+
+    def writev(self, patches: Sequence[Tuple[int, np.ndarray]]) -> List[int]:
+        """Vectored WRITE: apply many ``(offset_bytes, buffer)`` page-aligned
+        patches. Each patch gets its own version (identical semantics to a
+        loop of :meth:`write`, in patch order), but the data plane batches
+        AND pipelines: one placement call, ONE aggregated ``put_pages`` RPC
+        per data provider across all patches launched up front, version
+        assignment and metadata weaving while those puts are in flight, and a
+        single join before success is reported. Returns the assigned
+        versions.
+
+        Zero-copy hand-off: the write plane freezes each source buffer that
+        owns its memory (``writeable = False``) and providers keep page-sized
+        views of it; a buffer passed to ``writev`` is surrendered to the
+        store for good, whether the write succeeds or fails (another
+        overlapping write may already share the frozen buffer, so failure
+        cannot safely hand it back). Views of larger writable arrays cannot
+        be frozen and are bulk-copied once per patch instead. Caveat the
+        store cannot detect: a writable view the caller created BEFORE the
+        call still aliases the frozen memory — mutating through it corrupts
+        published data, exactly like scribbling over an O_DIRECT buffer with
+        I/O in flight."""
+        return self.session._writev(self.blob_id, patches)
+
+    def write_async(self, buffer: np.ndarray, offset_bytes: int) -> "Future[int]":
+        """Queue a :meth:`write` into the session's bounded in-flight window
+        and return a future of its assigned version. Blocks (backpressure)
+        once ``max_inflight_writes`` writes are outstanding. Successive
+        writes' pipelines overlap — a later write's pages may land before an
+        earlier write's metadata — while the version manager still publishes
+        strictly in assignment order. Join the window with
+        :meth:`Session.flush` (or await the returned future)."""
+        return self.session._write_async(self.blob_id, buffer, offset_bytes)
+
+    def write_unaligned(self, buffer: np.ndarray, offset_bytes: int) -> int:
+        """WRITE at arbitrary byte offset/size via client-side
+        read-modify-write of the boundary pages (the paper's API allows
+        arbitrary segments; pages are the storage granularity, so partial
+        boundary pages are merged from the latest published version before
+        patching). Both boundary pages are fetched in one :meth:`readv`
+        call, so hot boundary pages come straight from the page cache.
+
+        Note the concurrency caveat the paper implies: the boundary merge
+        reads the LATEST version, so two concurrent unaligned writers sharing
+        a boundary page serialize at page granularity like any COW system."""
+        page_size = self.page_size
+        buffer = np.ascontiguousarray(buffer).view(np.uint8).reshape(-1)
+        lo = offset_bytes // page_size * page_size
+        hi = -(-(offset_bytes + buffer.size) // page_size) * page_size
+        if lo == offset_bytes and hi == offset_bytes + buffer.size:
+            return self.write(buffer, offset_bytes)
+        merged = np.zeros(hi - lo, np.uint8)
+        boundary_segs: List[Tuple[int, int]] = []
+        if lo < offset_bytes:  # left boundary page
+            boundary_segs.append((lo, page_size))
+        if hi > offset_bytes + buffer.size:  # right boundary page
+            boundary_segs.append((hi - page_size, page_size))
+        boundary = self.readv(boundary_segs)
+        for (seg_off, _), data in zip(boundary_segs, boundary):
+            merged[seg_off - lo : seg_off - lo + page_size] = data
+        merged[offset_bytes - lo : offset_bytes - lo + buffer.size] = buffer
+        return self.write(merged, lo)
+
+
+class Snapshot:
+    """An immutable, pinned view of one published version of a blob.
+
+    Repeated reads through a snapshot are **lock-free**: the version was
+    resolved and validated once at creation, so :meth:`read`/:meth:`readv`
+    never touch the version manager again — the serialized actor costs zero
+    on the snapshot re-read path (the supernovae detector differencing the
+    same two sky versions window by window). The pinned version is also
+    protected from :meth:`Cluster.gc` until :meth:`release` (or context-
+    manager exit): GC of *other* versions can proceed freely while this
+    snapshot stays readable.
+    """
+
+    def __init__(
+        self, handle: BlobHandle, version: int, total_pages: int, page_size: int
+    ) -> None:
+        self.handle = handle
+        self.version = version
+        self._total_pages = total_pages
+        self._page_size = page_size
+        self._pinned = True
+        self._pin_lock = threading.Lock()
+
+    @property
+    def blob_id(self) -> int:
+        return self.handle.blob_id
+
+    @property
+    def pinned(self) -> bool:
+        return self._pinned
+
+    def read(self, offset_bytes: int, size_bytes: int) -> np.ndarray:
+        return self.readv([(offset_bytes, size_bytes)])[0]
+
+    def readv(self, segments: Sequence[Tuple[int, int]]) -> List[np.ndarray]:
+        return self.handle.session._readv(
+            self.handle.blob_id, self.version, segments,
+            self._total_pages, self._page_size,
+        )
+
+    def release(self) -> None:
+        """Drop the GC pin (idempotent). Reads remain possible afterwards but
+        are no longer protected from a concurrent :meth:`Cluster.gc`."""
+        with self._pin_lock:
+            if not self._pinned:
+                return
+            self._pinned = False
+        self.handle.session.cluster.unpin_version(self.handle.blob_id, self.version)
+
+    def __enter__(self) -> "Snapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class VersionWatch:
+    """Ordered publish subscription for one blob.
+
+    :meth:`next` blocks until a version newer than the last delivered one is
+    published and returns it; versions are delivered densely and strictly in
+    order even when many writers publish concurrently (the consumer may lag —
+    publications are never skipped, except abandoned holes, which were never
+    readable). Iterating the watch yields versions forever."""
+
+    def __init__(self, vm: VersionManager, blob_id: int, start_version: int) -> None:
+        self._vm = vm
+        self.blob_id = blob_id
+        self.last_delivered = start_version
+
+    def next(self, timeout: Optional[float] = None) -> Optional[int]:
+        """The next published version after ``last_delivered``, or ``None``
+        on timeout. Abandoned (never-readable) versions are skipped."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            target = self.last_delivered + 1
+            remaining: Optional[float] = None
+            if deadline is not None:
+                remaining = max(0.0, deadline - time.monotonic())
+            if not self._vm.wait_published(self.blob_id, target, remaining):
+                return None
+            self.last_delivered = target
+            if not self._vm.is_aborted(self.blob_id, target):
+                return target
+
+    def drain(self) -> List[int]:
+        """Every already-published undelivered version, without blocking."""
+        out: List[int] = []
+        while True:
+            v = self.next(timeout=0)
+            if v is None:
+                return out
+            out.append(v)
+
+    def __iter__(self) -> Iterator[int]:
+        while True:
+            v = self.next()
+            assert v is not None  # no timeout -> next() only returns versions
+            yield v

@@ -19,7 +19,7 @@ import numpy as np
 from repro.core.segment_tree import traverse
 
 if TYPE_CHECKING:
-    from repro.core.blob import BlobStore
+    from repro.core.cluster import Cluster
 
 #: Sentinel for pages of the implicit all-zero version.
 ZERO_PAGE = -1
@@ -42,15 +42,18 @@ class FlatView:
 
 
 def flatten(
-    store: "BlobStore", blob_id: int, version: int, first_page: int, n_pages: int
+    cluster: "Cluster", blob_id: int, version: int, first_page: int, n_pages: int
 ) -> FlatView:
-    total_pages, _ = store.version_manager.blob_info(blob_id)
-    if version > store.version_manager.latest_published(blob_id):
+    """Resolve ``n_pages`` of one published version to (provider, key) pairs.
+    ``cluster`` is the shared plane (anything exposing ``version_manager``
+    and ``metadata`` works, including the deprecated ``BlobStore``)."""
+    total_pages, _ = cluster.version_manager.blob_info(blob_id)
+    if version > cluster.version_manager.latest_published(blob_id):
         raise ValueError(f"version {version} not yet published")
     provider_ids = np.full(n_pages, ZERO_PAGE, dtype=np.int32)
     page_keys = np.full(n_pages, ZERO_PAGE, dtype=np.int32)
     for page_index, leaf in traverse(
-        store.metadata.get_node, blob_id, version, total_pages, first_page, n_pages
+        cluster.metadata.get_node, blob_id, version, total_pages, first_page, n_pages
     ):
         if leaf is not None:
             pid, key = leaf.page  # type: ignore[misc]

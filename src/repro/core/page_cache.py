@@ -88,10 +88,15 @@ class PageCache:
         self.evictions = 0
 
     # -- bulk lookup (the readv path) ------------------------------------------
-    def plan(self, keys: Sequence[CacheKey]) -> FetchPlan:
+    def plan(self, keys: Sequence[CacheKey], record: bool = True) -> FetchPlan:
         """Classify ``keys`` in one lock pass. The caller MUST eventually
         :meth:`fulfill` or :meth:`abort` every key in ``plan.owned`` — even on
-        error paths — or concurrent waiters block forever."""
+        error paths — or concurrent waiters block forever.
+
+        ``record=False`` skips the hit/miss stats recording — a session
+        composing this cache into a multi-tier stack attributes hits and
+        misses itself (per-session AND cluster-aggregate), so the cache must
+        not double-count them here."""
         hits: Dict[CacheKey, np.ndarray] = {}
         owned: List[CacheKey] = []
         owned_set: set = set()
@@ -115,7 +120,8 @@ class PageCache:
                     self._inflight[key] = _Flight()
                     owned.append(key)
                     owned_set.add(key)
-        self.stats.record_cache(hits=len(hits), misses=len(owned) + len(waits))
+        if record:
+            self.stats.record_cache(hits=len(hits), misses=len(owned) + len(waits))
         return FetchPlan(hits=hits, owned=owned, waits=waits)
 
     def fulfill(self, key: CacheKey, page: np.ndarray, charge: Optional[int] = None) -> None:
@@ -149,6 +155,19 @@ class PageCache:
             raise flight.error
         assert flight.page is not None
         return flight.page
+
+    def get_many(self, keys: Sequence[CacheKey]) -> Dict[CacheKey, np.ndarray]:
+        """Bulk hit-only lookup in ONE lock pass (no single-flight, no stats):
+        the private-tier probe of a session's multi-tier read path — misses
+        simply fall through to the shared tier."""
+        hits: Dict[CacheKey, np.ndarray] = {}
+        with self._lock:
+            for key in keys:
+                entry = self._lru.get(key)
+                if entry is not None:
+                    self._lru.move_to_end(key)
+                    hits[key] = entry[0]
+        return hits
 
     # -- simple single-page API (tests, boundary merges) -----------------------
     def get(self, key: CacheKey) -> Optional[np.ndarray]:
@@ -209,11 +228,22 @@ class PageCache:
         with self._lock:
             return sorted({k[1] for k in self._lru if k[0] == blob_id})
 
-    def drop_versions(self, blob_id: int, keep: set) -> int:
+    def drop_versions(
+        self, blob_id: int, keep: set, max_version: Optional[int] = None
+    ) -> int:
         """GC coherence hook: purge cached pages of ``blob_id`` whose version
-        is not in ``keep``. Returns the number of pages dropped."""
+        is not in ``keep``. ``max_version`` (the publish frontier at GC time)
+        protects versions above it — in-flight write-through entries whose
+        backing pages GC never touches. Returns the number of pages
+        dropped."""
         with self._lock:
-            doomed = [k for k in self._lru if k[0] == blob_id and k[1] not in keep]
+            doomed = [
+                k
+                for k in self._lru
+                if k[0] == blob_id
+                and k[1] not in keep
+                and (max_version is None or k[1] <= max_version)
+            ]
             for key in doomed:
                 self._used_bytes -= self._lru.pop(key)[1]
             return len(doomed)

@@ -6,7 +6,7 @@ windows) still funnels all fetches to whichever providers happen to hold the
 hot pages: aggregate read bandwidth collapses to a handful of providers'
 service capacity. BlobSeer's answer, reproduced here, is to watch the
 per-provider read-traffic skew and *promote* hot pages onto extra providers,
-so the replica-spreading read path (:meth:`BlobStore._fetch_pages`) can fan
+so the replica-spreading read path (``Session._fetch_pages``) can fan
 hot traffic out across the cluster; promotions are demoted (the extra copies
 dropped) when GC collects the version or when callers demote explicitly.
 

@@ -271,6 +271,13 @@ class VersionManager:
         with self._lock:
             return version <= self._blobs[blob_id].published
 
+    def is_aborted(self, blob_id: int, version: int) -> bool:
+        """True if ``version`` was withdrawn by a failed writer (publication
+        skipped over it; it was never readable). Version-watch subscriptions
+        use this to step over holes without delivering them."""
+        with self._lock:
+            return version in self._blobs[blob_id].aborted
+
     def wait_published(self, blob_id: int, version: int, timeout: Optional[float] = None) -> bool:
         """Block until ``version`` publishes (liveness helper for tests)."""
         with self._published_cv:

@@ -20,21 +20,21 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.core.blob import BlobStore
+from repro.core.cluster import BlobHandle, Session
 
 
 def write_token_corpus(
-    store: BlobStore, tokens: np.ndarray, page_size: int = 1 << 16
-) -> int:
-    """Store an int32 token array as a blob; returns blob_id."""
+    session: Session, tokens: np.ndarray, page_size: int = 1 << 16
+) -> BlobHandle:
+    """Store an int32 token array as a blob; returns its handle."""
     raw = np.ascontiguousarray(tokens.astype(np.int32)).view(np.uint8)
     size = -(-raw.size // page_size) * page_size
     size = 1 << (size - 1).bit_length()
-    blob_id = store.alloc(size, page_size)
+    handle = session.create(size, page_size)
     padded = np.zeros(size, np.uint8)
     padded[: raw.size] = raw
-    store.write(blob_id, padded, 0)
-    return blob_id
+    handle.write(padded, 0)
+    return handle
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,13 +53,14 @@ class TokenPipeline:
     that no other rank touches; restart at step ``s`` reproduces the batch
     exactly (checkpoint-consistent data order)."""
 
-    def __init__(self, store: BlobStore, blob_id: int, n_tokens: int,
+    def __init__(self, handle: BlobHandle, n_tokens: int,
                  cfg: PipelineConfig, version: Optional[int] = None) -> None:
-        self.store = store
-        self.blob_id = blob_id
+        self.handle = handle
         self.cfg = cfg
         self.n_tokens = n_tokens
-        self.version = version or store.version_manager.latest_published(blob_id)
+        self.version = (
+            version if version is not None else handle.latest_published()
+        )
         self._pool = ThreadPoolExecutor(max_workers=4)
         self._q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch)
         self._stop = threading.Event()
@@ -78,7 +79,7 @@ class TokenPipeline:
         seg = self._segment_for(step, row)
         off = seg * (cfg.seq_len + 1) * 4
         fut = self._pool.submit(
-            self.store.read, self.blob_id, self.version, off, (cfg.seq_len + 1) * 4
+            self.handle.read, off, (cfg.seq_len + 1) * 4, self.version
         )
         try:
             res = fut.result(timeout=cfg.fetch_timeout_s)
@@ -86,7 +87,7 @@ class TokenPipeline:
             # straggler mitigation: redundant re-fetch (replicas / other
             # providers); first to complete wins
             fut2 = self._pool.submit(
-                self.store.read, self.blob_id, self.version, off, (cfg.seq_len + 1) * 4
+                self.handle.read, off, (cfg.seq_len + 1) * 4, self.version
             )
             res = fut2.result()
         return np.frombuffer(res.data.tobytes(), np.int32)
@@ -110,5 +111,5 @@ class TokenPipeline:
     def refresh_version(self) -> int:
         """Pick up the latest published corpus version (online refresh while a
         writer appends — the paper's read/write concurrency)."""
-        self.version = self.store.version_manager.latest_published(self.blob_id)
+        self.version = self.handle.latest_published()
         return self.version

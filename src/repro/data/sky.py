@@ -19,7 +19,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.blob import BlobStore
+from repro.core.cluster import BlobHandle, Session
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,15 +49,17 @@ class Supernova:
 
 
 class SkySimulator:
-    """Generates epochs of the sky into a BlobStore."""
+    """Generates epochs of the sky into the blob store through one writer
+    :class:`Session` (the telescope client)."""
 
-    def __init__(self, store: BlobStore, layout: SkyLayout = SkyLayout(), seed: int = 0,
+    def __init__(self, session: Session, layout: SkyLayout = SkyLayout(), seed: int = 0,
                  sn_rate: float = 0.05) -> None:
-        self.store = store
+        self.session = session
         self.layout = layout
         self.rng = np.random.default_rng(seed)
         self.sn_rate = sn_rate
-        self.blob_id = store.alloc(layout.blob_bytes, layout.page_size)
+        self.handle: BlobHandle = session.create(layout.blob_bytes, layout.page_size)
+        self.blob_id = self.handle.blob_id
         # static star field per region
         self._stars: List[np.ndarray] = [
             self._star_field() for _ in range(layout.n_regions)
@@ -90,11 +92,7 @@ class SkySimulator:
         noise = self.rng.normal(0, 1.0, img.shape).astype(np.float32)
         return img + noise
 
-    def observe_epoch(self, concurrent: bool = True) -> int:
-        """Image every region and WRITE the patches; returns the published
-        version of this epoch. Telescopes (threads) write concurrently."""
-        self.epoch += 1
-        # maybe a new supernova ignites
+    def _maybe_ignite(self) -> None:
         if self.rng.random() < self.sn_rate * self.layout.n_regions / 8:
             px = self.layout.region_px
             self.supernovae.append(
@@ -107,12 +105,38 @@ class SkySimulator:
                 )
             )
 
+    def _region_patch(self, r: int) -> np.ndarray:
+        img = self.region_image(r, self.epoch)
+        buf = np.zeros(self.layout.region_bytes, np.uint8)
+        raw = img.tobytes()
+        buf[: len(raw)] = np.frombuffer(raw, np.uint8)
+        return buf
+
+    def observe_epoch_stream(self) -> int:
+        """Stream one epoch's region patches through the session's bounded
+        ``write_async`` window (overlapped write pipelines, backpressure once
+        the window fills) and join it; returns the epoch's published version.
+        This is the telescope as the paper means it: a producer that never
+        stops imaging to wait for the previous frame's metadata round-trip."""
+        self.epoch += 1
+        self._maybe_ignite()
+        for r in range(self.layout.n_regions):
+            self.handle.write_async(self._region_patch(r), r * self.layout.region_bytes)
+        self.session.flush()
+        return self.handle.latest_published()
+
+    def observe_epoch(self, concurrent: bool = True) -> int:
+        """Image every region and WRITE the patches; returns the published
+        version of this epoch. Telescopes (threads) write concurrently."""
+        self.epoch += 1
+        self._maybe_ignite()
+
         def write_region(r: int) -> None:
             img = self.region_image(r, self.epoch)
             buf = np.zeros(self.layout.region_bytes, np.uint8)
             raw = img.tobytes()
             buf[: len(raw)] = np.frombuffer(raw, np.uint8)
-            self.store.write(self.blob_id, buf, r * self.layout.region_bytes)
+            self.handle.write(buf, r * self.layout.region_bytes)
 
         if concurrent:
             threads = [
@@ -126,12 +150,12 @@ class SkySimulator:
         else:
             for r in range(self.layout.n_regions):
                 write_region(r)
-        return self.store.version_manager.latest_published(self.blob_id)
+        return self.handle.latest_published()
 
     def read_region(self, region: int, version: Optional[int] = None) -> np.ndarray:
         px = self.layout.region_px
-        res = self.store.read(
-            self.blob_id, version, region * self.layout.region_bytes, px * px * 4
+        res = self.handle.read(
+            region * self.layout.region_bytes, px * px * 4, version=version
         )
         return np.frombuffer(res.data.tobytes(), np.float32).reshape(px, px)
 

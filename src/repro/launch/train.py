@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.blob import BlobStore
+from repro.core.cluster import Cluster, Session
 from repro.data.pipeline import PipelineConfig, TokenPipeline, write_token_corpus
 from repro.launch.mesh import make_axis_info, make_mesh_for_devices
 from repro.models.lm import build_model
@@ -60,7 +60,7 @@ def train(
     restore: bool = False,
     seed: int = 0,
     lr: float = 3e-4,
-    store: Optional[BlobStore] = None,
+    session: Optional[Session] = None,
     fail_at_step: Optional[int] = None,  # fault-injection hook for tests
 ):
     cfg = get_config(arch)
@@ -88,7 +88,9 @@ def train(
         jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     # ---- data: tokenized corpus in the blob store ----
-    store = store or BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = session or Cluster(
+        n_data_providers=4, n_metadata_providers=4
+    ).session()
     rng = np.random.default_rng(seed)
     n_tokens = max(batch * (seq + 1) * 64, 1 << 16)
     # learnable synthetic corpus: noisy affine bigram process (a uniform
@@ -100,14 +102,14 @@ def train(
     rand_toks = rng.integers(0, cfg.vocab_size, n_tokens)
     for i in range(1, n_tokens):
         corpus[i] = rand_toks[i] if noise[i] else nxt[corpus[i - 1]]
-    blob_id = write_token_corpus(store, corpus)
+    corpus_handle = write_token_corpus(session, corpus)
     pipe = TokenPipeline(
-        store, blob_id, n_tokens,
+        corpus_handle, n_tokens,
         PipelineConfig(batch_per_rank=batch, seq_len=seq, n_ranks=1, rank=0, seed=seed),
     )
 
     # ---- checkpointing ----
-    ckpt = BlobCheckpointer(store, {"params": params, "opt": opt_state}, page_size=1 << 16)
+    ckpt = BlobCheckpointer(session, {"params": params, "opt": opt_state}, page_size=1 << 16)
     start_step = 0
     if restore and ckpt.checkpoints:
         state = ckpt.restore()
@@ -137,7 +139,7 @@ def train(
         "params": params,
         "opt_state": opt_state,
         "checkpointer": ckpt,
-        "store": store,
+        "session": session,
         "pipeline": pipe,
         "final_step": steps,
     }

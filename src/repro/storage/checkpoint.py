@@ -23,7 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.blob import BlobStore
+from repro.core.cluster import Session
 
 
 @dataclasses.dataclass
@@ -51,12 +51,12 @@ def _leaf_paths(tree) -> List[Tuple[str, Any]]:
 class BlobCheckpointer:
     def __init__(
         self,
-        store: BlobStore,
+        session: Session,
         template: Any,
         page_size: int = 1 << 20,
         keep_last: int = 3,
     ) -> None:
-        self.store = store
+        self.session = session
         self.page_size = page_size
         self.keep_last = keep_last
         self._lock = threading.Lock()
@@ -71,7 +71,8 @@ class BlobCheckpointer:
         total = max(off, page_size)
         # blob sizes are powers of two (paper §II)
         self.blob_bytes = 1 << (total - 1).bit_length()
-        self.blob_id = store.alloc(self.blob_bytes, page_size)
+        self.handle = session.create(self.blob_bytes, page_size)
+        self.blob_id = self.handle.blob_id
         self.n_pages = self.blob_bytes // page_size
         self._page_hash: Dict[int, bytes] = {}
         self.checkpoints: List[CheckpointRecord] = []
@@ -122,10 +123,10 @@ class BlobCheckpointer:
                     run_chunks.append(chunk)
                 flush_run()
 
-            version = self.store.version_manager.latest_published(self.blob_id)
+            version = self.handle.latest_published()
             for page_idx, data in dirty_runs:
                 buf = np.frombuffer(data, dtype=np.uint8)
-                version = self.store.write(self.blob_id, buf, page_idx * ps)
+                version = self.handle.write(buf, page_idx * ps)
 
             rec = CheckpointRecord(step, version, dirty, total_pages_touched)
             self.checkpoints.append(rec)
@@ -156,7 +157,7 @@ class BlobCheckpointer:
                 rec = next(c for c in self.checkpoints if c.step == step)
         leaves = []
         for info in self.layout:
-            res = self.store.read(self.blob_id, rec.version, info.offset, info.size)
+            res = self.handle.read(info.offset, info.size, version=rec.version)
             arr = np.frombuffer(res.data.tobytes(), dtype=info.dtype).reshape(info.shape)
             leaves.append(arr)
         state = jax.tree.unflatten(self._treedef, leaves)
@@ -169,7 +170,7 @@ class BlobCheckpointer:
         if len(self.checkpoints) <= self.keep_last:
             return
         keep = self.checkpoints[-self.keep_last :]
-        self.store.gc(self.blob_id, [c.version for c in keep])
+        self.session.cluster.gc(self.blob_id, [c.version for c in keep])
         self.checkpoints = keep
 
     def manifest(self) -> str:

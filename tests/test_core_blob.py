@@ -1,11 +1,12 @@
-"""Unit + property tests for the faithful blob-store reproduction."""
+"""Unit + property tests for the faithful blob-store reproduction, driven
+through the layered Cluster / Session / BlobHandle API."""
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    BlobStore,
+    Cluster,
     ZERO_VERSION,
     compute_border_links,
     count_write_nodes,
@@ -14,131 +15,130 @@ from repro.core import (
 PAGE = 64  # tiny pages for tests
 
 
-def make_store(**kw):
+def make_cluster(**kw):
     kw.setdefault("n_data_providers", 4)
     kw.setdefault("n_metadata_providers", 4)
-    return BlobStore(**kw)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw)
 
 
 def test_alloc_read_zero_version():
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
-    res = store.read(blob, None, 0, 16 * PAGE)
+    handle = make_cluster().session().create(16 * PAGE, PAGE)
+    res = handle.read(0, 16 * PAGE)
     assert res.latest_published == ZERO_VERSION
     assert not res.data.any()  # version 0 is the all-zero string (paper §II)
 
 
 def test_write_then_read_roundtrip():
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
+    handle = make_cluster().session().create(16 * PAGE, PAGE)
     payload = np.arange(4 * PAGE, dtype=np.uint8)
-    v = store.write(blob, payload, 2 * PAGE)
+    v = handle.write(payload, 2 * PAGE)
     assert v == 1
-    res = store.read(blob, v, 2 * PAGE, 4 * PAGE)
+    res = handle.read(2 * PAGE, 4 * PAGE, version=v)
     np.testing.assert_array_equal(res.data, payload)
     # untouched pages still zero
-    assert not store.read(blob, v, 0, 2 * PAGE).data.any()
-    assert not store.read(blob, v, 6 * PAGE, 10 * PAGE).data.any()
+    assert not handle.read(0, 2 * PAGE, version=v).data.any()
+    assert not handle.read(6 * PAGE, 10 * PAGE, version=v).data.any()
 
 
 def test_versioning_snapshots_stay_readable():
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
+    handle = make_cluster().session().create(8 * PAGE, PAGE)
     a = np.full(2 * PAGE, 7, dtype=np.uint8)
     b = np.full(2 * PAGE, 9, dtype=np.uint8)
-    v1 = store.write(blob, a, 0)
-    v2 = store.write(blob, b, PAGE)  # overlapping patch
+    v1 = handle.write(a, 0)
+    v2 = handle.write(b, PAGE)  # overlapping patch
     assert (v1, v2) == (1, 2)
     # v1 unchanged by the later overlapping write (COW)
-    np.testing.assert_array_equal(store.read(blob, v1, 0, 2 * PAGE).data, a)
+    np.testing.assert_array_equal(handle.read(0, 2 * PAGE, version=v1).data, a)
     # v2 = v1 patched by b at offset PAGE
     expect = np.zeros(8 * PAGE, dtype=np.uint8)
     expect[: 2 * PAGE] = a
     expect[PAGE : 3 * PAGE] = b
-    np.testing.assert_array_equal(store.read(blob, v2, 0, 8 * PAGE).data, expect[: 8 * PAGE])
+    np.testing.assert_array_equal(
+        handle.read(0, 8 * PAGE, version=v2).data, expect[: 8 * PAGE]
+    )
 
 
 def test_read_unpublished_version_fails():
-    store = make_store()
-    blob = store.alloc(4 * PAGE, PAGE)
+    handle = make_cluster().session().create(4 * PAGE, PAGE)
     with pytest.raises(ValueError, match="not yet published"):
-        store.read(blob, 1, 0, PAGE)
+        handle.read(0, PAGE, version=1)
 
 
 def test_unaligned_write_rejected():
-    store = make_store()
-    blob = store.alloc(4 * PAGE, PAGE)
+    handle = make_cluster().session().create(4 * PAGE, PAGE)
     with pytest.raises(ValueError, match="page-aligned"):
-        store.write(blob, np.zeros(PAGE, np.uint8), 3)
+        handle.write(np.zeros(PAGE, np.uint8), 3)
 
 
 def test_metadata_sharing_between_versions():
     """COW weaving shares all unmodified subtrees (paper §III.C)."""
-    store = make_store()
-    blob = store.alloc(1024 * PAGE, PAGE)
-    store.write(blob, np.ones(1024 * PAGE, np.uint8), 0)
-    n_after_full = store.metadata.total_nodes()
-    store.write(blob, np.ones(PAGE, np.uint8), 512 * PAGE)
-    n_after_patch = store.metadata.total_nodes()
+    cluster = make_cluster()
+    handle = cluster.session().create(1024 * PAGE, PAGE)
+    handle.write(np.ones(1024 * PAGE, np.uint8), 0)
+    n_after_full = cluster.metadata.total_nodes()
+    handle.write(np.ones(PAGE, np.uint8), 512 * PAGE)
+    n_after_patch = cluster.metadata.total_nodes()
     # one-page patch creates exactly the root-to-leaf path: log2(1024)+1 nodes
     assert n_after_patch - n_after_full == 11
     assert n_after_patch - n_after_full == count_write_nodes(1024, 512, 1)
 
 
 def test_page_replication_survives_provider_failure():
-    store = make_store(n_data_providers=4, page_replication=2)
-    blob = store.alloc(8 * PAGE, PAGE)
+    cluster = make_cluster(n_data_providers=4, page_replication=2)
+    handle = cluster.session().create(8 * PAGE, PAGE)
     payload = np.arange(8 * PAGE, dtype=np.uint8)
-    v = store.write(blob, payload, 0)
+    v = handle.write(payload, 0)
     # kill the primary of some page: every page must still be readable
-    store.provider_manager.fail_provider(0)
-    np.testing.assert_array_equal(store.read(blob, v, 0, 8 * PAGE).data, payload)
+    cluster.provider_manager.fail_provider(0)
+    np.testing.assert_array_equal(handle.read(0, 8 * PAGE, version=v).data, payload)
 
 
 def test_metadata_replication_survives_shard_failure():
-    store = make_store(n_metadata_providers=4, metadata_replication=2)
-    blob = store.alloc(8 * PAGE, PAGE)
+    cluster = make_cluster(n_metadata_providers=4, metadata_replication=2)
+    handle = cluster.session().create(8 * PAGE, PAGE)
     payload = np.arange(8 * PAGE, dtype=np.uint8)
-    v = store.write(blob, payload, 0)
-    store.metadata.fail_shard(1)
-    np.testing.assert_array_equal(store.read(blob, v, 0, 8 * PAGE).data, payload)
+    v = handle.write(payload, 0)
+    cluster.metadata.fail_shard(1)
+    np.testing.assert_array_equal(handle.read(0, 8 * PAGE, version=v).data, payload)
 
 
 def test_gc_keeps_reachable_shared_pages():
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
+    cluster = make_cluster()
+    handle = cluster.session().create(16 * PAGE, PAGE)
     base = np.ones(16 * PAGE, np.uint8)
-    store.write(blob, base, 0)  # v1
+    handle.write(base, 0)  # v1
     patch = np.full(PAGE, 5, np.uint8)
-    store.write(blob, patch, 4 * PAGE)  # v2 shares 15 pages with v1
-    nodes_freed, pages_freed = store.gc(blob, keep_versions=[2])
+    handle.write(patch, 4 * PAGE)  # v2 shares 15 pages with v1
+    nodes_freed, pages_freed = cluster.gc(handle.blob_id, keep_versions=[2])
     assert pages_freed == 1  # only v1's overwritten page dies
     assert nodes_freed > 0  # v1's root path dies
     expect = base.copy()
     expect[4 * PAGE : 5 * PAGE] = patch
-    np.testing.assert_array_equal(store.read(blob, 2, 0, 16 * PAGE).data, expect)
+    np.testing.assert_array_equal(handle.read(0, 16 * PAGE, version=2).data, expect)
 
 
 def test_elastic_provider_join():
-    store = make_store(n_data_providers=2)
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, np.ones(4 * PAGE, np.uint8), 0)
-    new_pid = store.add_data_provider()
-    store.write(blob, np.ones(4 * PAGE, np.uint8), 4 * PAGE)
+    cluster = make_cluster(n_data_providers=2)
+    handle = cluster.session().create(8 * PAGE, PAGE)
+    handle.write(np.ones(4 * PAGE, np.uint8), 0)
+    new_pid = cluster.add_data_provider()
+    handle.write(np.ones(4 * PAGE, np.uint8), 4 * PAGE)
     # the new provider picked up load (least-loaded placement)
-    assert store.provider_manager.get_provider(new_pid).n_pages > 0
+    assert cluster.provider_manager.get_provider(new_pid).n_pages > 0
 
 
 def test_version_manager_recovery_with_orphans():
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, np.ones(PAGE, np.uint8), 0)  # v1 complete
+    cluster = make_cluster()
+    handle = cluster.session().create(8 * PAGE, PAGE)
+    blob = handle.blob_id
+    handle.write(np.ones(PAGE, np.uint8), 0)  # v1 complete
     # simulate a writer that got v2 assigned and crashed before reporting
-    store.version_manager.assign_version(blob, 2, 1)
-    store.write(blob, np.ones(PAGE, np.uint8), 4 * PAGE)  # v3 complete
+    cluster.version_manager.assign_version(blob, 2, 1)
+    handle.write(np.ones(PAGE, np.uint8), 4 * PAGE)  # v3 complete
     from repro.core import VersionManager
 
-    vm2, orphans = VersionManager.recover(store.version_manager.journal)
+    vm2, orphans = VersionManager.recover(cluster.version_manager.journal)
     assert vm2.latest_published(blob) == 1  # publish stops before the orphan
     assert orphans[blob] == [2]
     # v3 completed: it publishes as soon as the orphan is resolved
@@ -168,17 +168,16 @@ def test_serializability_reads_equal_prefix_of_patches(seq):
     """Paper §II: READ of version v == successive application of the first v
     patches to the all-zero string — for EVERY published version."""
     n_pages, writes = seq
-    store = make_store()
-    blob = store.alloc(n_pages * PAGE, PAGE)
+    handle = make_cluster().session().create(n_pages * PAGE, PAGE)
     oracle = np.zeros(n_pages * PAGE, dtype=np.uint8)
     snapshots = [oracle.copy()]
     for off, size, fill in writes:
         buf = np.full(size * PAGE, fill, dtype=np.uint8)
-        store.write(blob, buf, off * PAGE)
+        handle.write(buf, off * PAGE)
         oracle[off * PAGE : (off + size) * PAGE] = buf
         snapshots.append(oracle.copy())
     for v, snap in enumerate(snapshots):
-        got = store.read(blob, v, 0, n_pages * PAGE).data
+        got = handle.read(0, n_pages * PAGE, version=v).data
         np.testing.assert_array_equal(got, snap)
 
 
@@ -207,16 +206,17 @@ def test_border_links_point_to_latest_intersecting_version(seq):
 
 
 def test_unaligned_write_read_modify_write():
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
+    handle = make_cluster().session().create(16 * PAGE, PAGE)
     base = np.arange(16 * PAGE, dtype=np.uint8)
-    store.write(blob, base, 0)
+    handle.write(base, 0)
     patch = np.full(PAGE, 200, np.uint8)
     off = 3 * PAGE + 17  # crosses two pages, unaligned both sides
-    v = store.write_unaligned(blob, patch, off)
+    v = handle.write_unaligned(patch, off)
     expect = base.copy()
     expect[off : off + PAGE] = patch
-    got = store.read(blob, v, 0, 16 * PAGE).data
+    got = handle.read(0, 16 * PAGE, version=v).data
     np.testing.assert_array_equal(got, expect)
     # the pre-patch version is untouched (COW)
-    np.testing.assert_array_equal(store.read(blob, v - 1, 0, 16 * PAGE).data, base)
+    np.testing.assert_array_equal(
+        handle.read(0, 16 * PAGE, version=v - 1).data, base
+    )

@@ -10,21 +10,24 @@ import threading
 
 import numpy as np
 
-from repro.core import BlobStore
+from repro.core import Cluster
 
 PAGE = 64
 
 
-def make_store():
-    return BlobStore(n_data_providers=8, n_metadata_providers=8, max_workers=16)
+def make_cluster():
+    return Cluster(
+        n_data_providers=8, n_metadata_providers=8, max_workers=16,
+        shared_cache_bytes=0,
+    )
 
 
 def test_concurrent_disjoint_writers_all_publish():
     """W/W concurrency (paper §IV.C): concurrent writers to disjoint segments
     all succeed, versions are dense, and the final view merges all patches."""
-    store = make_store()
+    cluster = make_cluster()
     n_writers = 8
-    blob = store.alloc(n_writers * 4 * PAGE, PAGE)
+    handle = cluster.session().create(n_writers * 4 * PAGE, PAGE)
     barrier = threading.Barrier(n_writers)
     errors = []
 
@@ -32,7 +35,7 @@ def test_concurrent_disjoint_writers_all_publish():
         try:
             barrier.wait()
             buf = np.full(4 * PAGE, i + 1, dtype=np.uint8)
-            store.write(blob, buf, i * 4 * PAGE)
+            handle.write(buf, i * 4 * PAGE)
         except Exception as e:  # pragma: no cover
             errors.append(e)
 
@@ -42,27 +45,29 @@ def test_concurrent_disjoint_writers_all_publish():
     for t in threads:
         t.join()
     assert not errors
-    assert store.version_manager.latest_published(blob) == n_writers  # liveness
-    final = store.read(blob, None, 0, n_writers * 4 * PAGE).data
+    assert handle.latest_published() == n_writers  # liveness
+    final = handle.read(0, n_writers * 4 * PAGE).data
     for i in range(n_writers):
         assert (final[i * 4 * PAGE : (i + 1) * 4 * PAGE] == i + 1).all()
 
 
 def test_concurrent_overlapping_writers_serialize():
     """Overlapping concurrent writes: every published version must equal the
-    prefix-application of patches in version order (global serializability)."""
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
+    prefix-application of patches in version order (global serializability).
+    Each writer runs its own Session — the paper's N-client topology."""
+    cluster = make_cluster()
+    blob = cluster.alloc(16 * PAGE, PAGE)
     n_writers = 8
     barrier = threading.Barrier(n_writers)
     log = {}
 
     def writer(i):
+        handle = cluster.session().open(blob)
         barrier.wait()
         fill = i + 1
         buf = np.full(8 * PAGE, fill, dtype=np.uint8)
         off = (i % 3) * 4 * PAGE  # overlapping ranges
-        v = store.write(blob, buf, off)
+        v = handle.write(buf, off)
         log[v] = (off, buf)
 
     threads = [threading.Thread(target=writer, args=(i,)) for i in range(n_writers)]
@@ -72,26 +77,28 @@ def test_concurrent_overlapping_writers_serialize():
         t.join()
 
     assert sorted(log) == list(range(1, n_writers + 1))
+    reader = cluster.session().open(blob)
     oracle = np.zeros(16 * PAGE, dtype=np.uint8)
     for v in range(1, n_writers + 1):
         off, buf = log[v]
         oracle[off : off + buf.size] = buf
-        got = store.read(blob, v, 0, 16 * PAGE).data
+        got = reader.read(0, 16 * PAGE, version=v).data
         np.testing.assert_array_equal(got, oracle, err_msg=f"version {v} diverged")
 
 
 def test_readers_concurrent_with_writer_see_consistent_snapshots():
     """R/W concurrency (paper §IV.B): readers never observe a torn write —
     each read of version v returns a uniform fill value."""
-    store = make_store()
-    blob = store.alloc(64 * PAGE, PAGE)
-    store.write(blob, np.full(64 * PAGE, 1, np.uint8), 0)
+    cluster = make_cluster()
+    handle = cluster.session().create(64 * PAGE, PAGE)
+    handle.write(np.full(64 * PAGE, 1, np.uint8), 0)
     stop = threading.Event()
     bad = []
 
     def reader():
+        mine = cluster.session().open(handle.blob_id)
         while not stop.is_set():
-            res = store.read(blob, None, 0, 64 * PAGE)
+            res = mine.read(0, 64 * PAGE)
             vals = np.unique(res.data)
             if len(vals) != 1:  # torn snapshot
                 bad.append(vals)
@@ -100,7 +107,7 @@ def test_readers_concurrent_with_writer_see_consistent_snapshots():
     for t in readers:
         t.start()
     for fill in range(2, 30):
-        store.write(blob, np.full(64 * PAGE, fill, np.uint8), 0)
+        handle.write(np.full(64 * PAGE, fill, np.uint8), 0)
     stop.set()
     for t in readers:
         t.join()
@@ -109,9 +116,9 @@ def test_readers_concurrent_with_writer_see_consistent_snapshots():
 
 def test_publish_order_blocks_until_prefix_completes():
     """In-order publication: v2's success does not publish until v1's does."""
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    vm = store.version_manager
+    cluster = make_cluster()
+    blob = cluster.alloc(8 * PAGE, PAGE)
+    vm = cluster.version_manager
     v1, _ = vm.assign_version(blob, 0, 1)
     v2, _ = vm.assign_version(blob, 4, 1)
     assert (v1, v2) == (1, 2)
@@ -124,9 +131,9 @@ def test_publish_order_blocks_until_prefix_completes():
 def test_border_precompute_sees_unpublished_concurrent_writes():
     """§IV.C: a writer's border links weave against the latest ASSIGNED
     version (even unpublished), not the latest published one."""
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    vm = store.version_manager
+    cluster = make_cluster()
+    blob = cluster.alloc(8 * PAGE, PAGE)
+    vm = cluster.version_manager
     vm.assign_version(blob, 0, 4)  # v1, in flight (left half)
     _, links = vm.assign_version(blob, 4, 4)  # v2 (right half)
     # v2's root border link (for the left child) must point at v1

@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     BalancerConfig,
-    BlobStore,
+    Cluster,
     DataProvider,
     IntervalIndex,
     NodeKey,
@@ -27,11 +27,17 @@ from repro.core import (
 PAGE = 64
 
 
-def make_store(**kw):
+def make_session(**kw):
+    session_kw = {
+        k: kw.pop(k)
+        for k in ("cache_bytes", "replica_spread", "sync_write", "max_inflight_writes")
+        if k in kw
+    }
+    session_kw.setdefault("cache_bytes", 0)
     kw.setdefault("n_data_providers", 8)
     kw.setdefault("n_metadata_providers", 4)
-    kw.setdefault("cache_bytes", 0)
-    return BlobStore(**kw)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw).session(**session_kw)
 
 
 # --------------------------- placement ---------------------------------------
@@ -145,43 +151,44 @@ def test_recover_replays_batch_assigned_journal():
     """Journal produced through writev's batch assignment must replay through
     VersionManager.recover exactly like the single-patch journal (regression
     for the thin-wrapper guarantee)."""
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.writev(
-        blob,
+    sess = make_session()
+    handle = sess.create(16 * PAGE, PAGE)
+    blob = handle.blob_id
+    handle.writev(
         [
             (0, np.full(2 * PAGE, 1, np.uint8)),
             (4 * PAGE, np.full(2 * PAGE, 2, np.uint8)),
             (2 * PAGE, np.full(4 * PAGE, 3, np.uint8)),
         ],
     )
-    journal = store.version_manager.journal
+    vm = sess.cluster.version_manager
+    journal = vm.journal
     assert [e.op for e in journal] == ["alloc"] + ["assign"] * 3 + ["complete"] * 3
     vm2, orphans = VersionManager.recover(journal)
     assert vm2.latest_published(blob) == 3
     assert orphans[blob] == []
     for v in (1, 2, 3):
-        assert vm2.interval_of(blob, v) == store.version_manager.interval_of(blob, v)
-    store.close()
+        assert vm2.interval_of(blob, v) == vm.interval_of(blob, v)
+    sess.cluster.close()
 
 
 def test_writev_takes_manager_lock_once_for_all_patches(monkeypatch):
-    store = make_store()
-    blob = store.alloc(16 * PAGE, PAGE)
+    sess = make_session()
+    handle = sess.create(16 * PAGE, PAGE)
     calls = []
-    orig = store.version_manager.assign_versions
+    vm = sess.cluster.version_manager
+    orig = vm.assign_versions
 
     def counting(blob_id, spans):
         calls.append(list(spans))
         return orig(blob_id, spans)
 
-    monkeypatch.setattr(store.version_manager, "assign_versions", counting)
-    store.writev(
-        blob,
+    monkeypatch.setattr(vm, "assign_versions", counting)
+    handle.writev(
         [(0, np.ones(PAGE, np.uint8)), (8 * PAGE, np.ones(2 * PAGE, np.uint8))],
     )
     assert calls == [[(0, 1), (8, 2)]]  # ONE batched call for both patches
-    store.close()
+    sess.cluster.close()
 
 
 # ------------------------- interval index + traversal -------------------------
@@ -227,21 +234,23 @@ def test_traverse_batch_equivalent_to_traverse(case):
     interval-indexed batch traversal returns exactly the union of what the
     reference single-range traversal yields per range."""
     total_pages, writes, ranges = case
-    store = make_store(n_data_providers=4)
-    blob = store.alloc(total_pages * PAGE, PAGE)
+    sess = make_session(n_data_providers=4)
+    handle = sess.create(total_pages * PAGE, PAGE)
+    blob = handle.blob_id
     for i, (off, size) in enumerate(writes):
-        store.write(blob, np.full(size * PAGE, (i % 250) + 1, np.uint8), off * PAGE)
-    version = store.version_manager.latest_published(blob)
+        handle.write(np.full(size * PAGE, (i % 250) + 1, np.uint8), off * PAGE)
+    version = handle.latest_published()
+    metadata = sess.cluster.metadata
 
     batch = traverse_batch(
-        store.metadata.get_nodes, blob, version, total_pages, ranges
+        metadata.get_nodes, blob, version, total_pages, ranges
     )
     expected = {}
     for off, size in ranges:
         if size == 0:
             continue
         for page, leaf in traverse(
-            store.metadata.get_node, blob, version, total_pages, off, size
+            metadata.get_node, blob, version, total_pages, off, size
         ):
             expected[page] = leaf
     assert set(batch) == set(expected)
@@ -251,7 +260,7 @@ def test_traverse_batch_equivalent_to_traverse(case):
         else:
             assert batch[page] is not None
             assert batch[page].key == expected[page].key
-    store.close()
+    sess.cluster.close()
 
 
 # ----------------------- replica fallback / promotion -------------------------
@@ -262,140 +271,148 @@ def test_readv_replica_fallback_when_provider_dies_mid_read():
     must be survived through replicas (the batch fails, per-page fallback
     succeeds). ``replica_spread=False`` pins fetches to the primary, so
     killing a leaf's primary deterministically exercises the fallback."""
-    store = make_store(n_data_providers=4, page_replication=2, replica_spread=False)
-    blob = store.alloc(8 * PAGE, PAGE)
+    sess = make_session(
+        n_data_providers=4, page_replication=2, replica_spread=False
+    )
+    cluster = sess.cluster
+    handle = sess.create(8 * PAGE, PAGE)
     payload = np.arange(8 * PAGE, dtype=np.uint8)
-    store.write(blob, payload, 0)
+    handle.write(payload, 0)
 
     real_traverse = traverse_batch
     killed = []
 
     def killing_get_nodes(keys):
-        got = store.metadata.get_nodes(keys)
+        got = cluster.metadata.get_nodes(keys)
         if not killed and any(k.size == 1 for k in got):
             # some leaves resolved: kill a primary before pages are fetched
             leaf = next(n for n in got.values() if n.is_leaf)
-            store.provider_manager.fail_provider(leaf.page[0])
+            cluster.provider_manager.fail_provider(leaf.page[0])
             killed.append(leaf.page[0])
         return got
 
-    import repro.core.blob as blob_mod
+    import repro.core.cluster as cluster_mod
 
-    orig = blob_mod.traverse_batch
-    blob_mod.traverse_batch = lambda get_nodes, *a: real_traverse(killing_get_nodes, *a)
+    orig = cluster_mod.traverse_batch
+    cluster_mod.traverse_batch = lambda get_nodes, *a: real_traverse(killing_get_nodes, *a)
     try:
-        outs = store.readv(blob, None, [(0, 8 * PAGE)])
+        outs = handle.readv([(0, 8 * PAGE)])
     finally:
-        blob_mod.traverse_batch = orig
+        cluster_mod.traverse_batch = orig
     assert killed, "test harness never killed a provider"
     np.testing.assert_array_equal(outs[0], payload)
-    store.close()
+    cluster.close()
 
 
-def hammer(store, blob, offset, size, n=200):
+def hammer(handle, offset, size, n=200):
     for _ in range(n):
-        store.read(blob, None, offset, size)
+        handle.read(offset, size)
 
 
 def test_hot_page_promotion_appears_in_all_page_refs_and_spreads_reads():
-    store = make_store(
+    sess = make_session(
         n_data_providers=8,
         balancer_config=BalancerConfig(
             hot_threshold=4, skew_ratio=1.2, check_interval=16
         ),
     )
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, np.ones(16 * PAGE, np.uint8), 0)
-    store.stats.reset()
-    hammer(store, blob, 0, PAGE)
-    bal = store.replica_balancer
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    blob = handle.blob_id
+    handle.write(np.ones(16 * PAGE, np.uint8), 0)
+    cluster.stats.reset()
+    hammer(handle, 0, PAGE)
+    bal = cluster.replica_balancer
     assert bal.promotions > 0
-    leaf = store.metadata.get_node(NodeKey(blob, 1, 0, 1))
+    leaf = cluster.metadata.get_node(NodeKey(blob, 1, 0, 1))
     assert len(leaf.all_page_refs()) == 1 + bal.promotions
     assert bal.promoted_refs(leaf.key) == leaf.replicas
     # reads actually spread: multiple providers served read bytes
-    served = {pid for pid, b in store.stats.read_bytes_snapshot().items() if b > 0}
+    served = {pid for pid, b in cluster.stats.read_bytes_snapshot().items() if b > 0}
     assert len(served) > 1
     # the promoted copies hold the same immutable bytes
     for pid, key in leaf.all_page_refs():
         np.testing.assert_array_equal(
-            store.provider_manager.get_provider(pid).get_page(key),
+            cluster.provider_manager.get_provider(pid).get_page(key),
             np.ones(PAGE, np.uint8),
         )
-    store.close()
+    cluster.close()
 
 
 def test_hot_page_demotion_restores_primary_only_and_frees_copies():
-    store = make_store(
+    sess = make_session(
         n_data_providers=8,
         balancer_config=BalancerConfig(
             hot_threshold=4, skew_ratio=1.2, check_interval=16
         ),
     )
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, np.ones(16 * PAGE, np.uint8), 0)
-    hammer(store, blob, 0, PAGE)
-    bal = store.replica_balancer
-    key = NodeKey(blob, 1, 0, 1)
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(np.ones(16 * PAGE, np.uint8), 0)
+    hammer(handle, 0, PAGE)
+    bal = cluster.replica_balancer
+    key = NodeKey(handle.blob_id, 1, 0, 1)
     promoted = bal.promoted_refs(key)
     assert promoted
     dropped = bal.demote(key)
     assert dropped == len(promoted)
-    leaf = store.metadata.get_node(key)
+    leaf = cluster.metadata.get_node(key)
     assert leaf.replicas == ()
     for pid, page_key in promoted:
-        assert not store.provider_manager.get_provider(pid).has_page(page_key)
+        assert not cluster.provider_manager.get_provider(pid).has_page(page_key)
     # the page is still readable from its primary
     np.testing.assert_array_equal(
-        store.read(blob, None, 0, PAGE).data, np.ones(PAGE, np.uint8)
+        handle.read(0, PAGE).data, np.ones(PAGE, np.uint8)
     )
-    store.close()
+    cluster.close()
 
 
 def test_promotion_survives_primary_failure_without_write_replication():
     """Adaptive replication gives fault tolerance the write path never paid
     for: page_replication=1, but a promoted hot page survives primary loss."""
-    store = make_store(
+    sess = make_session(
         n_data_providers=8,
         balancer_config=BalancerConfig(
             hot_threshold=4, skew_ratio=1.2, check_interval=16
         ),
     )
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, np.full(16 * PAGE, 7, np.uint8), 0)
-    hammer(store, blob, 0, PAGE)
-    leaf = store.metadata.get_node(NodeKey(blob, 1, 0, 1))
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(np.full(16 * PAGE, 7, np.uint8), 0)
+    hammer(handle, 0, PAGE)
+    leaf = cluster.metadata.get_node(NodeKey(handle.blob_id, 1, 0, 1))
     assert len(leaf.all_page_refs()) > 1
-    store.provider_manager.fail_provider(leaf.page[0])
+    cluster.provider_manager.fail_provider(leaf.page[0])
     np.testing.assert_array_equal(
-        store.read(blob, None, 0, PAGE).data, np.full(PAGE, 7, np.uint8)
+        handle.read(0, PAGE).data, np.full(PAGE, 7, np.uint8)
     )
-    store.close()
+    cluster.close()
 
 
 def test_gc_demotes_and_forgets_promoted_pages():
-    store = make_store(
+    sess = make_session(
         n_data_providers=8,
         balancer_config=BalancerConfig(
             hot_threshold=4, skew_ratio=1.2, check_interval=16
         ),
     )
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, np.ones(16 * PAGE, np.uint8), 0)  # v1
-    hammer(store, blob, 0, PAGE)
-    bal = store.replica_balancer
-    key = NodeKey(blob, 1, 0, 1)
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(np.ones(16 * PAGE, np.uint8), 0)  # v1
+    hammer(handle, 0, PAGE)
+    bal = cluster.replica_balancer
+    key = NodeKey(handle.blob_id, 1, 0, 1)
     n_promoted = len(bal.promoted_refs(key))
     assert n_promoted > 0
     promoted = bal.promoted_refs(key)
-    store.write(blob, np.full(16 * PAGE, 2, np.uint8), 0)  # v2 rewrites all
-    nodes_freed, pages_freed = store.gc(blob, keep_versions=[2])
+    handle.write(np.full(16 * PAGE, 2, np.uint8), 0)  # v2 rewrites all
+    nodes_freed, pages_freed = cluster.gc(handle.blob_id, keep_versions=[2])
     # v1's 16 pages die, including the promoted copies of the hot page
     assert pages_freed == 16 + n_promoted
     assert bal.promoted_refs(key) == ()
     for pid, page_key in promoted:
-        assert not store.provider_manager.get_provider(pid).has_page(page_key)
-    store.close()
+        assert not cluster.provider_manager.get_provider(pid).has_page(page_key)
+    cluster.close()
 
 
 def test_repromotion_after_demote_never_resurrects_dropped_refs():
@@ -403,69 +420,74 @@ def test_repromotion_after_demote_never_resurrects_dropped_refs():
     dropped replica refs back into the metadata DHT via the balancer's heat
     records — every ref published after re-promotion must point to a live
     page copy."""
-    store = make_store(
+    sess = make_session(
         n_data_providers=8,
         balancer_config=BalancerConfig(
             hot_threshold=4, skew_ratio=1.2, check_interval=16
         ),
     )
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, np.ones(16 * PAGE, np.uint8), 0)
-    key = NodeKey(blob, 1, 0, 1)
-    bal = store.replica_balancer
-    hammer(store, blob, 0, PAGE)
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(np.ones(16 * PAGE, np.uint8), 0)
+    key = NodeKey(handle.blob_id, 1, 0, 1)
+    bal = cluster.replica_balancer
+    hammer(handle, 0, PAGE)
     assert bal.promoted_refs(key)
     bal.demote(key)
-    hammer(store, blob, 0, PAGE)  # heat builds again: re-promotion allowed
-    leaf = store.metadata.get_node(key)
+    hammer(handle, 0, PAGE)  # heat builds again: re-promotion allowed
+    leaf = cluster.metadata.get_node(key)
     for pid, page_key in leaf.all_page_refs():
-        assert store.provider_manager.get_provider(pid).has_page(page_key), (
+        assert cluster.provider_manager.get_provider(pid).has_page(page_key), (
             f"leaf publishes dead ref ({pid}, {page_key})"
         )
-    store.close()
+    cluster.close()
 
 
 def test_promotion_skips_failed_target_providers():
     """Regression: a failed cold provider must not be picked as the promotion
     target (that would silently block promotion cluster-wide)."""
-    store = make_store(
+    sess = make_session(
         n_data_providers=8,
         balancer_config=BalancerConfig(
             hot_threshold=4, skew_ratio=1.2, check_interval=16
         ),
     )
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, np.ones(16 * PAGE, np.uint8), 0)
-    leaf = store.metadata.get_node(NodeKey(blob, 1, 0, 1))
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(np.ones(16 * PAGE, np.uint8), 0)
+    leaf = cluster.metadata.get_node(NodeKey(handle.blob_id, 1, 0, 1))
     # fail every provider except the hot page's primary and one target
     alive_target = next(
         p.provider_id
-        for p in store.provider_manager.providers()
+        for p in cluster.provider_manager.providers()
         if p.provider_id != leaf.page[0]
     )
-    for p in store.provider_manager.providers():
+    for p in cluster.provider_manager.providers():
         if p.provider_id not in (leaf.page[0], alive_target):
-            store.provider_manager.fail_provider(p.provider_id)
-    hammer(store, blob, 0, PAGE)
-    bal = store.replica_balancer
+            cluster.provider_manager.fail_provider(p.provider_id)
+    hammer(handle, 0, PAGE)
+    bal = cluster.replica_balancer
     assert bal.promotions >= 1
     assert all(pid == alive_target for pid, _ in bal.promoted_refs(leaf.key))
-    store.close()
+    cluster.close()
 
 
 def test_replica_spread_off_always_uses_primary():
-    store = make_store(
+    sess = make_session(
         n_data_providers=8, page_replication=2, replica_spread=False,
         hot_replicas=False,
     )
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, np.ones(8 * PAGE, np.uint8), 0)
-    store.stats.reset()
+    cluster = sess.cluster
+    handle = sess.create(8 * PAGE, PAGE)
+    handle.write(np.ones(8 * PAGE, np.uint8), 0)
+    cluster.stats.reset()
     for _ in range(20):
-        store.read(blob, None, 0, 8 * PAGE)
-    served = set(store.stats.read_bytes_snapshot())
+        handle.read(0, 8 * PAGE)
+    served = set(cluster.stats.read_bytes_snapshot())
     primaries = set()
     for p in range(8):
-        primaries.add(store.metadata.get_node(NodeKey(blob, 1, p, 1)).page[0])
+        primaries.add(
+            cluster.metadata.get_node(NodeKey(handle.blob_id, 1, p, 1)).page[0]
+        )
     assert served == primaries  # replicas never served
-    store.close()
+    cluster.close()

@@ -1,20 +1,31 @@
-"""Versioned page cache + batched readv/writev data plane tests."""
+"""Versioned page cache + batched readv/writev data plane tests.
+
+The session-level tests run clusters WITHOUT the shared tier so the private
+cache behaves as the standalone client cache of the original design;
+cross-session shared-tier behavior is covered by tests/test_sessions.py.
+"""
 
 import threading
 
 import numpy as np
 import pytest
 
-from repro.core import BlobStore, PageCache, ProviderFailed, TrafficStats
+from repro.core import Cluster, PageCache, ProviderFailed, TrafficStats
 from repro.core.provider import DataProvider
 
 PAGE = 64
 
 
-def make_store(**kw):
+def make_session(**kw):
+    session_kw = {
+        k: kw.pop(k)
+        for k in ("cache_bytes", "replica_spread", "sync_write", "max_inflight_writes")
+        if k in kw
+    }
     kw.setdefault("n_data_providers", 4)
     kw.setdefault("n_metadata_providers", 4)
-    return BlobStore(**kw)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw).session(**session_kw)
 
 
 def page(fill, nbytes=PAGE):
@@ -74,48 +85,63 @@ def test_stats_count_hits_and_misses():
         cache.fulfill(key, page(1))
     cache.plan([(0, 1, 0), (0, 1, 1), (0, 1, 2)])
     assert stats.cache_hits == 2 and stats.cache_misses == 3
+    # record=False leaves the accounting to the caller (tiered sessions)
+    cache.plan([(0, 1, 0)], record=False)
+    assert stats.cache_hits == 2 and stats.cache_misses == 3
+
+
+def test_get_many_bulk_hits_without_single_flight():
+    cache = PageCache(capacity_bytes=4 * PAGE)
+    cache.put((0, 1, 0), page(1))
+    cache.put((0, 1, 2), page(3))
+    got = cache.get_many([(0, 1, 0), (0, 1, 1), (0, 1, 2)])
+    assert set(got) == {(0, 1, 0), (0, 1, 2)}
+    # misses must NOT open in-flight entries (no leader obligation)
+    plan = cache.plan([(0, 1, 1)])
+    assert plan.owned == [(0, 1, 1)]
+    cache.fulfill((0, 1, 1), page(2))
 
 
 # --------------------------- unpublished versions ----------------------------
 
 
 def test_unpublished_versions_never_cached():
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, page(1, 8 * PAGE), 0)  # v1 published
+    sess = make_session()
+    handle = sess.create(8 * PAGE, PAGE)
+    handle.write(page(1, 8 * PAGE), 0)  # v1 published
     # simulate an in-flight writer: v2 assigned but never reported
-    store.version_manager.assign_version(blob, 0, 1)
+    sess.cluster.version_manager.assign_version(handle.blob_id, 0, 1)
     with pytest.raises(ValueError, match="not yet published"):
-        store.read(blob, 2, 0, PAGE)
-    store.read(blob, None, 0, 8 * PAGE)  # populates the cache with v1 pages
-    assert store.page_cache is not None
-    assert store.page_cache.cached_versions(blob) == [1]
-    store.close()
+        handle.read(0, PAGE, version=2)
+    handle.read(0, 8 * PAGE)  # populates the cache with v1 pages
+    assert sess.cache is not None
+    assert sess.cache.cached_versions(handle.blob_id) == [1]
+    sess.cluster.close()
 
 
 def test_gc_purges_cache_of_dropped_versions():
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, page(1, 8 * PAGE), 0)  # v1
-    store.write(blob, page(2, PAGE), 0)  # v2
-    store.read(blob, 1, 0, 8 * PAGE)
-    store.read(blob, 2, 0, 8 * PAGE)
-    assert store.page_cache.cached_versions(blob) == [1, 2]
-    store.gc(blob, keep_versions=[2])
-    assert store.page_cache.cached_versions(blob) == [2]
-    store.close()
+    sess = make_session()
+    handle = sess.create(8 * PAGE, PAGE)
+    handle.write(page(1, 8 * PAGE), 0)  # v1
+    handle.write(page(2, PAGE), 0)  # v2
+    handle.read(0, 8 * PAGE, version=1)
+    handle.read(0, 8 * PAGE, version=2)
+    assert sess.cache.cached_versions(handle.blob_id) == [1, 2]
+    sess.cluster.gc(handle.blob_id, keep_versions=[2])
+    assert sess.cache.cached_versions(handle.blob_id) == [2]
+    sess.cluster.close()
 
 
 # ------------------------------- single-flight -------------------------------
 
 
 def test_concurrent_cold_readers_one_fetch_per_page():
-    store = make_store(max_workers=32)
-    blob = store.alloc(16 * PAGE, PAGE)
+    sess = make_session(max_workers=32)
+    handle = sess.create(16 * PAGE, PAGE)
     payload = np.arange(16 * PAGE, dtype=np.uint8) % 251
-    store.write(blob, payload, 0)
+    handle.write(payload, 0)
     # drop the write-through entries: this test measures COLD readers
-    store.page_cache.clear()
+    sess.cache.clear()
 
     # count every page key fetched from any provider, and slow fetches down
     # so the reader threads genuinely overlap
@@ -138,7 +164,7 @@ def test_concurrent_cold_readers_one_fetch_per_page():
     def reader(i):
         try:
             barrier.wait()
-            results[i] = store.read(blob, 1, 0, 16 * PAGE).data
+            results[i] = handle.read(0, 16 * PAGE, version=1).data
         except Exception as e:  # pragma: no cover
             errors.append(e)
 
@@ -158,109 +184,113 @@ def test_concurrent_cold_readers_one_fetch_per_page():
     # single-flight: every page fetched exactly once despite 8 cold readers
     assert len(fetched_keys) == 16
     assert len(set(fetched_keys)) == 16
-    store.close()
+    sess.cluster.close()
 
 
 # --------------------------- readv / writev plane ----------------------------
 
 
 def test_readv_equals_looped_read():
-    store = make_store(cache_bytes=0)
-    blob = store.alloc(32 * PAGE, PAGE)
-    store.write(blob, np.arange(32 * PAGE, dtype=np.uint8) % 251, 0)
+    sess = make_session(cache_bytes=0)
+    handle = sess.create(32 * PAGE, PAGE)
+    handle.write(np.arange(32 * PAGE, dtype=np.uint8) % 251, 0)
     segs = [(0, 3 * PAGE), (PAGE + 5, 2 * PAGE), (17, 30), (30 * PAGE, 5 * PAGE)]
-    outs = store.readv(blob, None, segs)
+    outs = handle.readv(segs)
     for (off, sz), got in zip(segs, outs):
-        np.testing.assert_array_equal(got, store.read(blob, None, off, sz).data)
-    store.close()
+        np.testing.assert_array_equal(got, handle.read(off, sz).data)
+    sess.cluster.close()
 
 
 def test_readv_fewer_rpc_rounds_than_looped_reads():
     """Acceptance: N overlapping segments cost strictly fewer provider RPC
     rounds via readv than via N separate read calls."""
-    store = make_store(cache_bytes=0)
-    blob = store.alloc(64 * PAGE, PAGE)
-    store.write(blob, np.arange(64 * PAGE, dtype=np.uint8) % 251, 0)
+    sess = make_session(cache_bytes=0)
+    handle = sess.create(64 * PAGE, PAGE)
+    handle.write(np.arange(64 * PAGE, dtype=np.uint8) % 251, 0)
     segs = [(i * PAGE, 4 * PAGE) for i in range(0, 32, 2)]  # overlapping windows
 
-    store.stats.reset()
+    stats = sess.cluster.stats
+    stats.reset()
     for off, sz in segs:
-        store.read(blob, None, off, sz)
-    looped_rounds = store.stats.data_rounds
+        handle.read(off, sz)
+    looped_rounds = stats.data_rounds
 
-    store.stats.reset()
-    store.readv(blob, None, segs)
-    readv_rounds = store.stats.data_rounds
+    stats.reset()
+    handle.readv(segs)
+    readv_rounds = stats.data_rounds
 
     assert readv_rounds < looped_rounds
     # at most one aggregated get_pages round per data provider
     assert readv_rounds <= 4
-    store.close()
+    sess.cluster.close()
 
 
 def test_writev_equals_looped_write():
-    a, b = make_store(cache_bytes=0), make_store(cache_bytes=0)
-    blob_a, blob_b = a.alloc(16 * PAGE, PAGE), b.alloc(16 * PAGE, PAGE)
+    a, b = make_session(cache_bytes=0), make_session(cache_bytes=0)
+    ha, hb = a.create(16 * PAGE, PAGE), b.create(16 * PAGE, PAGE)
     patches = [(0, page(1, 2 * PAGE)), (4 * PAGE, page(2, PAGE)), (8 * PAGE, page(3, 4 * PAGE))]
-    versions = a.writev(blob_a, patches)
+    versions = ha.writev(patches)
     assert versions == [1, 2, 3]
     for off, buf in patches:
-        b.write(blob_b, buf, off)
+        hb.write(buf, off)
     for v in (1, 2, 3):
         np.testing.assert_array_equal(
-            a.read(blob_a, v, 0, 16 * PAGE).data, b.read(blob_b, v, 0, 16 * PAGE).data
+            ha.read(0, 16 * PAGE, version=v).data,
+            hb.read(0, 16 * PAGE, version=v).data,
         )
-    a.close()
-    b.close()
+    a.cluster.close()
+    b.cluster.close()
 
 
 def test_writev_batches_provider_and_metadata_rounds():
-    store = make_store(cache_bytes=0)
-    blob = store.alloc(16 * PAGE, PAGE)
+    sess = make_session(cache_bytes=0)
+    handle = sess.create(16 * PAGE, PAGE)
     patches = [(i * PAGE, page(i + 1)) for i in range(8)]
 
-    store.stats.reset()
-    store.writev(blob, patches)
-    batched_data = store.stats.data_rounds
-    batched_meta = store.stats.metadata_rounds
+    stats = sess.cluster.stats
+    stats.reset()
+    handle.writev(patches)
+    batched_data = stats.data_rounds
+    batched_meta = stats.metadata_rounds
     # one aggregated put_pages per data provider, one node batch per shard
     assert batched_data <= 4
     assert batched_meta <= 4
 
-    store.stats.reset()
+    stats.reset()
     for off, buf in [(i * PAGE + 8 * PAGE, page(i)) for i in range(8)]:
-        store.write(blob, buf, off)
-    assert store.stats.data_rounds >= batched_data
-    assert store.stats.metadata_rounds > batched_meta
-    store.close()
+        handle.write(buf, off)
+    assert stats.data_rounds >= batched_data
+    assert stats.metadata_rounds > batched_meta
+    sess.cluster.close()
 
 
 def test_readv_writev_under_concurrent_writers():
     """Vectored ops stay equivalent to looped ops while writers churn: a
     pinned published version read via readv matches page-by-page reads."""
-    store = make_store(max_workers=16)
-    blob = store.alloc(32 * PAGE, PAGE)
+    sess = make_session(max_workers=16)
+    handle = sess.create(32 * PAGE, PAGE)
     base = np.arange(32 * PAGE, dtype=np.uint8) % 251
-    store.write(blob, base, 0)
+    handle.write(base, 0)
     stop = threading.Event()
     errors = []
 
     def writer(seed):
+        mine = sess.cluster.session().open(handle.blob_id)
         rng = np.random.default_rng(seed)
         while not stop.is_set():
             off = int(rng.integers(0, 16)) * PAGE
-            store.writev(blob, [(off, page(int(rng.integers(1, 255))))])
+            mine.writev([(off, page(int(rng.integers(1, 255))))])
 
     writers = [threading.Thread(target=writer, args=(s,)) for s in range(3)]
     for t in writers:
         t.start()
     try:
         for _ in range(25):
-            v = store.version_manager.latest_published(blob)
+            v = handle.latest_published()
             segs = [(0, 8 * PAGE), (4 * PAGE, 8 * PAGE), (20 * PAGE, 12 * PAGE)]
-            outs = store.readv(blob, v, segs)
+            outs = handle.readv(segs, version=v)
             for (off, sz), got in zip(segs, outs):
-                want = store.read(blob, v, off, sz).data
+                want = handle.read(off, sz, version=v).data
                 np.testing.assert_array_equal(got, want)
     except Exception as e:  # pragma: no cover
         errors.append(e)
@@ -269,7 +299,7 @@ def test_readv_writev_under_concurrent_writers():
         for t in writers:
             t.join()
     assert not errors
-    store.close()
+    sess.cluster.close()
 
 
 def test_zero_pages_cached_at_nominal_charge():
@@ -278,31 +308,32 @@ def test_zero_pages_cached_at_nominal_charge():
     zero entries cannot evict genuinely expensive provider-fetched pages."""
     from repro.core.page_cache import ZERO_PAGE_CHARGE
 
-    store = make_store()
-    blob = store.alloc(64 * PAGE, PAGE)
-    store.write(blob, page(1), 0)  # only page 0 materialized
-    got = store.read(blob, None, 0, 64 * PAGE).data
+    sess = make_session()
+    handle = sess.create(64 * PAGE, PAGE)
+    handle.write(page(1), 0)  # only page 0 materialized
+    got = handle.read(0, 64 * PAGE).data
     assert (got[:PAGE] == 1).all() and not got[PAGE:].any()
-    assert len(store.page_cache) == 64
-    assert store.page_cache.used_bytes() <= PAGE + 63 * ZERO_PAGE_CHARGE
-    store.stats.reset()
-    again = store.read(blob, None, 0, 64 * PAGE).data  # fully cache-served
+    assert len(sess.cache) == 64
+    assert sess.cache.used_bytes() <= PAGE + 63 * ZERO_PAGE_CHARGE
+    stats = sess.cluster.stats
+    stats.reset()
+    again = handle.read(0, 64 * PAGE).data  # fully cache-served
     np.testing.assert_array_equal(again, got)
-    assert store.stats.metadata_rounds == 0 and store.stats.data_rounds == 0
-    store.close()
+    assert stats.metadata_rounds == 0 and stats.data_rounds == 0
+    sess.cluster.close()
 
 
 def test_metadata_outage_surfaces_as_provider_failed():
     """A full metadata outage must raise ProviderFailed (shard down), not
     KeyError (node lost) — same contract as the single-node get path."""
-    store = make_store(n_metadata_providers=2, cache_bytes=0)
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, page(1, 8 * PAGE), 0)
-    store.metadata.fail_shard(0)
-    store.metadata.fail_shard(1)
+    sess = make_session(n_metadata_providers=2, cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    handle.write(page(1, 8 * PAGE), 0)
+    sess.cluster.metadata.fail_shard(0)
+    sess.cluster.metadata.fail_shard(1)
     with pytest.raises(ProviderFailed):
-        store.readv(blob, None, [(0, 8 * PAGE)])
-    store.close()
+        handle.readv([(0, 8 * PAGE)])
+    sess.cluster.close()
 
 
 # ------------------------------ read clamping --------------------------------
@@ -311,15 +342,15 @@ def test_metadata_outage_surfaces_as_provider_failed():
 def test_read_clamped_at_blob_end_and_oob_rejected():
     """Regression: a read overlapping the blob's end must clamp (not traverse
     out-of-bounds tree ranges); a fully out-of-range read must raise."""
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
+    sess = make_session()
+    handle = sess.create(8 * PAGE, PAGE)
     payload = np.arange(8 * PAGE, dtype=np.uint8)
-    store.write(blob, payload, 0)
-    got = store.read(blob, None, 6 * PAGE, 10 * PAGE).data  # overlaps the end
+    handle.write(payload, 0)
+    got = handle.read(6 * PAGE, 10 * PAGE).data  # overlaps the end
     assert got.size == 2 * PAGE
     np.testing.assert_array_equal(got, payload[6 * PAGE :])
     with pytest.raises(ValueError, match="out of range"):
-        store.read(blob, None, 8 * PAGE, PAGE)
+        handle.read(8 * PAGE, PAGE)
     with pytest.raises(ValueError, match="negative"):
-        store.read(blob, None, -1, PAGE)
-    store.close()
+        handle.read(-1, PAGE)
+    sess.cluster.close()

@@ -8,9 +8,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import BlobStore
+from repro.core import Cluster
 from repro.storage.checkpoint import BlobCheckpointer
 from repro.storage.kvcache import PagedKVAllocator
+
+
+def make_session(n_data_providers=4, n_metadata_providers=4):
+    return Cluster(
+        n_data_providers=n_data_providers,
+        n_metadata_providers=n_metadata_providers,
+        shared_cache_bytes=0,
+    ).session()
 
 
 # ------------------------------- kv allocator -------------------------------
@@ -100,9 +108,9 @@ def _tiny_state(seed=0):
 
 
 def test_checkpoint_roundtrip():
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = make_session()
     state = _tiny_state()
-    ck = BlobCheckpointer(store, state, page_size=4096)
+    ck = BlobCheckpointer(session, state, page_size=4096)
     rec = ck.save(0, state)
     assert rec.dirty_pages > 0
     out = ck.restore(0)
@@ -111,9 +119,9 @@ def test_checkpoint_roundtrip():
 
 
 def test_incremental_checkpoint_writes_only_dirty_pages():
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = make_session()
     state = _tiny_state()
-    ck = BlobCheckpointer(store, state, page_size=4096)
+    ck = BlobCheckpointer(session, state, page_size=4096)
     r0 = ck.save(0, state)
     # identical state -> zero dirty pages (pure COW sharing)
     r1 = ck.save(1, state)
@@ -131,9 +139,9 @@ def test_incremental_checkpoint_writes_only_dirty_pages():
 def test_checkpoint_crash_consistency():
     """A checkpoint is visible only after completion: reading while a save is
     'in flight' (simulated by unpublished writes) yields the previous one."""
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = make_session()
     state = _tiny_state()
-    ck = BlobCheckpointer(store, state, page_size=4096)
+    ck = BlobCheckpointer(session, state, page_size=4096)
     ck.save(0, state)
     before = ck.restore(0)
     # simulate concurrent reader during a save of new state
@@ -148,9 +156,9 @@ def test_checkpoint_crash_consistency():
 
 
 def test_checkpoint_gc_retention():
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = make_session()
     state = _tiny_state()
-    ck = BlobCheckpointer(store, state, page_size=4096, keep_last=2)
+    ck = BlobCheckpointer(session, state, page_size=4096, keep_last=2)
     for i in range(5):
         state = dict(state, w1=state["w1"] + 1.0)
         ck.save(i, state)
@@ -161,9 +169,9 @@ def test_checkpoint_gc_retention():
 
 def test_checkpoint_reshard_restore():
     """Elastic restart: restore with explicit shardings onto a CPU mesh."""
-    store = BlobStore(n_data_providers=2, n_metadata_providers=2)
+    session = make_session(2, 2)
     state = _tiny_state()
-    ck = BlobCheckpointer(store, state, page_size=4096)
+    ck = BlobCheckpointer(session, state, page_size=4096)
     ck.save(0, state)
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

@@ -6,9 +6,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.blob import BlobStore
+from repro.core import Cluster
 from repro.data.pipeline import PipelineConfig, TokenPipeline, write_token_corpus
 from repro.launch.train import train
+
+
+def make_session(**kw):
+    kw.setdefault("n_data_providers", 4)
+    kw.setdefault("n_metadata_providers", 4)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw).session()
 
 
 def test_loss_decreases_small_lm():
@@ -24,13 +31,13 @@ def test_checkpoint_restart_resumes_identically():
     a = train("llama3_2-1b", smoke=True, steps=20, batch=4, seq=64,
               checkpoint_every=10, seed=3)
 
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = make_session()
     with pytest.raises(RuntimeError, match="injected failure"):
         train("llama3_2-1b", smoke=True, steps=20, batch=4, seq=64,
-              checkpoint_every=10, seed=3, store=store, fail_at_step=14)
-    # restart on the same store: restores step-10 checkpoint, resumes data at 10
+              checkpoint_every=10, seed=3, session=session, fail_at_step=14)
+    # restart on the same session: restores step-10 checkpoint, resumes data at 10
     b = train("llama3_2-1b", smoke=True, steps=20, batch=4, seq=64,
-              checkpoint_every=10, seed=3, store=store, restore=True)
+              checkpoint_every=10, seed=3, session=session, restore=True)
 
     np.testing.assert_allclose(a["losses"][-1], b["losses"][-1], rtol=1e-4)
 
@@ -48,15 +55,15 @@ def test_ssm_training_runs():
 
 
 def test_pipeline_determinism_and_disjoint_ranks():
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4)
+    session = make_session()
     rng = np.random.default_rng(0)
     n_tokens = 1 << 16
     corpus = rng.integers(0, 1000, n_tokens, dtype=np.int32)
-    blob_id = write_token_corpus(store, corpus)
+    handle = write_token_corpus(session, corpus)
 
     def make(rank, n_ranks=4):
         return TokenPipeline(
-            store, blob_id, n_tokens,
+            handle, n_tokens,
             PipelineConfig(batch_per_rank=2, seq_len=32, n_ranks=n_ranks, rank=rank),
         )
 
@@ -72,16 +79,16 @@ def test_pipeline_determinism_and_disjoint_ranks():
 
 def test_pipeline_straggler_redundant_fetch():
     """A provider failing mid-read must not stall the pipeline (replica
-    fallback inside BlobStore.read + redundant fetch)."""
-    store = BlobStore(n_data_providers=4, n_metadata_providers=4, page_replication=2)
+    fallback inside BlobHandle.read + redundant fetch)."""
+    session = make_session(page_replication=2)
     rng = np.random.default_rng(0)
     n_tokens = 1 << 14
-    blob_id = write_token_corpus(store, rng.integers(0, 100, n_tokens, dtype=np.int32))
+    handle = write_token_corpus(session, rng.integers(0, 100, n_tokens, dtype=np.int32))
     pipe = TokenPipeline(
-        store, blob_id, n_tokens,
+        handle, n_tokens,
         PipelineConfig(batch_per_rank=2, seq_len=32, n_ranks=1, rank=0,
                        fetch_timeout_s=0.5),
     )
-    store.provider_manager.fail_provider(0)  # node loss
+    session.cluster.provider_manager.fail_provider(0)  # node loss
     batch = pipe.batch_at(0)
     assert batch["tokens"].shape == (2, 32)

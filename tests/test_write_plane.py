@@ -12,16 +12,22 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import BlobStore, ProviderFailed, VersionManager
+from repro.core import Cluster, ProviderFailed, VersionManager
 from repro.core.provider import DataProvider
 
 PAGE = 64
 
 
-def make_store(**kw):
+def make_session(**kw):
+    session_kw = {
+        k: kw.pop(k)
+        for k in ("cache_bytes", "replica_spread", "sync_write", "max_inflight_writes")
+        if k in kw
+    }
     kw.setdefault("n_data_providers", 4)
     kw.setdefault("n_metadata_providers", 4)
-    return BlobStore(**kw)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw).session(**session_kw)
 
 
 def page(fill, nbytes=PAGE):
@@ -34,31 +40,31 @@ def page(fill, nbytes=PAGE):
 def test_writev_stores_zero_copy_views_and_freezes_source():
     """No per-page ``.copy()`` on the hot path: providers hold views of the
     writer's buffer, and the buffer is frozen so they can never change."""
-    store = make_store(n_data_providers=1, cache_bytes=0)
-    blob = store.alloc(8 * PAGE, PAGE)
+    sess = make_session(n_data_providers=1, cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
     buf = np.arange(4 * PAGE, dtype=np.uint8)
-    store.write(blob, buf, 0)
-    provider = store.provider_manager.get_provider(0)
+    handle.write(buf, 0)
+    provider = sess.cluster.provider_manager.get_provider(0)
     stored = [provider.get_page(k) for k in range(4)]
     for pg in stored:
         assert np.shares_memory(pg, buf)  # view, not copy
         assert not pg.flags.writeable
     with pytest.raises(ValueError):
         buf[0] = 99  # the source was surrendered to the store
-    store.close()
+    sess.cluster.close()
 
 
 def test_writev_copies_unfreezable_views_once():
     """A view of a larger writable array cannot be protected by freezing
     (writes through the base would mutate the stored pages), so the write
     plane must fall back to a bulk copy — published data stays immutable."""
-    store = make_store(n_data_providers=1)
-    blob = store.alloc(8 * PAGE, PAGE)
+    sess = make_session(n_data_providers=1)
+    handle = sess.create(8 * PAGE, PAGE)
     big = np.zeros(2 * PAGE, np.uint8)
-    v = store.write(blob, big[:PAGE], 0)
+    v = handle.write(big[:PAGE], 0)
     big[0] = 99  # caller mutates the base AFTER publication
-    assert store.read(blob, v, 0, PAGE).data[0] == 0  # snapshot unharmed
-    store.close()
+    assert handle.read(0, PAGE, version=v).data[0] == 0  # snapshot unharmed
+    sess.cluster.close()
 
 
 def test_buffer_surrender_semantics_on_failure():
@@ -67,18 +73,18 @@ def test_buffer_surrender_semantics_on_failure():
     surrendered for good even if the write fails — another overlapping
     write may already hold zero-copy views of the same memory, so an abort
     cannot safely hand writability back."""
-    store = make_store(cache_bytes=0)
-    blob = store.alloc(8 * PAGE, PAGE)
+    sess = make_session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
     buf = np.zeros(4 * PAGE, np.uint8)
     with pytest.raises(ValueError, match="page-aligned"):
-        store.writev(blob, [(0, buf), (3, page(1))])
+        handle.writev([(0, buf), (3, page(1))])
     buf[0] = 1  # a rejected batch froze nothing
     for pid in range(4):
-        store.provider_manager.fail_provider(pid)
+        sess.cluster.provider_manager.fail_provider(pid)
     with pytest.raises(ProviderFailed):
-        store.write(blob, buf, 0)
+        handle.write(buf, 0)
     assert not buf.flags.writeable  # launched pipeline -> surrendered
-    store.close()
+    sess.cluster.close()
 
 
 def test_abort_leaks_hole_version_wreckage_for_later_readers():
@@ -86,14 +92,16 @@ def test_abort_leaks_hole_version_wreckage_for_later_readers():
     concurrent writer was assigned after it), the abort must NOT scrub its
     stored metadata/pages: the later writer's published tree border-links
     into them."""
-    store = make_store(n_data_providers=2, cache_bytes=0)
-    blob = store.alloc(8 * PAGE, PAGE)
-    started, release = _blocking_provider(store, 0)
+    sess = make_session(n_data_providers=2, cache_bytes=0)
+    cluster = sess.cluster
+    handle = sess.create(8 * PAGE, PAGE)
+    blob = handle.blob_id
+    started, release = _blocking_provider(cluster, 0)
     failed = []
 
     def writer_a():
         try:
-            store.write(blob, page(1), 0)  # page 0 -> provider 0 (blocked)
+            handle.write(page(1), 0)  # page 0 -> provider 0 (blocked)
         except ProviderFailed as err:
             failed.append(err)
 
@@ -101,62 +109,63 @@ def test_abort_leaks_hole_version_wreckage_for_later_readers():
     t.start()
     assert started.wait(10)
     for _ in range(200):  # wait until A holds v1
-        if store.version_manager.assigned_versions(blob) == 1:
+        if cluster.version_manager.assigned_versions(blob) == 1:
             break
         threading.Event().wait(0.01)
-    v2 = store.write(blob, page(2), PAGE)  # B -> provider 1, assigned after A
+    # B runs in its own session, assigned after A
+    v2 = cluster.session().open(blob).write(page(2), PAGE)
     assert v2 == 2
-    store.provider_manager.fail_provider(0)
+    cluster.provider_manager.fail_provider(0)
     release.set()
     t.join(10)
     assert failed  # A's data put raised and its writev aborted
     # v1 is a hole: publication passed it, B's version is readable
-    assert store.version_manager.latest_published(blob) == 2
+    assert cluster.version_manager.latest_published(blob) == 2
     # A's metadata (stored mid-pipeline) survives the abort — B's tree
     # border-links into version 1 for the untouched ranges
     from repro.core import NodeKey
-    leaked = dict(store.metadata.iter_nodes(blob))
+    leaked = dict(cluster.metadata.iter_nodes(blob))
     assert NodeKey(blob, 1, 0, 1) in leaked
     # B's own data is readable; A's page is genuinely lost (never stored),
     # which is writer-recovery territory — but the metadata spine is intact
     np.testing.assert_array_equal(
-        store.read(blob, v2, PAGE, PAGE).data, page(2)
+        handle.read(PAGE, PAGE, version=v2).data, page(2)
     )
-    store.close()
+    cluster.close()
 
 
 def test_sync_write_baseline_copies_pages():
     """The pre-pipeline A/B baseline keeps its defensive per-page copies."""
-    store = make_store(n_data_providers=1, cache_bytes=0, sync_write=True)
-    blob = store.alloc(8 * PAGE, PAGE)
+    sess = make_session(n_data_providers=1, cache_bytes=0, sync_write=True)
+    handle = sess.create(8 * PAGE, PAGE)
     buf = np.arange(2 * PAGE, dtype=np.uint8)
-    store.write(blob, buf, 0)
-    provider = store.provider_manager.get_provider(0)
+    handle.write(buf, 0)
+    provider = sess.cluster.provider_manager.get_provider(0)
     assert not any(np.shares_memory(provider.get_page(k), buf) for k in range(2))
-    store.close()
+    sess.cluster.close()
 
 
 def test_full_page_read_is_zero_copy_view():
     """A read of exactly one whole page returns the stored/cached page itself
     (read-only), not a per-page Python assembly into a fresh buffer."""
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.write(blob, np.arange(8 * PAGE, dtype=np.uint8), 0)
-    a = store.read(blob, None, 2 * PAGE, PAGE).data
-    b = store.read(blob, None, 2 * PAGE, PAGE).data
+    sess = make_session()
+    handle = sess.create(8 * PAGE, PAGE)
+    handle.write(np.arange(8 * PAGE, dtype=np.uint8), 0)
+    a = handle.read(2 * PAGE, PAGE).data
+    b = handle.read(2 * PAGE, PAGE).data
     assert np.shares_memory(a, b)  # both are views of the same cached page
     assert not a.flags.writeable
     # unaligned / multi-page segments still assemble into a fresh buffer
-    c = store.read(blob, None, 2 * PAGE + 1, PAGE).data
+    c = handle.read(2 * PAGE + 1, PAGE).data
     assert not np.shares_memory(a, c)
-    store.close()
+    sess.cluster.close()
 
 
 def test_full_page_read_of_zero_page_shares_the_zero_buffer():
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    a = store.read(blob, None, 0, PAGE).data
-    b = store.read(blob, None, PAGE, PAGE).data
+    sess = make_session()
+    handle = sess.create(8 * PAGE, PAGE)
+    a = handle.read(0, PAGE).data
+    b = handle.read(PAGE, PAGE).data
     assert np.shares_memory(a, b)  # one shared immutable zero page
     assert not a.any()
 
@@ -165,25 +174,26 @@ def test_full_page_read_of_zero_page_shares_the_zero_buffer():
 
 
 def test_write_through_makes_own_rereads_free():
-    store = make_store()
-    blob = store.alloc(8 * PAGE, PAGE)
-    v = store.write(blob, np.arange(4 * PAGE, dtype=np.uint8), 0)
-    store.stats.reset()
-    got = store.read(blob, v, 0, 4 * PAGE).data
+    sess = make_session()
+    handle = sess.create(8 * PAGE, PAGE)
+    v = handle.write(np.arange(4 * PAGE, dtype=np.uint8), 0)
+    stats = sess.cluster.stats
+    stats.reset()
+    got = handle.read(0, 4 * PAGE, version=v).data
     np.testing.assert_array_equal(got, np.arange(4 * PAGE, dtype=np.uint8))
-    assert store.stats.data_rounds == 0  # no provider round-trips
-    assert store.stats.metadata_rounds == 0  # no tree traversal either
-    assert store.stats.cache_hits == 4
-    store.close()
+    assert stats.data_rounds == 0  # no provider round-trips
+    assert stats.metadata_rounds == 0  # no tree traversal either
+    assert stats.cache_hits == 4
+    sess.cluster.close()
 
 
 # ----------------------------- pipelining -------------------------------------
 
 
-def _blocking_provider(store, pid):
+def _blocking_provider(cluster, pid):
     """Make provider ``pid``'s put_pages block until released; returns
     (started, release) events."""
-    provider = store.provider_manager.get_provider(pid)
+    provider = cluster.provider_manager.get_provider(pid)
     started, release = threading.Event(), threading.Event()
     real_put = provider.put_pages
 
@@ -200,68 +210,72 @@ def test_pipelined_writev_overlaps_version_and_metadata_with_data_puts():
     """The tentpole property, asserted structurally: while the data puts are
     still in flight, the version is already assigned AND the metadata nodes
     are already stored. Only report_success waits for the join."""
-    store = make_store(n_data_providers=1, cache_bytes=0)
-    blob = store.alloc(8 * PAGE, PAGE)
-    started, release = _blocking_provider(store, 0)
+    sess = make_session(n_data_providers=1, cache_bytes=0)
+    cluster = sess.cluster
+    handle = sess.create(8 * PAGE, PAGE)
+    blob = handle.blob_id
+    started, release = _blocking_provider(cluster, 0)
     done = []
     t = threading.Thread(
-        target=lambda: done.append(store.write(blob, page(7, 2 * PAGE), 0))
+        target=lambda: done.append(handle.write(page(7, 2 * PAGE), 0))
     )
     t.start()
     try:
         assert started.wait(10)
         # data put is blocked right now, yet the pipeline has moved on:
-        vm = store.version_manager
+        vm = cluster.version_manager
         deadline = threading.Event()
         for _ in range(200):
-            if vm.assigned_versions(blob) == 1 and store.metadata.total_nodes() > 0:
+            if vm.assigned_versions(blob) == 1 and cluster.metadata.total_nodes() > 0:
                 break
             deadline.wait(0.01)
         assert vm.assigned_versions(blob) == 1  # version assigned mid-put
-        assert store.metadata.total_nodes() > 0  # metadata stored mid-put
+        assert cluster.metadata.total_nodes() > 0  # metadata stored mid-put
         assert vm.latest_published(blob) == 0  # but success awaits the join
     finally:
         release.set()
         t.join()
     assert done == [1]
-    assert store.version_manager.latest_published(blob) == 1
-    store.close()
+    assert cluster.version_manager.latest_published(blob) == 1
+    cluster.close()
 
 
 def test_sync_write_keeps_the_stage_barrier():
     """A/B contrast: with sync_write=True no version is assigned until the
     data puts complete (the pre-pipeline full barrier)."""
-    store = make_store(n_data_providers=1, cache_bytes=0, sync_write=True)
-    blob = store.alloc(8 * PAGE, PAGE)
-    started, release = _blocking_provider(store, 0)
-    t = threading.Thread(target=lambda: store.write(blob, page(7), 0))
+    sess = make_session(n_data_providers=1, cache_bytes=0, sync_write=True)
+    cluster = sess.cluster
+    handle = sess.create(8 * PAGE, PAGE)
+    blob = handle.blob_id
+    started, release = _blocking_provider(cluster, 0)
+    t = threading.Thread(target=lambda: handle.write(page(7), 0))
     t.start()
     try:
         assert started.wait(10)
         threading.Event().wait(0.05)  # give a broken pipeline time to leak
-        assert store.version_manager.assigned_versions(blob) == 0
-        assert store.metadata.total_nodes() == 0
+        assert cluster.version_manager.assigned_versions(blob) == 0
+        assert cluster.metadata.total_nodes() == 0
     finally:
         release.set()
         t.join()
-    assert store.version_manager.latest_published(blob) == 1
-    store.close()
+    assert cluster.version_manager.latest_published(blob) == 1
+    cluster.close()
 
 
 # ------------------------- write_async / flush --------------------------------
 
 
 def test_write_async_window_applies_backpressure():
-    store = make_store(n_data_providers=1, cache_bytes=0, max_inflight_writes=2)
-    blob = store.alloc(16 * PAGE, PAGE)
-    started, release = _blocking_provider(store, 0)
-    f1 = store.write_async(blob, page(1), 0)
-    f2 = store.write_async(blob, page(2), PAGE)  # window now full
+    sess = make_session(n_data_providers=1, cache_bytes=0, max_inflight_writes=2)
+    handle = sess.create(16 * PAGE, PAGE)
+    started, release = _blocking_provider(sess.cluster, 0)
+    f1 = handle.write_async(page(1), 0)
+    f2 = handle.write_async(page(2), PAGE)  # window now full
     assert started.wait(10)
     third_submitted = threading.Event()
 
     def third():
-        store.write_async(blob, page(3), 2 * PAGE)
+        handle.write_async(page(3), 2 * PAGE)
         third_submitted.set()
 
     t = threading.Thread(target=third)
@@ -271,23 +285,24 @@ def test_write_async_window_applies_backpressure():
     t.join(10)
     assert third_submitted.is_set()
     assert sorted([f1.result(), f2.result()]) == [1, 2]
-    flushed = store.flush()  # completed-and-pruned writes are not re-reported
+    flushed = sess.flush()  # completed-and-pruned writes are not re-reported
     assert 3 in flushed and set(flushed) <= {1, 2, 3}
-    assert store.version_manager.latest_published(blob) == 3
-    store.close()
+    assert handle.latest_published() == 3
+    sess.cluster.close()
 
 
 def test_write_async_publishes_in_assignment_order_under_random_service():
     """Satellite: versions publish in assignment order per blob even when
-    later writes' data lands first (randomized provider service times)."""
-    store = make_store(
+    later writes' data lands first (randomized provider service times),
+    across multiple concurrently streaming SESSIONS."""
+    cluster = Cluster(
         n_data_providers=6, n_metadata_providers=6, max_workers=24,
-        cache_bytes=0, max_inflight_writes=6,
+        shared_cache_bytes=0,
     )
     rng = np.random.default_rng(7)
-    for provider in store.provider_manager.providers():
+    for provider in cluster.provider_manager.providers():
         provider.page_service_seconds = float(rng.uniform(0.0, 0.004))
-    blob = store.alloc(64 * PAGE, PAGE)
+    blob = cluster.alloc(64 * PAGE, PAGE)
     n_writers, writes_each = 3, 8
     log_lock = threading.Lock()
     by_version = {}
@@ -295,11 +310,14 @@ def test_write_async_publishes_in_assignment_order_under_random_service():
 
     def writer(wid):
         try:
+            handle = cluster.session(
+                cache_bytes=0, max_inflight_writes=6
+            ).open(blob)
             futures = []
             for i in range(writes_each):
                 off = ((wid * writes_each + i) % 64) * PAGE
                 fill = wid * writes_each + i + 1
-                fut = store.write_async(blob, page(fill), off)
+                fut = handle.write_async(page(fill), off)
                 futures.append((off, fill, fut))
             for off, fill, fut in futures:
                 with log_lock:
@@ -315,26 +333,27 @@ def test_write_async_publishes_in_assignment_order_under_random_service():
     assert not errors
     total = n_writers * writes_each
     assert sorted(by_version) == list(range(1, total + 1))  # dense versions
-    assert store.version_manager.latest_published(blob) == total
+    reader = cluster.session().open(blob)
+    assert reader.latest_published() == total
     # every published version equals the prefix-application of patches in
     # version order (global serializability across interleaved async streams)
     oracle = np.zeros(64 * PAGE, np.uint8)
     for v in range(1, total + 1):
         off, fill = by_version[v]
         oracle[off : off + PAGE] = fill
-        got = store.read(blob, v, 0, 64 * PAGE).data
+        got = reader.read(0, 64 * PAGE, version=v).data
         np.testing.assert_array_equal(got, oracle, err_msg=f"version {v}")
-    store.close()
+    cluster.close()
 
 
 def test_flush_surfaces_async_write_failure():
-    store = make_store(n_data_providers=1, cache_bytes=0)
-    blob = store.alloc(8 * PAGE, PAGE)
-    store.provider_manager.fail_provider(0)
-    store.write_async(blob, page(1), 0)
+    sess = make_session(n_data_providers=1, cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    sess.cluster.provider_manager.fail_provider(0)
+    handle.write_async(page(1), 0)
     with pytest.raises(ProviderFailed):
-        store.flush()
-    store.close()
+        sess.flush()
+    sess.cluster.close()
 
 
 # ------------------------- failure cleanup ------------------------------------
@@ -343,33 +362,34 @@ def test_flush_surfaces_async_write_failure():
 def test_failed_writev_releases_placements_and_deletes_orphans():
     """Satellite: a mid-writev provider failure must not leak load credits,
     stored pages, or metadata nodes — and must not wedge publication."""
-    store = make_store(cache_bytes=0)
-    blob = store.alloc(16 * PAGE, PAGE)
-    baseline_load = store.provider_manager.load_snapshot()
-    store.provider_manager.fail_provider(2)
+    sess = make_session(cache_bytes=0)
+    cluster = sess.cluster
+    handle = sess.create(16 * PAGE, PAGE)
+    baseline_load = cluster.provider_manager.load_snapshot()
+    cluster.provider_manager.fail_provider(2)
     with pytest.raises(ProviderFailed):
         # 8 pages over 4 providers: the failed one is guaranteed a batch
-        store.write(blob, page(1, 8 * PAGE), 0)
+        handle.write(page(1, 8 * PAGE), 0)
     # placement credits returned
-    assert store.provider_manager.load_snapshot() == baseline_load
+    assert cluster.provider_manager.load_snapshot() == baseline_load
     # orphaned pages deleted from the live providers
     assert all(
         p.n_pages == 0
-        for p in store.provider_manager.providers()
+        for p in cluster.provider_manager.providers()
         if not p.failed
     )
     # metadata nodes of the doomed version dropped
-    assert store.metadata.total_nodes() == 0
+    assert cluster.metadata.total_nodes() == 0
     # the assigned version was withdrawn: nothing wedges, number is reused
-    assert store.version_manager.assigned_versions(blob) == 0
-    store.provider_manager.recover_provider(2)
-    v = store.write(blob, page(2, 4 * PAGE), 0)
+    assert cluster.version_manager.assigned_versions(handle.blob_id) == 0
+    cluster.provider_manager.recover_provider(2)
+    v = handle.write(page(2, 4 * PAGE), 0)
     assert v == 1
-    assert store.version_manager.latest_published(blob) == 1
+    assert handle.latest_published() == 1
     np.testing.assert_array_equal(
-        store.read(blob, None, 0, 4 * PAGE).data, page(2, 4 * PAGE)
+        handle.read(0, 4 * PAGE).data, page(2, 4 * PAGE)
     )
-    store.close()
+    cluster.close()
 
 
 def test_abandon_hole_is_skipped_and_rejected():
@@ -410,38 +430,41 @@ def test_recover_replays_abandon_entries():
 
 
 def test_per_destination_write_bytes_recorded():
-    store = make_store(cache_bytes=0)
-    blob = store.alloc(16 * PAGE, PAGE)
-    store.write(blob, page(1, 8 * PAGE), 0)
-    wbytes = store.stats.write_bytes_snapshot()
+    sess = make_session(cache_bytes=0)
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(page(1, 8 * PAGE), 0)
+    stats = sess.cluster.stats
+    wbytes = stats.write_bytes_snapshot()
     assert sum(wbytes.values()) == 8 * PAGE
-    rbytes_before = dict(store.stats.read_bytes_snapshot())
-    store.read(blob, None, 0, 8 * PAGE)
+    # the per-session ledger carries the same signal
+    assert sess.stats.write_bytes_snapshot() == wbytes
+    rbytes_before = dict(stats.read_bytes_snapshot())
+    handle.read(0, 8 * PAGE)
     # reads do not pollute the write-skew signal and vice versa
-    assert store.stats.write_bytes_snapshot() == wbytes
-    assert sum(store.stats.read_bytes_snapshot().values()) > sum(
+    assert stats.write_bytes_snapshot() == wbytes
+    assert sum(stats.read_bytes_snapshot().values()) > sum(
         rbytes_before.values()
     )
-    store.close()
+    sess.cluster.close()
 
 
 # ------------------------- sync/pipelined equivalence -------------------------
 
 
 def test_sync_and_pipelined_writes_are_semantically_identical():
-    a = make_store(cache_bytes=0, sync_write=False)
-    b = make_store(cache_bytes=0, sync_write=True)
-    blob_a, blob_b = a.alloc(16 * PAGE, PAGE), b.alloc(16 * PAGE, PAGE)
+    a = make_session(cache_bytes=0, sync_write=False)
+    b = make_session(cache_bytes=0, sync_write=True)
+    ha, hb = a.create(16 * PAGE, PAGE), b.create(16 * PAGE, PAGE)
     patches = [(0, page(1, 2 * PAGE)), (4 * PAGE, page(2, PAGE)),
                (2 * PAGE, page(3, 4 * PAGE))]
-    assert a.writev(blob_a, patches) == b.writev(blob_b, patches)
+    assert ha.writev(patches) == hb.writev(patches)
     for v in (1, 2, 3):
         np.testing.assert_array_equal(
-            a.read(blob_a, v, 0, 16 * PAGE).data,
-            b.read(blob_b, v, 0, 16 * PAGE).data,
+            ha.read(0, 16 * PAGE, version=v).data,
+            hb.read(0, 16 * PAGE, version=v).data,
         )
-    a.close()
-    b.close()
+    a.cluster.close()
+    b.cluster.close()
 
 
 # ------------------------------ compare tool ----------------------------------
@@ -461,5 +484,23 @@ def test_benchmark_compare_diffs_rows():
     lines = diff_rows(old, new)
     joined = "\n".join(lines)
     assert "write,16,10.0,15.0,+50.0%" in joined
-    assert "stream-write,16,-,30.0,added" in joined
+    # a mode added since the previous payload reports "new", never a crash
+    assert "stream-write,16,-,30.0,new" in joined
     assert "gone,16,5.0,-,removed" in joined
+
+
+def test_benchmark_compare_tolerates_malformed_rows():
+    """Rows missing keys (older payload schemas) must degrade to '?' cells,
+    not crash the trajectory report."""
+    from benchmarks.compare import diff_rows
+
+    old = {"git_rev": "aaa", "rows": [
+        {"mode": "write", "clients": 16},  # no aggregate_MBps recorded
+    ]}
+    new = {"git_rev": "bbb", "rows": [
+        {"mode": "write", "clients": 16, "aggregate_MBps": 15.0},
+        {"mode": "multi-session", "clients": 16, "aggregate_MBps": 99.0},
+    ]}
+    joined = "\n".join(diff_rows(old, new))
+    assert "write,16,?,15.0,?" in joined
+    assert "multi-session,16,-,99.0,new" in joined
