@@ -10,8 +10,12 @@ that did not exist in the previous payload reports ``new`` (never an error —
 every PR that adds a benchmark mode hits this case), a mode that disappeared
 reports ``removed``, and rows missing expected keys degrade to ``?`` cells.
 
-Exit status is always 0: this is a reporting tool, not a gate — regressions
-are for the PR author/reviewer to judge with the printed numbers in hand.
+By default this is a reporting tool (exit status 0 no matter what the deltas
+say). With ``--fail-over PCT`` it becomes CI's regression gate: the exit
+status is nonzero if any (mode, clients) pair present in BOTH payloads lost
+more than PCT% aggregate bandwidth — so a read-plane PR can't silently rot
+the write-plane numbers (or vice versa). New and removed modes never trip
+the gate.
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ import argparse
 import json
 import pathlib
 import subprocess
+import sys
 from typing import Dict, List, Optional, Tuple
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -103,23 +108,61 @@ def diff_rows(old: dict, new: dict, clients: Optional[int] = None) -> List[str]:
     return lines
 
 
-def main(argv: Optional[List[str]] = None) -> List[str]:
+def regressions(
+    old: dict, new: dict, threshold_pct: float
+) -> List[Tuple[Tuple[str, int], float]]:
+    """(mode, clients) pairs present in BOTH payloads whose aggregate
+    bandwidth dropped by more than ``threshold_pct`` percent, with the
+    (negative) delta. New/removed modes and malformed rows never regress."""
+    old_idx, new_idx = _index(old), _index(new)
+    out: List[Tuple[Tuple[str, int], float]] = []
+    for key in sorted(set(old_idx) & set(new_idx)):
+        a = old_idx[key].get("aggregate_MBps")
+        b = new_idx[key].get("aggregate_MBps")
+        if not isinstance(a, (int, float)) or not isinstance(b, (int, float)):
+            continue
+        if a > 0 and (b - a) / a * 100.0 < -threshold_pct:
+            out.append((key, (b - a) / a * 100.0))
+    return out
+
+
+def run(argv: Optional[List[str]] = None) -> Tuple[List[str], int]:
+    """Full tool body: returns (report lines, exit code)."""
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--json", type=pathlib.Path,
                         default=REPO_ROOT / "BENCH_concurrent.json")
     parser.add_argument("--clients", type=int, default=None,
                         help="restrict the diff to one client count")
+    parser.add_argument("--fail-over", type=float, default=None, metavar="PCT",
+                        help="exit nonzero if any (mode, clients) pair in both "
+                             "payloads lost more than PCT%% aggregate "
+                             "bandwidth (the CI regression gate)")
     args = parser.parse_args(argv)
     try:
         current = json.loads(args.json.read_text())
     except (OSError, ValueError) as err:
-        return [f"no current benchmark rows at {args.json}: {err}"]
+        return [f"no current benchmark rows at {args.json}: {err}"], 0
     previous = load_previous(args.json)
     if previous is None:
         return [f"no previous git-rev-stamped rows for {args.json}; "
-                "nothing to compare"]
-    return diff_rows(previous, current, clients=args.clients)
+                "nothing to compare"], 0
+    lines = diff_rows(previous, current, clients=args.clients)
+    code = 0
+    if args.fail_over is not None:
+        for (mode, n), pct in regressions(previous, current, args.fail_over):
+            lines.append(
+                f"REGRESSION {mode},{n}: {pct:+.1f}% exceeds the "
+                f"-{args.fail_over:.0f}% gate"
+            )
+            code = 1
+    return lines, code
+
+
+def main(argv: Optional[List[str]] = None) -> List[str]:
+    return run(argv)[0]
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    lines, code = run()
+    print("\n".join(lines))
+    sys.exit(code)

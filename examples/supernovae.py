@@ -9,13 +9,18 @@ are real :class:`Session` objects on it:
 * **N detector sessions** subscribe with ``handle.watch()`` and wake when a
   frame finishes publishing (version ``epoch * n_regions``) instead of
   polling; each detector difference-images its share of the sky between two
-  pinned :class:`Snapshot`\\ s (lock-free repeated reads).
+  pinned :class:`Snapshot`\\ s (lock-free repeated reads);
+* a **publish-driven warmer** (``cluster.warm_on_publish``, one per cluster)
+  watches the same publications and pulls each fresh frame's hottest pages
+  into the shared tier — fed by the replica balancer's read-heat counters —
+  while the detectors are still crunching the previous frame, so their
+  FIRST reads of a new frame are warm.
 
 The detectors share the cluster's intra-node cache tier: epoch N's "after"
 frame is epoch N+1's "before", so half of every comparison is RAM served —
-and one detector's fetch warms every other session on the node (the
-detector sessions run with no private cache at all). Reads and writes
-overlap freely (lock-free R/W concurrency).
+and one detector's fetch (or the warmer's readahead) warms every other
+session on the node (the detector sessions run with no private cache at
+all). Reads and writes overlap freely (lock-free R/W concurrency).
 
     PYTHONPATH=src python examples/supernovae.py
 """
@@ -37,9 +42,14 @@ cluster = Cluster(
 )
 writer = cluster.session(max_inflight_writes=8)
 sim = SkySimulator(writer, layout, seed=7, sn_rate=0.2)
+# the frame warmer: one version per region, so a frame boundary is every
+# n_regions-th version — only those are worth warming
+warmer = cluster.warm_on_publish(
+    sim.blob_id, top_pages=256, frame_versions=layout.n_regions
+)
 
 print(f"sky blob: {layout.n_regions} regions, {layout.blob_bytes >> 20} MB logical, "
-      f"1 telescope session + {N_DETECTORS} detector sessions")
+      f"1 telescope session + {N_DETECTORS} detector sessions + 1 frame warmer")
 
 IMG_BYTES = layout.region_px * layout.region_px * 4
 # overlapping sky windows: each region's window spills one page into the next
@@ -53,6 +63,9 @@ WINDOWS = [
 detections = {}
 det_lock = threading.Lock()
 detector_sessions = [cluster.session(cache_bytes=0) for _ in range(N_DETECTORS)]
+#: per detector, (hits, misses) of the FIRST read of each fresh "after"
+#: frame — warm exactly when the publish warmer beat the detector to it
+first_reads = [[0, 0] for _ in range(N_DETECTORS)]
 
 
 def detector(d: int) -> None:
@@ -74,7 +87,10 @@ def detector(d: int) -> None:
         with handle.at(target - layout.n_regions) as before, handle.at(target) as after:
             segs = [WINDOWS[r] for r in regions]
             before_w = before.readv(segs)
-            after_w = after.readv(segs)
+            h0, m0 = session.stats.cache_hits, session.stats.cache_misses
+            after_w = after.readv(segs)  # the fresh frame: warmer territory
+            first_reads[d][0] += session.stats.cache_hits - h0
+            first_reads[d][1] += session.stats.cache_misses - m0
         for r, b, a in zip(regions, before_w, after_w):
             img_b = b[:IMG_BYTES].view(np.float32).reshape(layout.region_px, -1)
             img_a = a[:IMG_BYTES].view(np.float32).reshape(layout.region_px, -1)
@@ -110,10 +126,18 @@ print(f"recovered {len(recovered)}/{len(truth)} supernovae")
 
 hits = sum(s.stats.cache_hits for s in detector_sessions)
 misses = sum(s.stats.cache_misses for s in detector_sessions)
+f_hits = sum(f[0] for f in first_reads)
+f_misses = sum(f[1] for f in first_reads)
 print(f"shared cache tier, aggregated over {N_DETECTORS} detector sessions: "
       f"{hits} hits / {misses} misses "
       f"({hits / (hits + misses):.0%} hit rate), "
       f"{cluster.stats.data_rounds} aggregated provider RPC rounds")
+print(f"frame warmer: {warmer.pages_warmed} pages warmed across "
+      f"{len(warmer.warmed_versions())} frames; fresh-frame first reads "
+      f"{f_hits / (f_hits + f_misses):.0%} warm "
+      f"({f_hits} hits / {f_misses} misses)")
 for d, s in enumerate(detector_sessions):
-    print(f"  detector {d}: hit rate {s.cache_hit_rate:.0%}")
+    print(f"  detector {d}: hit rate {s.cache_hit_rate:.0%}, "
+          f"first-read hit rate "
+          f"{first_reads[d][0] / max(sum(first_reads[d]), 1):.0%}")
 cluster.close()

@@ -22,6 +22,7 @@ from repro.core.cluster import (
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
+from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
 from repro.core.segment_tree import (
@@ -52,6 +53,9 @@ __all__ = [
     "CacheKey",
     "FetchPlan",
     "PageCache",
+    "PrefetchConfig",
+    "StridePrefetcher",
+    "WatchWarmer",
     "MetadataDHT",
     "ProviderFailed",
     "TrafficStats",

@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
+from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
 from repro.core.segment_tree import (
@@ -100,6 +101,143 @@ def _merge_ranges(pages: Sequence[int]) -> List[Tuple[int, int]]:
         else:
             ranges.append((p, 1))
     return ranges
+
+
+class _PageFetchStream:
+    """Incremental data-plane fetcher — the streaming half of the read
+    pipeline.
+
+    :meth:`submit` may be called concurrently from metadata-RPC workers as
+    traversal levels resolve leaves: each call immediately launches one
+    aggregated ``get_pages`` future per serving provider for the batch's NEW
+    pages (replica-spread exactly like the phased path), so data transfer is
+    in flight while deeper metadata rounds are still running. :meth:`join`
+    is the pipeline's single barrier: it collects every launched future,
+    runs per-page replica fallback for failed provider batches, feeds the
+    balancer's heat counters once, and returns the assembled
+    ``{page_index: page_or_None}`` map."""
+
+    __slots__ = ("_session", "_page_size", "_lock", "_seen", "_read_load",
+                 "_queues", "_scheduled", "_futures", "_result")
+
+    def __init__(self, session: "Session", page_size: int) -> None:
+        self._session = session
+        self._page_size = page_size
+        self._lock = threading.Lock()
+        self._seen: Set[int] = set()
+        self._read_load: Optional[Dict[int, int]] = None
+        #: pending items per provider, drained by at most one in-flight
+        #: drain task per provider — emissions that land while a provider's
+        #: drain is still queued MERGE into its batch, so near-simultaneous
+        #: leaf deliveries (the common case: one level's shard RPCs complete
+        #: together) keep the one-aggregated-RPC-per-provider shape
+        self._queues: Dict[int, List[Tuple[int, int, TreeNode]]] = {}
+        self._scheduled: Set[int] = set()
+        self._futures: List[Future] = []
+        self._result: Dict[int, Optional[np.ndarray]] = {}
+
+    def submit(self, leaves: Dict[int, Optional[TreeNode]]) -> None:
+        """Launch fetches for every not-yet-seen page of ``leaves`` (pages
+        are deduplicated across calls, so the level-end catch-all emission
+        can safely re-deliver leaves a streaming ``get_nodes`` already
+        handed over). ``None`` leaves (implicit zero pages) are recorded as
+        results directly — nothing to fetch."""
+        session = self._session
+        with self._lock:
+            for page_index, leaf in leaves.items():
+                if page_index in self._seen:
+                    continue
+                self._seen.add(page_index)
+                if leaf is None:
+                    self._result[page_index] = None
+                    continue
+                if session.replica_spread and len(leaf.all_page_refs()) > 1:
+                    # stats snapshot deferred until a leaf actually has a
+                    # choice — single-replica reads skip the global lock
+                    if self._read_load is None:
+                        self._read_load = session.cluster.stats.read_bytes_snapshot()
+                    pid, key = session._choose_ref(
+                        leaf, self._read_load, self._page_size
+                    )
+                else:
+                    pid, key = leaf.page  # type: ignore[misc]
+                self._queues.setdefault(pid, []).append((page_index, key, leaf))
+                if pid not in self._scheduled:
+                    self._scheduled.add(pid)
+                    self._futures.append(
+                        session._pool.submit(self._drain, pid)
+                    )
+
+    def _drain(
+        self, pid: int
+    ) -> Tuple[int, List[Tuple[int, int, TreeNode]], Optional[Dict[int, np.ndarray]]]:
+        """One aggregated ``get_pages`` RPC covering everything queued for
+        ``pid`` at execution time."""
+        with self._lock:
+            items = self._queues.pop(pid, [])
+            self._scheduled.discard(pid)
+        if not items:
+            return pid, items, {}
+        return pid, items, self._session._get_batch(pid, items)
+
+    def submit_partial(self, nodes: Dict[NodeKey, TreeNode]) -> None:
+        """Adapter for :meth:`MetadataDHT.get_nodes`'s ``on_partial`` hook:
+        every leaf in a shard's partial result is a wanted page (the
+        traversal only ever asks for wanted keys), so fetch it right away."""
+        leaves = {
+            key.offset: node for key, node in nodes.items() if node.is_leaf
+        }
+        if leaves:
+            self.submit(leaves)
+
+    def join(self) -> Dict[int, Optional[np.ndarray]]:
+        session = self._session
+        fallback: List[Tuple[int, TreeNode, int]] = []
+        fetched_leaves: List[TreeNode] = []
+        # drain futures may schedule no successors, so a single pass over
+        # the (append-only) future list until it stops growing joins all
+        done = 0
+        while True:
+            with self._lock:
+                futures = list(self._futures)
+            if done == len(futures):
+                break
+            for f in futures[done:]:
+                pid, items, got = f.result()
+                fetched_leaves.extend(leaf for _, _, leaf in items)
+                if got is None:
+                    fallback.extend((p, leaf, pid) for p, _, leaf in items)
+                else:
+                    self._result.update(got)
+            done = len(futures)
+        if fallback:
+            # replica fallback in parallel, skipping the observed-dead choice;
+            # tracked in _futures so quiesce() covers a fallback that raises
+            # mid-join (all replicas dead) with siblings still in flight
+            fb = [
+                session._pool.submit(session._fetch_single, p, leaf, skip)
+                for p, leaf, skip in fallback
+            ]
+            with self._lock:
+                self._futures.extend(fb)
+            for (p, _, _), f in zip(fallback, fb):
+                self._result[p] = f.result()
+        if session.cluster.replica_balancer is not None and fetched_leaves:
+            session.cluster.replica_balancer.note_fetches(fetched_leaves)
+        return self._result
+
+    def quiesce(self) -> None:
+        """Error path: wait out every in-flight fetch without raising, so an
+        aborted read leaves no future scribbling into shared state."""
+        done = 0
+        while True:
+            with self._lock:
+                futures = list(self._futures)
+            if done == len(futures):
+                break
+            for f in futures[done:]:
+                f.exception()
+            done = len(futures)
 
 
 class Cluster:
@@ -168,6 +306,17 @@ class Cluster:
         self._gc_guard = threading.Lock()
         #: monotonically numbers sessions (diversifies their RNG streams)
         self._session_counter = 0
+        self._max_workers = max_workers
+        #: auxiliary pool for background cache fills (stride prefetch): a
+        #: fill task joins nested fan-out futures that run on the MAIN pool,
+        #: and a main-pool worker doing that join could deadlock a saturated
+        #: pool — so background fills get their own lane (lazily spawned)
+        self._aux_pool: Optional[ThreadPoolExecutor] = None
+        self._aux_lock = threading.Lock()
+        self._aux_closed = False
+        #: live watch-warmers, stopped on close
+        self._warmers: List[WatchWarmer] = []
+        self._warmers_lock = threading.Lock()
 
     # -- sessions ------------------------------------------------------------
     def session(
@@ -175,10 +324,18 @@ class Cluster:
         cache_bytes: int = DEFAULT_CACHE_BYTES,
         replica_spread: bool = True,
         sync_write: bool = False,
+        sync_read: bool = False,
         max_inflight_writes: int = 8,
+        prefetch: Optional[PrefetchConfig] = None,
     ) -> "Session":
         """Create one client :class:`Session` on this cluster. Every
-        concurrent reader/writer of the paper's topology is one session."""
+        concurrent reader/writer of the paper's topology is one session.
+
+        ``sync_read=True`` keeps the pre-pipeline *phased* read plane (full
+        metadata traversal before the first page fetch — the ``sync-read``
+        benchmark baseline); ``prefetch`` attaches a
+        :class:`~repro.core.prefetch.StridePrefetcher` with the given config
+        so sequential readers get bounded readahead into the shared tier."""
         with self._sessions_lock:
             index = self._session_counter
             self._session_counter += 1
@@ -187,7 +344,9 @@ class Cluster:
             cache_bytes=cache_bytes,
             replica_spread=replica_spread,
             sync_write=sync_write,
+            sync_read=sync_read,
             max_inflight_writes=max_inflight_writes,
+            prefetch=prefetch,
             _index=index,
         )
         with self._sessions_lock:
@@ -204,6 +363,40 @@ class Cluster:
     def sessions(self) -> List["Session"]:
         with self._sessions_lock:
             return list(self._sessions)
+
+    # -- background fills (prefetch / warming) --------------------------------
+    def _aux_submit(self, fn, *args) -> Future:
+        """Run a background cache-fill task on the auxiliary pool — never on
+        the main data-plane pool, whose workers must stay join-free. Raises
+        ``RuntimeError`` once the cluster is closed (callers drop the fill)
+        instead of silently resurrecting a pool nothing would shut down."""
+        with self._aux_lock:
+            if self._aux_closed:
+                raise RuntimeError("cluster is closed")
+            if self._aux_pool is None:
+                self._aux_pool = ThreadPoolExecutor(
+                    max_workers=max(4, self._max_workers // 2),
+                    thread_name_prefix="prefetch",
+                )
+            return self._aux_pool.submit(fn, *args)
+
+    def warm_on_publish(
+        self,
+        blob_id: int,
+        top_pages: int = 256,
+        frame_versions: Optional[int] = None,
+    ) -> WatchWarmer:
+        """Start a :class:`~repro.core.prefetch.WatchWarmer` for ``blob_id``:
+        every freshly published version (every ``frame_versions``-th, if set)
+        gets its hottest pages pulled into the shared tier before detector
+        sessions ask. The warmer is stopped automatically on :meth:`close`;
+        call :meth:`WatchWarmer.stop` to retire it earlier."""
+        warmer = WatchWarmer(
+            self, blob_id, top_pages=top_pages, frame_versions=frame_versions
+        )
+        with self._warmers_lock:
+            self._warmers.append(warmer)
+        return warmer
 
     # -- elasticity ----------------------------------------------------------
     def add_data_provider(self) -> int:
@@ -333,6 +526,15 @@ class Cluster:
         return sum(p.used_bytes() for p in self.provider_manager.providers())
 
     def close(self) -> None:
+        with self._warmers_lock:
+            warmers, self._warmers = self._warmers, []
+        for warmer in warmers:
+            warmer.stop()  # warmers own sessions + fill tasks: stop them first
+        with self._aux_lock:
+            aux, self._aux_pool = self._aux_pool, None
+            self._aux_closed = True
+        if aux is not None:
+            aux.shutdown(wait=True)
         for sess in self.sessions():
             sess.close()
         self.metadata.close()
@@ -361,7 +563,9 @@ class Session:
         cache_bytes: int = DEFAULT_CACHE_BYTES,
         replica_spread: bool = True,
         sync_write: bool = False,
+        sync_read: bool = False,
         max_inflight_writes: int = 8,
+        prefetch: Optional[PrefetchConfig] = None,
         _index: int = 0,
     ) -> None:
         self.cluster = cluster
@@ -380,6 +584,14 @@ class Session:
         #: run writes with the pre-pipeline full barriers + per-page copies
         #: (the A/B baseline for the ``sync-write`` benchmark mode)
         self.sync_write = sync_write
+        #: run reads with the pre-pipeline phased plane — the full metadata
+        #: traversal completes before the first ``get_pages`` RPC leaves the
+        #: node (the A/B baseline for the ``sync-read`` benchmark mode)
+        self.sync_read = sync_read
+        #: optional stride readahead into the shared tier (off by default)
+        self.prefetcher: Optional[StridePrefetcher] = (
+            StridePrefetcher(self, prefetch) if prefetch is not None else None
+        )
         #: bounded in-flight window for :meth:`BlobHandle.write_async`
         self.max_inflight_writes = max_inflight_writes
         self._write_window = threading.BoundedSemaphore(max_inflight_writes)
@@ -420,10 +632,15 @@ class Session:
 
     # -- WRITE plane -----------------------------------------------------------
     def _writev(
-        self, blob_id: int, patches: Sequence[Tuple[int, np.ndarray]]
+        self,
+        blob_id: int,
+        patches: Sequence[Tuple[int, np.ndarray]],
+        coalesce_meta: bool = False,
     ) -> List[int]:
         """Vectored WRITE (see :meth:`BlobHandle.writev` for semantics and
-        the zero-copy buffer-surrender contract)."""
+        the zero-copy buffer-surrender contract). ``coalesce_meta`` routes
+        the node store through the DHT's group-commit path so concurrent
+        small writes (the ``write_async`` window) share one shard round."""
         vm = self.cluster.version_manager
         total_pages, page_size = vm.blob_info(blob_id)
         sync = self.sync_write
@@ -538,6 +755,10 @@ class Session:
             node_keys.extend(node.key for node in all_nodes)
             if sync:
                 metadata.put_nodes(all_nodes)
+            elif coalesce_meta:
+                # cross-writev coalescing: writes streaming through the async
+                # window merge their node batches into one shard round
+                meta_futures.extend(metadata.put_nodes_coalesced(all_nodes))
             else:
                 meta_futures.extend(metadata.put_nodes_async(all_nodes))
 
@@ -667,7 +888,12 @@ class Session:
         self, blob_id: int, buffer: np.ndarray, offset_bytes: int
     ) -> int:
         try:
-            return self._writev(blob_id, [(offset_bytes, buffer)])[0]
+            # async-window writes coalesce their metadata: several small
+            # writes in flight at once share ONE aggregated shard round
+            return self._writev(
+                blob_id, [(offset_bytes, buffer)],
+                coalesce_meta=not self.sync_write,
+            )[0]
         finally:
             self._write_window.release()
 
@@ -704,7 +930,15 @@ class Session:
     ) -> List[np.ndarray]:
         """``readv`` body with the version-manager state already resolved —
         the serialized actor is consulted exactly once per public call (and
-        not at all for :class:`Snapshot` re-reads)."""
+        not at all for :class:`Snapshot` re-reads).
+
+        The miss path is a *streaming pipeline*, symmetric with the write
+        plane: as the level-synchronous metadata traversal resolves leaves
+        (per shard, as each shard's RPC of a level completes), the
+        per-provider ``get_pages`` futures launch immediately on the cluster
+        pool — data transfer overlaps the remaining metadata rounds, with
+        ONE join before assembly. ``sync_read=True`` keeps the phased
+        baseline: the full traversal completes before the first page fetch."""
         # clamp segments; collect the deduplicated union of needed pages
         total_bytes = total_pages * page_size
         clamped: List[Tuple[int, int]] = []
@@ -724,6 +958,17 @@ class Session:
             first_page = offset // page_size
             last_page = min(-(-(offset + size) // page_size), total_pages)
             needed.update(range(first_page, last_page))
+
+        # adaptive readahead: feed the stride detector BEFORE this read's own
+        # fetch, so the readahead it may issue (for pages beyond this read)
+        # overlaps the demand traversal below. The observed version is the
+        # resolved published version, so prefetch can never cross the
+        # publish frontier.
+        if self.prefetcher is not None and needed:
+            self.prefetcher.observe(
+                blob_id, version, min(needed), max(needed) + 1,
+                total_pages, page_size,
+            )
 
         # cache phase. Tier order: the private cache first (it may hold this
         # session's own write-through pages), then the shared tier, which
@@ -757,14 +1002,39 @@ class Session:
 
         if owned:
             fulfilled: Set[int] = set()
+            stream = _PageFetchStream(self, page_size)
             try:
-                # (2) ONE metadata traversal pass over all missed ranges
-                leaves = traverse_batch(
-                    self.cluster.metadata.get_nodes, blob_id, version, total_pages,
-                    _merge_ranges(owned),
-                )
-                # (3) ONE aggregated page fetch per provider
-                fetched = self._fetch_pages(leaves, page_size)
+                if self.sync_read:
+                    # phased baseline: the traversal runs to completion, THEN
+                    # the leaves are fetched (one aggregated RPC per provider)
+                    leaves = traverse_batch(
+                        self.cluster.metadata.get_nodes, blob_id, version,
+                        total_pages, _merge_ranges(owned),
+                    )
+                    stream.submit(leaves)
+                else:
+                    # (2)+(3) overlapped: per-shard partial results stream
+                    # get_pages futures into flight mid-level; the per-level
+                    # on_leaves emission is the catch-all for get_nodes
+                    # implementations that do not stream (stream.submit
+                    # dedups, so doubly delivered leaves fetch once)
+                    def _streaming_get_nodes(keys):
+                        return self.cluster.metadata.get_nodes(
+                            keys, on_partial=stream.submit_partial
+                        )
+
+                    leaves = traverse_batch(
+                        _streaming_get_nodes, blob_id, version, total_pages,
+                        _merge_ranges(owned), on_leaves=stream.submit,
+                    )
+                    # implicit-zero pages resolve in the traversal, not the
+                    # data plane — record them with the stream's results
+                    stream.submit(
+                        {p: None for p, leaf in leaves.items() if leaf is None}
+                    )
+                # the ONE join of the read pipeline: every launched fetch
+                # lands (with per-page replica fallback) before assembly
+                fetched = stream.join()
                 for p, page in fetched.items():
                     pages[p] = page
                     if flight_cache is not None:
@@ -778,6 +1048,7 @@ class Session:
                         )
                         fulfilled.add(p)
             except BaseException as err:
+                stream.quiesce()  # no fetch may still be in flight
                 if flight_cache is not None:
                     for p in owned:
                         if p not in fulfilled:
@@ -790,23 +1061,39 @@ class Session:
 
         # assemble per-segment outputs from the shared page map: a segment
         # covering exactly one whole page is served as a zero-copy read-only
-        # view of that page; anything else is written page-by-page directly
-        # into one preallocated output buffer
+        # view of that page; an aligned multi-page segment is one C-level
+        # concatenate of the page views (no per-page Python copy loop); the
+        # unaligned rest goes into an UNinitialized buffer with explicit
+        # zero-fill only where a page is implicitly zero — never a full
+        # zero-fill that every byte then overwrites
         outs: List[np.ndarray] = []
         for offset, size in clamped:
+            if size == 0:
+                outs.append(np.empty(0, dtype=np.uint8))
+                continue
             if size == page_size and offset % page_size == 0:
                 page = pages.get(offset // page_size)
                 outs.append(page if page is not None else _zero_page(page_size))
                 continue
-            out = np.zeros(size, dtype=np.uint8)
-            for p in range(offset // page_size, -(-(offset + size) // page_size)):
+            first = offset // page_size
+            last = -(-(offset + size) // page_size)
+            if offset % page_size == 0 and size % page_size == 0:
+                zero = _zero_page(page_size)
+                parts = [pages.get(p) for p in range(first, last)]
+                outs.append(np.concatenate(
+                    [pg if pg is not None else zero for pg in parts]
+                ))
+                continue
+            out = np.empty(size, dtype=np.uint8)
+            for p in range(first, last):
                 page = pages.get(p)
-                if page is None:
-                    continue  # implicit zero page
                 page_lo = p * page_size
                 a = max(offset, page_lo)
                 b = min(offset + size, page_lo + page_size)
-                out[a - offset : b - offset] = page[a - page_lo : b - page_lo]
+                if page is None:
+                    out[a - offset : b - offset] = 0  # implicit zero page
+                else:
+                    out[a - offset : b - offset] = page[a - page_lo : b - page_lo]
             outs.append(out)
         return outs
 
@@ -830,65 +1117,83 @@ class Session:
     def _fetch_pages(
         self, leaves: Dict[int, Optional[TreeNode]], page_size: int
     ) -> Dict[int, Optional[np.ndarray]]:
-        """Fetch all leaf pages: one aggregated RPC per serving provider (in
-        parallel), per-page replica fallback if a provider batch fails. The
-        serving provider per page is replica-spread (least read load,
-        judged against the CLUSTER-wide read traffic) rather than always the
-        primary, and every provider fetch feeds the replica balancer's heat
-        counters."""
-        provider_manager = self.cluster.provider_manager
-        result: Dict[int, Optional[np.ndarray]] = {}
-        by_provider: Dict[int, List[Tuple[int, int, TreeNode]]] = defaultdict(list)
-        # stats snapshot is deferred until a leaf actually has a choice to
-        # make — single-replica reads must not pay a global-lock round-trip
-        read_load: Optional[Dict[int, int]] = None
-        for page_index, leaf in leaves.items():
-            if leaf is None:
-                result[page_index] = None  # implicit zero page
-                continue
-            if self.replica_spread and len(leaf.all_page_refs()) > 1:
-                if read_load is None:
-                    read_load = self.cluster.stats.read_bytes_snapshot()
-                pid, key = self._choose_ref(leaf, read_load, page_size)
-            else:
-                pid, key = leaf.page  # type: ignore[misc]
-            by_provider[pid].append((page_index, key, leaf))
+        """Fetch all leaf pages in one shot: one aggregated RPC per serving
+        provider (in parallel), per-page replica fallback if a provider batch
+        fails. This is the phased entry point (``sync_read`` baseline,
+        background prefetch fills); the streaming read plane drives the same
+        :class:`_PageFetchStream` incrementally instead."""
+        stream = _PageFetchStream(self, page_size)
+        stream.submit(leaves)
+        return stream.join()
 
-        def _get_batch(
-            pid: int, items: List[Tuple[int, int, TreeNode]]
-        ) -> Optional[Dict[int, np.ndarray]]:
-            try:
-                provider = provider_manager.get_provider(pid)
-                fetched = provider.get_pages([key for _, key, _ in items])
-            except (ProviderFailed, KeyError):
-                return None  # provider down/deregistered: caller falls back
-            self._record_data(
-                pid, len(items), sum(pg.nbytes for pg in fetched), read=True
-            )
-            return {p: pg for (p, _, _), pg in zip(items, fetched)}
+    def _get_batch(
+        self, pid: int, items: List[Tuple[int, int, TreeNode]]
+    ) -> Optional[Dict[int, np.ndarray]]:
+        """One aggregated ``get_pages`` RPC to provider ``pid``; ``None`` on
+        provider failure (the stream's join falls back per page)."""
+        try:
+            provider = self.cluster.provider_manager.get_provider(pid)
+            fetched = provider.get_pages([key for _, key, _ in items])
+        except (ProviderFailed, KeyError):
+            return None  # provider down/deregistered: caller falls back
+        self._record_data(
+            pid, len(items), sum(pg.nbytes for pg in fetched), read=True
+        )
+        return {p: pg for (p, _, _), pg in zip(items, fetched)}
 
-        batches = list(by_provider.items())
-        futures = [self._pool.submit(_get_batch, pid, items) for pid, items in batches]
-        fallback: List[Tuple[int, TreeNode, int]] = []
-        for (pid, items), f in zip(batches, futures):
-            got = f.result()
-            if got is None:
-                fallback.extend((p, leaf, pid) for p, _, leaf in items)
-            else:
-                result.update(got)
-        if fallback:
-            # replica fallback in parallel, skipping the observed-dead choice
-            fb = [
-                self._pool.submit(self._fetch_single, p, leaf, skip)
-                for p, leaf, skip in fallback
-            ]
-            for (p, _, _), f in zip(fallback, fb):
-                result[p] = f.result()
-        if self.cluster.replica_balancer is not None:
-            self.cluster.replica_balancer.note_fetches(
-                items[2] for batch in by_provider.values() for items in batch
+    def _prefetch_fill(
+        self,
+        blob_id: int,
+        version: int,
+        prefetch_pages: Sequence[int],
+        total_pages: int,
+        page_size: int,
+    ) -> int:
+        """Best-effort background fill of ``prefetch_pages`` of a *published*
+        ``version`` into the session's fill tier (the cluster's shared tier
+        when present — so one session's readahead warms every session on the
+        node). Used by the stride prefetcher and the watch warmer; runs off
+        the read path (aux pool / warmer thread).
+
+        Coherence is the same argument as any read: the version was resolved
+        against the publish frontier by whoever triggered the fill, fills go
+        through the cache's single-flight plan (``record=False`` — a
+        prefetch miss must not distort any session's demand hit rate), and
+        every owned key is fulfilled or aborted even on failure, so demand
+        readers waiting as followers never hang. Returns pages filled."""
+        cache = (
+            self.cluster.shared_cache
+            if self.cluster.shared_cache is not None
+            else self.cache
+        )
+        if cache is None:
+            return 0
+        plan = cache.plan(
+            [(blob_id, version, p) for p in prefetch_pages], record=False
+        )
+        owned = sorted(key[2] for key in plan.owned)
+        if not owned:
+            return 0
+        done: Set[int] = set()
+        try:
+            leaves = traverse_batch(
+                self.cluster.metadata.get_nodes, blob_id, version, total_pages,
+                _merge_ranges(owned),
             )
-        return result
+            fetched = self._fetch_pages(leaves, page_size)
+            for p in owned:
+                page = fetched.get(p)
+                cache.fulfill(
+                    (blob_id, version, p),
+                    page if page is not None else _zero_page(page_size),
+                    charge=None if page is not None else ZERO_PAGE_CHARGE,
+                )
+                done.add(p)
+        except BaseException as err:
+            for p in owned:
+                if p not in done:
+                    cache.abort((blob_id, version, p), err)
+        return len(done)
 
     def _fetch_single(
         self, page_index: int, leaf: TreeNode, skip_pid: Optional[int] = None
@@ -934,12 +1239,15 @@ class BlobHandle:
 
     WRITE is the overlapped pipeline (data puts in flight while versions are
     assigned and metadata is woven; one join; in-order publication), READ is
-    the cache-fronted batched plane (private tier, then the cluster's shared
-    tier with node-wide single-flight, then one level-synchronous metadata
-    traversal + one aggregated page RPC per provider). Page transport is
-    zero-copy end to end: ``writev`` freezes owning source buffers and hands
-    page views to the providers; a full-single-page read returns a read-only
-    view of the stored/cached page.
+    its symmetric streaming pipeline: private tier, then the cluster's
+    shared tier with node-wide single-flight, then one level-synchronous
+    metadata traversal whose resolving leaves launch aggregated per-provider
+    page fetches *while the remaining metadata rounds are still in flight*
+    (one join before assembly; ``sync_read`` sessions keep the phased
+    baseline). Page transport is zero-copy end to end: ``writev`` freezes
+    owning source buffers and hands page views to the providers; a
+    full-single-page read returns a read-only view of the stored/cached
+    page.
     """
 
     def __init__(self, session: Session, blob_id: int) -> None:
@@ -1019,11 +1327,14 @@ class BlobHandle:
         self, segments: Sequence[Tuple[int, int]], version: Optional[int] = None
     ) -> List[np.ndarray]:
         """Vectored READ: fetch many ``(offset_bytes, size_bytes)`` segments
-        of one version in a single batched pass. Pages shared between
-        segments are deduplicated; cache hits skip the network entirely; the
-        remaining pages cost one level-synchronous metadata traversal (one
-        aggregated RPC per shard per level) plus ONE aggregated ``get_pages``
-        RPC per data provider. Returns one ``np.uint8`` array per segment
+        of one version in a single batched, *streaming* pass. Pages shared
+        between segments are deduplicated; cache hits skip the network
+        entirely; the remaining pages cost one level-synchronous metadata
+        traversal (one aggregated RPC per shard per level) whose resolving
+        leaves immediately launch aggregated per-provider ``get_pages``
+        fetches, overlapping data transfer with the rest of the traversal
+        (``sync_read`` sessions instead finish the traversal first — the
+        phased baseline). Returns one ``np.uint8`` array per segment
         (full-single-page segments are read-only zero-copy views)."""
         total_pages, page_size, resolved, _ = self._vm.resolve_read_version(
             self.blob_id, version

@@ -207,6 +207,19 @@ class MetadataDHT:
         self._executor = executor
         self._owns_executor = False
         self._executor_lock = threading.Lock()
+        # group-commit state for put_nodes_coalesced: writes arriving while
+        # coalesce_max_rounds rounds are already in flight pile up here and
+        # ride the next round together. The bound matters both ways: with
+        # unbounded rounds nothing ever coalesces (that is put_nodes_async),
+        # and with ONE serialized round a lone streamer pays +0.5 RTT per
+        # write for no benefit — concurrent wire RPCs genuinely overlap
+        self._coalesce_lock = threading.Lock()
+        self._coalesce_pending: List[Tuple[List[TreeNode], Future]] = []
+        self._coalesce_active = 0
+        self.coalesce_max_rounds = 4
+        #: rounds actually flushed by the coalescer (tests assert that N
+        #: concurrent small writes cost fewer than N rounds)
+        self.coalesced_rounds = 0
 
     def _round_trip(self) -> None:
         """One modeled RTT for a parallel round of shard RPCs."""
@@ -286,6 +299,86 @@ class MetadataDHT:
 
         return [self._pool().submit(_put_round)]
 
+    def put_nodes_coalesced(self, nodes: Sequence[TreeNode]) -> List[Future]:
+        """Group-commit metadata store: the cross-writev half of the paper's
+        RPC aggregation. Up to ``coalesce_max_rounds`` rounds run
+        concurrently (concurrent wire RPCs overlap their RTTs, exactly like
+        ``put_nodes_async`` — a lightly loaded streamer keeps its latency);
+        node batches from writes that arrive while all round slots are busy
+        are merged into ONE per-shard batch round (one aggregated RPC per
+        shard, one modeled RTT for all of them) instead of paying a shard
+        round per write — the ``write_async`` window routes its writes
+        through here, so a burst of small fine-grain writes shares metadata
+        rounds the way one big ``writev`` always has. Returns one future
+        that resolves when this call's nodes are durable; a shard failure
+        fails exactly the calls that stored nodes on that shard, not the
+        whole round."""
+        fut: Future = Future()
+        with self._coalesce_lock:
+            self._coalesce_pending.append((list(nodes), fut))
+            launch = self._coalesce_active < self.coalesce_max_rounds
+            if launch:
+                self._coalesce_active += 1
+        if launch:
+            try:
+                self._pool().submit(self._coalesce_flush)
+            except BaseException as err:
+                # executor gone (shutdown race): return the slot and fail
+                # whatever is queued if no live flusher remains to drain it —
+                # a stranded future would hang its writer's join forever
+                with self._coalesce_lock:
+                    self._coalesce_active -= 1
+                    stranded = []
+                    if self._coalesce_active == 0:
+                        stranded, self._coalesce_pending = (
+                            self._coalesce_pending, []
+                        )
+                for _, pending_fut in stranded:
+                    pending_fut.set_exception(err)
+                raise
+        return [fut]
+
+    def _coalesce_flush(self) -> None:
+        """Drain the coalesce queue: each loop iteration takes EVERYTHING
+        queued so far as one round (per-shard aggregated stores + one RTT),
+        then re-checks — writes that arrived while every round slot was busy
+        ride the next loop. Runs on a pool worker per active round; the
+        per-shard stores are in-process dict inserts (fanning them out would
+        cost more in task dispatch than it saves, exactly like
+        ``put_nodes_async``)."""
+        while True:
+            with self._coalesce_lock:
+                batch, self._coalesce_pending = self._coalesce_pending, []
+                if not batch:
+                    self._coalesce_active -= 1
+                    return
+                self.coalesced_rounds += 1  # under the lock: flushes race
+            by_shard: Dict[int, List[TreeNode]] = defaultdict(list)
+            homes: List[set] = []  # per queued write, the shards it touches
+            for nodes, _ in batch:
+                touched: set = set()
+                for node in nodes:
+                    for sid in self._replica_ids(node.key):
+                        by_shard[sid].append(node)
+                        touched.add(sid)
+                homes.append(touched)
+            failed: Dict[int, BaseException] = {}
+            for sid, shard_nodes in by_shard.items():
+                try:
+                    self.shards[sid].put_many(shard_nodes)
+                    self.stats.record_metadata(
+                        sid, len(shard_nodes), len(shard_nodes) * NODE_WIRE_BYTES
+                    )
+                except BaseException as err:
+                    failed[sid] = err
+            self._round_trip()
+            for (_, fut), touched in zip(batch, homes):
+                errs = [failed[sid] for sid in touched if sid in failed]
+                if errs:
+                    fut.set_exception(errs[0])
+                else:
+                    fut.set_result(None)
+
     def get_node(self, key: NodeKey) -> TreeNode:
         last_err: Optional[Exception] = None
         for sid in self._replica_ids(key):
@@ -302,11 +395,26 @@ class MetadataDHT:
             raise last_err
         raise KeyError(f"metadata node not found: {key}")
 
-    def get_nodes(self, keys: Sequence[NodeKey]) -> Dict[NodeKey, TreeNode]:
+    def get_nodes(
+        self,
+        keys: Sequence[NodeKey],
+        on_partial: Optional[Callable[[Dict[NodeKey, TreeNode]], None]] = None,
+    ) -> Dict[NodeKey, TreeNode]:
         """Batched node fetch: ONE aggregated RPC per (home) shard for the
         whole key set — the per-shard RPCs of each round run concurrently —
         with per-key replica fallback rounds on shard failure or missing
-        replicas. Raises ``KeyError`` if any key is nowhere."""
+        replicas. Raises ``KeyError`` if any key is nowhere.
+
+        ``on_partial`` switches the round into *streaming* delivery (the
+        read-plane pipeline): each shard batch's found nodes are handed to
+        the callback the moment that shard's RPC completes — possibly
+        concurrently from pool workers, and crucially *without waiting for
+        the round's slower shards* — so the caller can launch data-page
+        fetches while the rest of the traversal level is still in flight.
+        The modeled RTT of a streaming round elapses BEFORE the per-shard
+        results are delivered (a response can only be acted on one round
+        trip after the round is issued), so streaming never under-counts
+        latency; the complete result dict is still returned at the end."""
         found: Dict[NodeKey, TreeNode] = {}
         pending = list(dict.fromkeys(keys))
         last_err: Optional[ProviderFailed] = None
@@ -317,6 +425,8 @@ class MetadataDHT:
             try:
                 got = self.shards[sid].get_many(batch)
                 self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+                if on_partial is not None and got:
+                    on_partial(got)
                 return batch, got, None
             except ProviderFailed as err:
                 return batch, None, err
@@ -327,6 +437,8 @@ class MetadataDHT:
             by_shard: Dict[int, List[NodeKey]] = defaultdict(list)
             for key in pending:
                 by_shard[self._replica_ids(key)[round_idx]].append(key)
+            if on_partial is not None:
+                self._round_trip()  # streaming: deliver at response-arrival time
             still_missing: List[NodeKey] = []
             for batch, got, err in self._fan_out(list(by_shard.items()), _get):
                 if err is not None:
@@ -336,7 +448,8 @@ class MetadataDHT:
                 assert got is not None
                 found.update(got)
                 still_missing.extend(k for k in batch if k not in got)
-            self._round_trip()
+            if on_partial is None:
+                self._round_trip()
             pending = still_missing
         if pending:
             if last_err is not None:  # an outage, not a lost node

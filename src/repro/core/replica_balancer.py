@@ -253,6 +253,20 @@ class ReplicaBalancer:
                 self._promoted.pop(key, None)
 
     # -- introspection -------------------------------------------------------
+    def hottest_page_offsets(self, blob_id: int, k: int) -> List[int]:
+        """Top-``k`` page offsets of ``blob_id`` by provider-fetch heat,
+        aggregated across versions (pages are COW-rewritten under new
+        versions but their *offsets* keep their access skew). This is the
+        watch-warmer's prior for which pages of a freshly published version
+        detectors will pull first; ties break low-offset-first so the order
+        is deterministic."""
+        with self._heat_lock:
+            agg: Dict[int, int] = {}
+            for key, (count, _) in self._heat.items():
+                if key.blob_id == blob_id:
+                    agg[key.offset] = agg.get(key.offset, 0) + count
+        return sorted(agg, key=lambda o: (-agg[o], o))[:k]
+
     def promoted_refs(self, key: NodeKey) -> Tuple[PageRef, ...]:
         with self._heat_lock:
             return tuple(self._promoted.get(key, ()))

@@ -269,6 +269,7 @@ def traverse_batch(
     root_version: int,
     total_pages: int,
     ranges: Sequence[Tuple[int, int]],
+    on_leaves: Optional[Callable[["dict[int, TreeNode]"], None]] = None,
 ) -> "dict[int, Optional[TreeNode]]":
     """Resolve every page of several ``(offset, size)`` page ranges in ONE
     traversal pass: the tree is walked level-synchronously, and all node
@@ -280,6 +281,16 @@ def traverse_batch(
     Range membership queries go through an :class:`IntervalIndex` over the
     merged request ranges, so each visited node costs O(log R) instead of a
     full rescan of all R ranges.
+
+    ``on_leaves`` is the streaming hook of the overlapped read plane: it is
+    invoked with ``{page_index: leaf}`` batches of newly resolved leaves as
+    each traversal level completes — before any deeper level's node fetches
+    are issued — so the caller can put data-page fetches in flight while the
+    remaining metadata rounds run. (A ``get_nodes`` that itself streams
+    per-shard results may deliver some leaves even earlier; this hook is the
+    level-granularity catch-all that works with ANY ``get_nodes``.)
+    Implicit-zero pages are never emitted — there is nothing to fetch for
+    them; every emitted page also appears in the returned dict.
 
     Returns ``{page_index: leaf_or_None}`` for exactly the requested pages
     (``None`` = implicit all-zero page).
@@ -303,10 +314,13 @@ def traverse_batch(
     while frontier:
         nodes = get_nodes([NodeKey(blob_id, v, o, s) for v, o, s in frontier])
         next_frontier: List[Tuple[int, int, int]] = []
+        new_leaves: "dict[int, TreeNode]" = {}
         for v, o, s in frontier:
             node = nodes[NodeKey(blob_id, v, o, s)]
             if node.is_leaf:
                 out[o] = node
+                if on_leaves is not None:
+                    new_leaves[o] = node
                 continue
             half = s // 2
             for child_v, co in ((node.left_version, o), (node.right_version, o + half)):
@@ -316,6 +330,8 @@ def traverse_batch(
                     mark_zero(co, half)
                 else:
                     next_frontier.append((child_v, co, half))
+        if on_leaves is not None and new_leaves:
+            on_leaves(new_leaves)
         frontier = next_frontier
     return out
 

@@ -294,7 +294,12 @@ def test_readv_replica_fallback_when_provider_dies_mid_read():
     import repro.core.cluster as cluster_mod
 
     orig = cluster_mod.traverse_batch
-    cluster_mod.traverse_batch = lambda get_nodes, *a: real_traverse(killing_get_nodes, *a)
+    # the stub get_nodes ignores the streaming on_partial hook, so leaves
+    # reach the fetch stream only via the level-end on_leaves emission —
+    # which happens AFTER killing_get_nodes returned and killed the primary
+    cluster_mod.traverse_batch = (
+        lambda get_nodes, *a, **kw: real_traverse(killing_get_nodes, *a, **kw)
+    )
     try:
         outs = handle.readv([(0, 8 * PAGE)])
     finally:

@@ -203,7 +203,11 @@ def test_readv_equals_looped_read():
 
 def test_readv_fewer_rpc_rounds_than_looped_reads():
     """Acceptance: N overlapping segments cost strictly fewer provider RPC
-    rounds via readv than via N separate read calls."""
+    rounds via readv than via N separate read calls. The streaming read
+    plane launches one aggregated get_pages round per provider per *emitted
+    leaf batch* (a shard's slice of the final traversal level), so its bound
+    is shards x providers; the phased ``sync_read`` baseline keeps the
+    original one-round-per-provider aggregation."""
     sess = make_session(cache_bytes=0)
     handle = sess.create(64 * PAGE, PAGE)
     handle.write(np.arange(64 * PAGE, dtype=np.uint8) % 251, 0)
@@ -220,8 +224,14 @@ def test_readv_fewer_rpc_rounds_than_looped_reads():
     readv_rounds = stats.data_rounds
 
     assert readv_rounds < looped_rounds
-    # at most one aggregated get_pages round per data provider
-    assert readv_rounds <= 4
+    # at most one aggregated round per (leaf-batch, provider) pair
+    assert readv_rounds <= 4 * 4
+
+    # the phased plane still aggregates to ONE round per data provider
+    phased = sess.cluster.session(cache_bytes=0, sync_read=True)
+    stats.reset()
+    phased.open(handle.blob_id).readv(segs)
+    assert stats.data_rounds <= 4
     sess.cluster.close()
 
 

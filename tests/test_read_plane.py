@@ -1,0 +1,419 @@
+"""Streaming overlapped read plane + adaptive prefetch tests.
+
+Covers the tentpole property (``get_pages`` issued before the final metadata
+traversal level completes — and NOT issued early on the phased ``sync_read``
+baseline), stream/phased result equivalence, the ``np.empty``/concatenate
+assembly paths against a byte oracle, stride-prefetch bounds (never past the
+blob end, never across the publish frontier), watch-warmer behavior under GC
+and snapshot pins, and the cross-writev metadata coalescing of the
+``write_async`` window.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Cluster, NodeKey, PrefetchConfig
+
+PAGE = 64
+
+
+def make_cluster(**kw):
+    kw.setdefault("n_data_providers", 4)
+    kw.setdefault("n_metadata_providers", 4)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw)
+
+
+def page(fill, nbytes=PAGE):
+    return np.full(nbytes, fill, np.uint8)
+
+
+# --------------------- structural overlap (the tentpole) ----------------------
+
+
+class _OverlapHarness:
+    """Block one metadata shard's final-level (leaf) response and count
+    provider ``get_pages`` calls issued while it is blocked."""
+
+    def __init__(self, cluster, blocked_sid=0):
+        self.blocked = threading.Event()
+        self.release = threading.Event()
+        self.get_pages_calls = []
+        shard = cluster.metadata.shards[blocked_sid]
+        real = shard.get_many
+
+        def blocking_get_many(keys):
+            if any(k.size == 1 for k in keys):
+                self.blocked.set()
+                assert self.release.wait(10), "harness never released"
+            return real(keys)
+
+        shard.get_many = blocking_get_many
+        for provider in cluster.provider_manager.providers():
+            orig = provider.get_pages
+
+            def counting(keys, _orig=orig, _pid=provider.provider_id):
+                self.get_pages_calls.append(_pid)
+                return _orig(keys)
+
+            provider.get_pages = counting
+
+
+def _leaf_shard_spread(cluster, blob, version, n_pages):
+    keys = [NodeKey(blob, version, o, 1) for o in range(n_pages)]
+    return {cluster.metadata._home(k) for k in keys}
+
+
+def test_get_pages_issued_before_final_traversal_level_completes():
+    """Tentpole, asserted structurally: with one shard's leaf batch stalled,
+    the leaves already delivered by the OTHER shard must have get_pages
+    fetches in flight — data transfer overlaps the rest of the level."""
+    cluster = make_cluster(n_metadata_providers=2, max_workers=8)
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(16 * PAGE, PAGE)
+    payload = (np.arange(16 * PAGE) % 251).astype(np.uint8)
+    handle.write(payload.copy(), 0)
+    # the write's leaf keys must span both shards, or there is nothing to
+    # overlap (hash placement is deterministic, so assert the premise)
+    assert _leaf_shard_spread(cluster, handle.blob_id, 1, 16) == {0, 1}
+
+    harness = _OverlapHarness(cluster, blocked_sid=0)
+    result = {}
+    t = threading.Thread(
+        target=lambda: result.update(data=handle.read(0, 16 * PAGE).data)
+    )
+    t.start()
+    try:
+        assert harness.blocked.wait(10)
+        # shard 0's final-level RPC is stalled -> the level has NOT completed;
+        # poll for the fetches streamed from shard 1's leaves
+        deadline = time.monotonic() + 5
+        while not harness.get_pages_calls and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert harness.get_pages_calls, (
+            "no get_pages issued while the final traversal level was stalled"
+        )
+    finally:
+        harness.release.set()
+        t.join(10)
+    np.testing.assert_array_equal(result["data"], payload)
+    cluster.close()
+
+
+def test_sync_read_keeps_the_phased_barrier():
+    """A/B contrast: a ``sync_read`` session issues NO page fetch until the
+    full traversal (including the stalled shard) completes."""
+    cluster = make_cluster(n_metadata_providers=2, max_workers=8)
+    sess = cluster.session(cache_bytes=0, sync_read=True)
+    handle = sess.create(16 * PAGE, PAGE)
+    handle.write(page(5, 16 * PAGE), 0)
+    assert _leaf_shard_spread(cluster, handle.blob_id, 1, 16) == {0, 1}
+
+    harness = _OverlapHarness(cluster, blocked_sid=0)
+    t = threading.Thread(target=lambda: handle.read(0, 16 * PAGE))
+    t.start()
+    try:
+        assert harness.blocked.wait(10)
+        time.sleep(0.1)  # give a broken barrier time to leak a fetch
+        assert not harness.get_pages_calls
+    finally:
+        harness.release.set()
+        t.join(10)
+    cluster.close()
+
+
+def test_stream_and_phased_reads_are_identical():
+    """Equivalence: the streaming pipeline and the phased baseline return
+    byte-identical results for a pile of awkward segments."""
+    cluster = make_cluster()
+    streamed = cluster.session(cache_bytes=0)
+    phased = cluster.session(cache_bytes=0, sync_read=True)
+    h = streamed.create(64 * PAGE, PAGE)
+    rng = np.random.default_rng(42)
+    # sparse writes leave implicit-zero holes for the traversal to mark
+    for off in (0, 7, 23, 40):
+        h.write(rng.integers(1, 255, 3 * PAGE, dtype=np.uint8), off * PAGE)
+    segs = [(0, 64 * PAGE), (PAGE // 2, 5 * PAGE), (9 * PAGE, 3),
+            (22 * PAGE + 1, 4 * PAGE), (63 * PAGE, 2 * PAGE), (5, 0)]
+    a = h.readv(segs)
+    b = phased.open(h.blob_id).readv(segs)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    cluster.close()
+
+
+# ------------------------------ assembly paths --------------------------------
+
+
+def test_assembly_matches_byte_oracle():
+    """The np.empty + explicit-zero-fill and aligned-concatenate assembly
+    paths against a flat byte oracle, including unwritten (implicit zero)
+    gaps that an uninitialized buffer would expose as garbage."""
+    cluster = make_cluster()
+    sess = cluster.session(cache_bytes=0)
+    h = sess.create(32 * PAGE, PAGE)
+    oracle = np.zeros(32 * PAGE, np.uint8)
+    rng = np.random.default_rng(7)
+    for off_page, n_pages in ((2, 3), (10, 1), (17, 6)):
+        buf = rng.integers(1, 255, n_pages * PAGE, dtype=np.uint8)
+        oracle[off_page * PAGE:(off_page + n_pages) * PAGE] = buf
+        h.write(buf.copy(), off_page * PAGE)
+    cases = [
+        (0, 32 * PAGE),          # aligned multi-page, holes included
+        (2 * PAGE, 3 * PAGE),    # aligned multi-page, fully present
+        (PAGE, PAGE),            # single whole page, implicit zero
+        (2 * PAGE + 5, PAGE),    # unaligned, single-page covered
+        (PAGE + 1, 3 * PAGE),    # unaligned spanning hole + data
+        (31 * PAGE + 7, 5 * PAGE),  # clamped at blob end
+    ]
+    outs = h.readv(cases)
+    for (off, size), got in zip(cases, outs):
+        size = min(size, 32 * PAGE - off)
+        np.testing.assert_array_equal(got, oracle[off:off + size])
+    cluster.close()
+
+
+def test_full_aligned_segment_avoids_per_page_loop_output():
+    """An aligned multi-page read returns one fresh contiguous buffer (the
+    concatenate path), never a view of a stored page."""
+    cluster = make_cluster()
+    sess = cluster.session(cache_bytes=0)
+    h = sess.create(8 * PAGE, PAGE)
+    h.write(page(9, 8 * PAGE), 0)
+    out = h.read(0, 4 * PAGE).data
+    assert out.flags.owndata and out.size == 4 * PAGE
+    np.testing.assert_array_equal(out, page(9, 4 * PAGE))
+    cluster.close()
+
+
+# ------------------------------ stride prefetch -------------------------------
+
+
+def _stream_session(cluster, **cfg):
+    return cluster.session(
+        cache_bytes=0,
+        prefetch=PrefetchConfig(**{"min_run": 2, "window_pages": 8,
+                                   "max_inflight": 2, **cfg}),
+    )
+
+
+def test_stride_prefetch_fills_ahead_and_serves_hits():
+    cluster = make_cluster(shared_cache_bytes=64 << 20)
+    sess = _stream_session(cluster)
+    h = sess.create(64 * PAGE, PAGE)
+    h.write(page(3, 64 * PAGE), 0)
+    cluster.gc(h.blob_id, [1])  # drop nothing, but keep things honest
+    stats = sess.stats
+    for i in range(3):  # third sequential read arms the detector
+        h.read(i * 2 * PAGE, 2 * PAGE)
+    assert sess.prefetcher.issued >= 1
+    assert sess.prefetcher.wait_idle(10)
+    # the next window is now RAM: no provider or metadata traffic at all
+    before_rounds = cluster.stats.data_rounds
+    h0 = stats.cache_hits
+    h.read(6 * PAGE, 2 * PAGE)
+    assert stats.cache_hits - h0 == 2
+    assert cluster.stats.data_rounds == before_rounds
+    cluster.close()
+
+
+def test_stride_prefetch_never_past_blob_end():
+    cluster = make_cluster(shared_cache_bytes=64 << 20)
+    sess = _stream_session(cluster, window_pages=32)
+    h = sess.create(16 * PAGE, PAGE)
+    h.write(page(1, 16 * PAGE), 0)
+    # sequential sweep right up to the last page: readahead must clamp
+    for i in range(8):
+        h.read(i * 2 * PAGE, 2 * PAGE)
+    assert sess.prefetcher.wait_idle(10)
+    shared = cluster.shared_cache
+    assert all(key[2] < 16 for key in shared._lru)  # no page past the end
+    cluster.close()
+
+
+def test_stride_prefetch_stays_behind_publish_frontier():
+    """Readahead only ever targets the version the reader resolved — an
+    unpublished concurrent write can never be pulled into any cache tier by
+    the prefetcher (the PR 4 coherence invariant, restated for prefetch)."""
+    cluster = make_cluster(shared_cache_bytes=64 << 20)
+    sess = _stream_session(cluster)
+    h = sess.create(64 * PAGE, PAGE)
+    h.write(page(1, 64 * PAGE), 0)  # v1 published
+
+    # v2 assigned but unpublished: its data put is stalled on a provider
+    provider = cluster.provider_manager.get_provider(0)
+    started, release = threading.Event(), threading.Event()
+    real_put = provider.put_pages
+
+    def blocked_put(items):
+        started.set()
+        assert release.wait(10)
+        return real_put(items)
+
+    provider.put_pages = blocked_put
+    writer = cluster.session(cache_bytes=0)
+    t = threading.Thread(
+        target=lambda: writer.open(h.blob_id).write(page(2, 4 * PAGE), 0)
+    )
+    t.start()
+    assert started.wait(10)
+    try:
+        for i in range(4):  # stride reads of v1 while v2 is in flight
+            h.read(i * 2 * PAGE, 2 * PAGE, version=1)
+        assert sess.prefetcher.wait_idle(10)
+        cached = set(cluster.shared_cache.cached_versions(h.blob_id))
+        assert 2 not in cached  # the unpublished frontier stayed unpolluted
+        assert sess.prefetcher.issued >= 1
+    finally:
+        release.set()
+        t.join(10)
+    cluster.close()
+
+
+def test_stride_prefetch_inflight_bound_drops_not_blocks():
+    cluster = make_cluster(shared_cache_bytes=64 << 20,
+                           page_service_seconds=0.05)
+    sess = _stream_session(cluster, max_inflight=1, window_pages=4)
+    h = sess.create(64 * PAGE, PAGE)
+    h.write(page(1, 64 * PAGE), 0)
+    t0 = time.monotonic()
+    for i in range(6):
+        h.read(i * PAGE, PAGE)
+    # the reads themselves paid service time, but nothing stacked behind a
+    # queue of readahead tasks (dropped observations are counted instead)
+    assert sess.prefetcher.issued + sess.prefetcher.skipped_inflight >= 1
+    assert time.monotonic() - t0 < 5
+    assert sess.prefetcher.wait_idle(10)
+    cluster.close()
+
+
+# ------------------------------- watch warmer ---------------------------------
+
+
+def test_watch_warmer_warms_fresh_version_for_cold_detectors():
+    cluster = make_cluster(shared_cache_bytes=64 << 20)
+    sess = cluster.session(cache_bytes=0)
+    h = sess.create(32 * PAGE, PAGE)
+    warmer = cluster.warm_on_publish(h.blob_id, top_pages=32)
+    h.write(page(4, 32 * PAGE), 0)
+    assert warmer.wait_warmed(1, timeout=10)
+    detector = cluster.session(cache_bytes=0)
+    got = detector.open(h.blob_id).read(0, 32 * PAGE).data
+    np.testing.assert_array_equal(got, page(4, 32 * PAGE))
+    assert detector.stats.cache_hits == 32  # first read fully warm
+    assert detector.stats.cache_misses == 0
+    assert warmer.pages_warmed == 32
+    cluster.close()
+
+
+def test_watch_warmer_uses_balancer_heat():
+    from repro.core import BalancerConfig
+
+    cluster = make_cluster(
+        shared_cache_bytes=64 << 20,
+        balancer_config=BalancerConfig(hot_threshold=2, check_interval=1000),
+    )
+    sess = cluster.session(cache_bytes=0)
+    h = sess.create(32 * PAGE, PAGE)
+    # heat pages 5-6 across two versions (cache keys are per version, so
+    # each versioned read is a real provider fetch feeding the balancer)
+    h.write(page(1, 32 * PAGE), 0)
+    h.readv([(5 * PAGE, 2 * PAGE)], version=1)
+    h.write(page(2, 32 * PAGE), 0)
+    h.readv([(5 * PAGE, 2 * PAGE)], version=2)
+    hot = cluster.replica_balancer.hottest_page_offsets(h.blob_id, 2)
+    assert set(hot) == {5, 6}
+    warmer = cluster.warm_on_publish(h.blob_id, top_pages=2)
+    h.write(page(3, 32 * PAGE), 0)  # v3: fresh frame
+    assert warmer.wait_warmed(3, timeout=10)
+    assert {k[2] for k in cluster.shared_cache._lru if k[1] == 3} == {5, 6}
+    cluster.close()
+
+
+def test_watch_warmer_respects_gc_and_snapshot_pins():
+    cluster = make_cluster(shared_cache_bytes=64 << 20)
+    sess = cluster.session(cache_bytes=0)
+    h = sess.create(16 * PAGE, PAGE)
+    warmer = cluster.warm_on_publish(h.blob_id, top_pages=16)
+    h.write(page(1, 16 * PAGE), 0)
+    assert warmer.wait_warmed(1, timeout=10)
+    pin = h.at(1)  # snapshot pin on the warmed version
+    h.write(page(2, 16 * PAGE), 0)
+    assert warmer.wait_warmed(2, timeout=10)
+    # GC keeping only v2 must spare the pinned v1 — including its warm pages
+    cluster.gc(h.blob_id, keep_versions=[2])
+    assert 1 in cluster.shared_cache.cached_versions(h.blob_id)
+    np.testing.assert_array_equal(pin.read(0, 16 * PAGE), page(1, 16 * PAGE))
+    # release the pin: the next GC purges the collected version's warm pages
+    pin.release()
+    cluster.gc(h.blob_id, keep_versions=[2])
+    assert 1 not in cluster.shared_cache.cached_versions(h.blob_id)
+    np.testing.assert_array_equal(
+        sess.open(h.blob_id).read(0, 16 * PAGE).data, page(2, 16 * PAGE)
+    )
+    cluster.close()
+
+
+def test_watch_warmer_frame_stride_skips_mid_frame_versions():
+    cluster = make_cluster(shared_cache_bytes=64 << 20)
+    sess = cluster.session(cache_bytes=0)
+    h = sess.create(16 * PAGE, PAGE)
+    warmer = cluster.warm_on_publish(h.blob_id, top_pages=16, frame_versions=4)
+    for v in range(4):  # one frame = 4 region patches
+        h.write(page(v + 1, 4 * PAGE), v * 4 * PAGE)
+    assert warmer.wait_warmed(4, timeout=10)
+    assert set(warmer.warmed_versions()) == {4}  # only the frame boundary
+    cluster.close()
+
+
+# --------------------- cross-writev metadata coalescing -----------------------
+
+
+def test_async_writes_coalesce_metadata_rounds():
+    """Satellite: small writes streaming through the write_async window share
+    aggregated shard rounds via group commit instead of paying one round
+    each; results stay byte-identical to looped writes."""
+    cluster = make_cluster(metadata_latency_seconds=0.05, max_workers=16)
+    sess = cluster.session(cache_bytes=0, max_inflight_writes=8)
+    h = sess.create(64 * PAGE, PAGE)
+    futures = [h.write_async(page(i + 1), i * PAGE) for i in range(8)]
+    versions = [f.result() for f in futures]
+    assert sorted(versions) == list(range(1, 9))
+    # 8 concurrent writes against coalesce_max_rounds round slots: with a
+    # 50ms RTT the overflow writes queue and share group commits, so the
+    # whole burst costs strictly fewer rounds than one per write
+    assert cluster.metadata.coalesced_rounds < 8
+    reader = cluster.session(cache_bytes=0)
+    got = reader.open(h.blob_id).read(0, 8 * PAGE).data
+    np.testing.assert_array_equal(
+        got, np.concatenate([page(i + 1) for i in range(8)])
+    )
+    cluster.close()
+
+
+def test_coalesced_flush_isolates_shard_failures():
+    """A shard failure inside a group commit fails exactly the writes with
+    nodes on that shard — not every write that happened to share the round."""
+    from repro.core.dht import MetadataDHT, ProviderFailed
+    from repro.core.segment_tree import TreeNode
+
+    dht = MetadataDHT(2)
+    a = TreeNode(NodeKey(0, 1, 0, 1), page=(0, 0))
+    b = None  # find a key deterministically homed on the OTHER shard
+    for off in range(8):
+        cand = TreeNode(NodeKey(0, 2, off, 1), page=(0, 1))
+        if dht._home(cand.key) != dht._home(a.key):
+            b = cand
+            break
+    assert b is not None
+    dht.fail_shard(dht._home(a.key))
+    fa = dht.put_nodes_coalesced([a])[0]
+    fb = dht.put_nodes_coalesced([b])[0]
+    with pytest.raises(ProviderFailed):
+        fa.result(timeout=10)  # homed on the failed shard
+    fb.result(timeout=10)  # shared a round (or not) — still durable
+    assert dht.shards[dht._home(b.key)].get(b.key) is not None
+    dht.close()
