@@ -1,0 +1,27 @@
+"""Concurrency correctness toolkit.
+
+Three cooperating checkers for the repo's lock-free design:
+
+* :mod:`repro.analysis.lock_order` — the declared global lock hierarchy.
+* :mod:`repro.analysis.lockwatch` — opt-in runtime watchdog
+  (``REPRO_LOCKWATCH=1``): acquisition-graph recording, cycle detection,
+  join-under-lock hooks. Zero overhead when disabled.
+* :mod:`repro.analysis.lint` — static AST lint enforcing the hierarchy,
+  the no-blocking-under-lock rule and the forbidden-API rules
+  (``tools/lint_concurrency.py`` is the CLI).
+* :mod:`repro.analysis.schedules` — deterministic interleaving explorer
+  asserting the coherence invariant over every bounded schedule of the
+  hairiest operation pairs.
+
+This package must stay import-light: ``core/`` imports ``lockwatch`` at
+module load, so nothing here may import ``repro.core`` at the top level
+(``schedules`` imports it lazily inside its builders).
+"""
+
+from repro.analysis import lock_order  # noqa: F401
+from repro.analysis.lockwatch import (  # noqa: F401
+    enabled,
+    make_condition,
+    make_lock,
+    watch,
+)

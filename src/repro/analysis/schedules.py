@@ -1,0 +1,485 @@
+"""Deterministic interleaving explorer for cross-actor coherence scenarios.
+
+The store's coherence argument rests on a small number of cross-thread
+interactions: a writer publishing while a reader fills the shared tier, GC
+racing a snapshot pin, async-write windows racing ``flush``, the watch
+warmer racing demand reads. Production runs sample one arbitrary
+interleaving per execution; this module instead *enumerates every bounded
+interleaving* of those actors cooperatively and asserts the coherence
+invariant after every step of every schedule.
+
+Model: each scenario provides actors as ordered step lists (plain callables
+against a freshly built cluster). A *schedule* is one interleaving of the
+steps that preserves each actor's order — exactly the schedules a
+sequentially consistent machine could produce at API granularity. For every
+schedule the scenario world is rebuilt from scratch, the steps run in
+schedule order on ONE thread (so there is no hidden nondeterminism), and the
+invariant is evaluated after every step:
+
+* the **shared cache tier only ever holds pages of published versions**
+  (:func:`shared_tier_violations` — the paper's frontier rule), and
+* any scenario-specific checks recorded in ``ctx.errors`` (torn reads,
+  lost pins, dropped writes).
+
+This is not a model checker over arbitrary preemption points — steps are
+atomic API calls — but every ordering bug reachable at API granularity is
+found exhaustively, deterministically, and with a replayable schedule
+trace. The interleaving count is the multinomial coefficient of the step
+counts, so scenarios stay small by construction; :func:`explore` refuses
+(rather than silently truncates) scenarios whose schedule count exceeds
+``max_schedules``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import traceback
+from types import SimpleNamespace
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Scenario",
+    "Failure",
+    "Report",
+    "explore",
+    "interleavings",
+    "shared_tier_violations",
+    "SCENARIOS",
+    "run_all",
+]
+
+
+# -- schedule enumeration ----------------------------------------------------
+
+def n_interleavings(counts: Sequence[int]) -> int:
+    total, denom = sum(counts), 1
+    for c in counts:
+        denom *= math.factorial(c)
+    return math.factorial(total) // denom
+
+
+def interleavings(counts: Sequence[int]) -> Iterator[Tuple[int, ...]]:
+    """Every merge of ``counts[i]`` ordered steps per actor ``i`` that
+    preserves each actor's internal order, in lexicographic actor order."""
+    remaining = list(counts)
+
+    def rec(prefix: List[int]) -> Iterator[Tuple[int, ...]]:
+        if not any(remaining):
+            yield tuple(prefix)
+            return
+        for i, left in enumerate(remaining):
+            if left:
+                remaining[i] -= 1
+                prefix.append(i)
+                yield from rec(prefix)
+                prefix.pop()
+                remaining[i] += 1
+
+    return rec([])
+
+
+# -- scenario protocol -------------------------------------------------------
+
+@dataclasses.dataclass
+class Scenario:
+    """``build`` creates a fresh world (returns a ctx namespace that MUST
+    carry ``cluster`` and an ``errors`` list); ``actors`` returns
+    ``[(actor_name, [step, ...]), ...]`` with steps closed over the ctx;
+    ``finalize`` (optional) quiesces the world before the last invariant
+    evaluation (e.g. a final ``flush``)."""
+
+    name: str
+    build: Callable[[], SimpleNamespace]
+    actors: Callable[[SimpleNamespace], List[Tuple[str, List[Callable[[], None]]]]]
+    finalize: Optional[Callable[[SimpleNamespace], None]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Failure:
+    scenario: str
+    schedule: Tuple[str, ...]  # actor step labels in execution order
+    step: int  # index into schedule after which the invariant broke
+    errors: Tuple[str, ...]
+
+    def __str__(self) -> str:
+        trace = " -> ".join(
+            f"[{s}]" if i == self.step else s
+            for i, s in enumerate(self.schedule)
+        )
+        errs = "; ".join(self.errors)
+        return f"{self.scenario}: schedule {trace}: {errs}"
+
+
+@dataclasses.dataclass
+class Report:
+    scenario: str
+    n_schedules: int
+    n_steps: int
+    failures: List[Failure]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def __str__(self) -> str:
+        status = "OK" if self.ok else f"{len(self.failures)} FAILING"
+        return (
+            f"{self.scenario}: {self.n_schedules} schedules x "
+            f"{self.n_steps} steps — {status}"
+        )
+
+
+# -- the coherence invariant -------------------------------------------------
+
+def shared_tier_violations(cluster) -> List[str]:
+    """The paper's frontier rule: the SHARED cache tier may only ever hold
+    pages of published, non-aborted versions (private session caches may
+    hold a writer's own unpublished pages; the shared tier never may).
+    Returns one message per offending (blob, version)."""
+    cache = getattr(cluster, "shared_cache", None)
+    if cache is None:
+        return []
+    vm = cluster.version_manager
+    out: List[str] = []
+    for blob_id in vm.blob_ids():
+        for version in cache.cached_versions(blob_id):
+            if version == 0:
+                continue  # v0 is the implicit all-zeros base, always readable
+            if not vm.is_published(blob_id, version):
+                out.append(
+                    f"shared tier holds blob {blob_id} v{version} "
+                    f"which is not published"
+                )
+            elif vm.is_aborted(blob_id, version):
+                out.append(
+                    f"shared tier holds blob {blob_id} v{version} "
+                    f"which was aborted"
+                )
+    return out
+
+
+def _invariant(ctx: SimpleNamespace) -> List[str]:
+    out = shared_tier_violations(ctx.cluster)
+    out.extend(ctx.errors)
+    ctx.errors = []
+    return out
+
+
+# -- the explorer ------------------------------------------------------------
+
+def explore(scenario: Scenario, max_schedules: int = 512) -> Report:
+    """Run ``scenario`` under EVERY interleaving of its actors' steps,
+    rebuilding the world per schedule and checking the invariant after every
+    step. Raises ``ValueError`` if the schedule space exceeds
+    ``max_schedules`` — bound the scenario, don't sample it silently."""
+    probe = scenario.build()
+    try:
+        actor_list = scenario.actors(probe)
+    finally:
+        probe.cluster.close()
+    counts = [len(steps) for _, steps in actor_list]
+    total = n_interleavings(counts)
+    if total > max_schedules:
+        raise ValueError(
+            f"{scenario.name}: {total} interleavings exceed the "
+            f"max_schedules bound of {max_schedules} — shrink the scenario"
+        )
+
+    failures: List[Failure] = []
+    n_run = 0
+    for order in interleavings(counts):
+        n_run += 1
+        ctx = scenario.build()
+        actors = scenario.actors(ctx)
+        cursors = [0] * len(actors)
+        labels: List[str] = []
+        try:
+            broke = False
+            for idx, actor_i in enumerate(order):
+                name, steps = actors[actor_i]
+                step = steps[cursors[actor_i]]
+                labels.append(f"{name}.{cursors[actor_i]}")
+                cursors[actor_i] += 1
+                try:
+                    step()
+                except Exception:
+                    ctx.errors.append(
+                        f"step {labels[-1]} raised:\n"
+                        + traceback.format_exc(limit=4)
+                    )
+                errors = _invariant(ctx)
+                if errors:
+                    failures.append(Failure(
+                        scenario.name, tuple(labels), idx, tuple(errors)))
+                    broke = True
+                    break
+            if not broke and scenario.finalize is not None:
+                try:
+                    scenario.finalize(ctx)
+                except Exception:
+                    ctx.errors.append(
+                        "finalize raised:\n" + traceback.format_exc(limit=4))
+                errors = _invariant(ctx)
+                if errors:
+                    failures.append(Failure(
+                        scenario.name, tuple(labels), len(order), tuple(errors)))
+        finally:
+            ctx.cluster.close()
+    return Report(scenario.name, n_run, sum(counts), failures)
+
+
+# -- world builders ----------------------------------------------------------
+
+_PAGE = 256  # tiny pages keep every schedule's build cheap
+_PAGES = 4
+
+
+def _fill(value: int, n_bytes: int = _PAGE * _PAGES) -> np.ndarray:
+    return np.full(n_bytes, value % 251, dtype=np.uint8)
+
+
+def _base_ctx(shared_cache: bool = True) -> SimpleNamespace:
+    from repro.core.cluster import Cluster
+
+    cluster = Cluster(
+        n_data_providers=2,
+        n_metadata_providers=2,
+        max_workers=2,
+        shared_cache_bytes=(1 << 20) if shared_cache else 0,
+        hot_replicas=False,
+    )
+    ctx = SimpleNamespace(cluster=cluster, errors=[])
+    ctx.blob_id = cluster.alloc(_PAGE * _PAGES, _PAGE)
+    return ctx
+
+
+def _check_uniform(ctx: SimpleNamespace, data: np.ndarray, label: str) -> None:
+    values = set(np.unique(data).tolist())
+    published = {
+        v % 251
+        for v in range(
+            0, ctx.cluster.version_manager.latest_published(ctx.blob_id) + 1
+        )
+    }
+    if len(values) > 1:
+        ctx.errors.append(
+            f"{label}: torn read mixes page values {sorted(values)}")
+    elif values and not values <= published:
+        ctx.errors.append(
+            f"{label}: read returned value {sorted(values)} which no "
+            f"published version ever wrote")
+
+
+# -- scenario: publish frontier vs shared-tier fill --------------------------
+
+def _build_publish_vs_fill() -> SimpleNamespace:
+    ctx = _base_ctx()
+    ctx.writer = ctx.cluster.session()
+    ctx.reader = ctx.cluster.session(cache_bytes=0)  # all fills hit shared tier
+    ctx.whandle = ctx.writer.open(ctx.blob_id)
+    ctx.rhandle = ctx.reader.open(ctx.blob_id)
+    ctx.whandle.write(_fill(1), 0)  # v1 published before the race starts
+    return ctx
+
+
+def _actors_publish_vs_fill(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    def write(value):
+        return lambda: ctx.whandle.write(_fill(value), 0)
+
+    def read():
+        def step():
+            data = ctx.rhandle.read(0, _PAGE * _PAGES).data
+            _check_uniform(ctx, data, "demand read")
+        return step
+
+    return [
+        ("writer", [write(2), write(3)]),
+        ("reader", [read(), read(), read()]),
+    ]
+
+
+# -- scenario: Cluster.gc vs Snapshot pin ------------------------------------
+
+def _build_gc_vs_pin() -> SimpleNamespace:
+    ctx = _base_ctx()
+    ctx.session = ctx.cluster.session()
+    ctx.handle = ctx.session.open(ctx.blob_id)
+    ctx.handle.write(_fill(1), 0)  # v1
+    ctx.handle.write(_fill(2), 0)  # v2
+    ctx.snap = None
+    ctx.gc_done = False
+    ctx.pinned_before_gc = False
+    return ctx
+
+
+def _actors_gc_vs_pin(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    def pin():
+        ctx.snap = ctx.handle.at(1)
+        # the pin contract protects against FUTURE GC passes only: pinning
+        # after a completed pass succeeds but the first read fails
+        # ("the pin protects the future, not the past" — BlobHandle.at)
+        ctx.pinned_before_gc = not ctx.gc_done
+
+    def read_pinned():
+        if ctx.snap is None:
+            return
+        try:
+            data = ctx.snap.read(0, _PAGE * _PAGES)
+        except (KeyError, ValueError) as exc:
+            if ctx.pinned_before_gc:
+                ctx.errors.append(
+                    f"v1 was pinned BEFORE the GC pass yet the pinned read "
+                    f"failed: {exc!r}")
+            return  # pin lost the race to a completed pass: the contract
+        if not (data == _fill(1)).all():
+            ctx.errors.append("pinned v1 read returned non-v1 data")
+
+    def release():
+        if ctx.snap is not None:
+            ctx.snap.release()
+
+    def gc():
+        ctx.cluster.gc(ctx.blob_id, [2])
+        ctx.gc_done = True
+
+    return [
+        ("pinner", [pin, read_pinned, release]),
+        ("collector", [gc]),
+    ]
+
+
+# -- scenario: Cluster.gc vs a shared-tier cached read -----------------------
+
+def _build_gc_vs_cached_read() -> SimpleNamespace:
+    ctx = _base_ctx()
+    ctx.session = ctx.cluster.session(cache_bytes=0)
+    ctx.handle = ctx.session.open(ctx.blob_id)
+    ctx.handle.write(_fill(1), 0)  # v1
+    ctx.handle.write(_fill(2), 0)  # v2
+    ctx.handle.read(0, _PAGE * _PAGES, version=1)  # shared tier holds v1
+    return ctx
+
+
+def _actors_gc_vs_cached_read(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    def read_v1():
+        try:
+            data = ctx.handle.read(0, _PAGE * _PAGES, version=1).data
+        except (KeyError, ValueError):
+            return  # v1 already collected: failing the read is the contract
+        if not (data == _fill(1)).all():
+            ctx.errors.append(
+                "read of retained v1 returned non-v1 data (stale or torn "
+                "cache fill survived GC)")
+
+    def gc():
+        ctx.cluster.gc(ctx.blob_id, [2])
+
+    return [
+        ("reader", [read_v1, read_v1]),
+        ("collector", [gc]),
+    ]
+
+
+# -- scenario: write_async window vs flush -----------------------------------
+
+def _build_write_async_vs_flush() -> SimpleNamespace:
+    ctx = _base_ctx()
+    ctx.session = ctx.cluster.session()
+    ctx.handle = ctx.session.open(ctx.blob_id)
+    ctx.handle.write(_fill(1), 0)  # v1
+    return ctx
+
+
+def _actors_write_async_vs_flush(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    def write_async(value):
+        return lambda: ctx.handle.write_async(_fill(value), 0)
+
+    def flush():
+        ctx.session.flush()
+
+    return [
+        ("writer", [write_async(2), write_async(3)]),
+        ("flusher", [flush, flush]),
+    ]
+
+
+def _finalize_write_async_vs_flush(ctx) -> None:
+    ctx.session.flush()
+    latest = ctx.handle.latest_published()
+    if latest != 3:
+        ctx.errors.append(
+            f"after final flush, frontier is v{latest}, expected v3 — an "
+            f"async write was dropped or published out of order")
+    data = ctx.handle.read(0, _PAGE * _PAGES).data
+    if not (data == _fill(3)).all():
+        ctx.errors.append("final read does not see the last async write")
+
+
+# -- scenario: WatchWarmer fill vs demand read -------------------------------
+
+def _build_warmer_vs_demand() -> SimpleNamespace:
+    ctx = _base_ctx()
+    ctx.session = ctx.cluster.session(cache_bytes=0)
+    ctx.handle = ctx.session.open(ctx.blob_id)
+    ctx.handle.write(_fill(1), 0)  # v1
+    # frame_versions far beyond any version this scenario publishes: the
+    # warmer's own thread never fires, so every warm pass below is a
+    # deterministic explorer step instead of a background race
+    ctx.warmer = ctx.cluster.warm_on_publish(
+        ctx.blob_id, frame_versions=1 << 30)
+    return ctx
+
+
+def _actors_warmer_vs_demand(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    def publish(value):
+        return lambda: ctx.handle.write(_fill(value), 0)
+
+    def warm():
+        version = ctx.handle.latest_published()
+        ctx.warmer._warm(version)
+
+    def read():
+        data = ctx.handle.read(0, _PAGE * _PAGES).data
+        _check_uniform(ctx, data, "demand read vs warmer")
+
+    return [
+        ("publisher", [publish(2)]),
+        ("warmer", [warm, warm]),
+        ("detector", [read, read]),
+    ]
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s
+    for s in [
+        Scenario("publish_vs_shared_fill",
+                 _build_publish_vs_fill, _actors_publish_vs_fill),
+        Scenario("gc_vs_pin", _build_gc_vs_pin, _actors_gc_vs_pin),
+        Scenario("gc_vs_cached_read",
+                 _build_gc_vs_cached_read, _actors_gc_vs_cached_read),
+        Scenario("write_async_vs_flush",
+                 _build_write_async_vs_flush, _actors_write_async_vs_flush,
+                 finalize=_finalize_write_async_vs_flush),
+        Scenario("warmer_vs_demand_read",
+                 _build_warmer_vs_demand, _actors_warmer_vs_demand),
+    ]
+}
+
+
+def run_all(max_schedules: int = 512) -> List[Report]:
+    """Explore every registered scenario; returns one report per scenario."""
+    return [explore(s, max_schedules) for s in SCENARIOS.values()]
+
+
+if __name__ == "__main__":  # pragma: no cover - manual driver
+    bad = False
+    for report in run_all():
+        print(report)
+        for failure in report.failures:
+            bad = True
+            print(f"  {failure}")
+    raise SystemExit(1 if bad else 0)

@@ -33,13 +33,13 @@ Migration map (old → new)::
 
 from __future__ import annotations
 
-import threading
 import warnings
 from concurrent.futures import Future
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.cluster import (
     BlobHandle,
     Cluster,
@@ -98,7 +98,7 @@ class BlobStore:
         #: blob_id -> handle; blob geometry is immutable after alloc, so the
         #: facade must not pay a fresh blob_info lock round-trip per call
         self._handles: dict = {}
-        self._handles_lock = threading.Lock()
+        self._handles_lock = make_lock("BlobStore._handles_lock")
 
     # -- shared-plane attributes the old object exposed directly ---------------
     @property

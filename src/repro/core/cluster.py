@@ -55,6 +55,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
 from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
@@ -123,7 +124,7 @@ class _PageFetchStream:
     def __init__(self, session: "Session", page_size: int) -> None:
         self._session = session
         self._page_size = page_size
-        self._lock = threading.Lock()
+        self._lock = make_lock("_PageFetchStream._lock")
         self._seen: Set[int] = set()
         self._read_load: Optional[Dict[int, int]] = None
         #: pending items per provider, drained by at most one in-flight
@@ -290,20 +291,20 @@ class Cluster:
             else None
         )
         self._next_provider_id = n_data_providers
-        self._membership_lock = threading.Lock()
+        self._membership_lock = make_lock("Cluster._membership_lock")
         #: registered sessions (GC must purge every private cache tier)
         self._sessions: List["Session"] = []
-        self._sessions_lock = threading.Lock()
+        self._sessions_lock = make_lock("Cluster._sessions_lock")
         #: snapshot pins: blob_id -> version -> refcount; GC keeps pinned
         #: versions alive no matter what ``keep_versions`` says
         self._pins: Dict[int, Dict[int, int]] = {}
-        self._pins_lock = threading.Lock()
+        self._pins_lock = make_lock("Cluster._pins_lock")
         #: linearizes snapshot creation against GC: a pin is taken either
         #: strictly before a GC pass reads the pin set (and is honored) or
         #: strictly after the pass completes — never mid-sweep, where the
         #: just-pinned version could still be collected (``_pins_lock`` alone
         #: cannot give that guarantee; it is held only for the dict ops)
-        self._gc_guard = threading.Lock()
+        self._gc_guard = make_lock("Cluster._gc_guard")
         #: monotonically numbers sessions (diversifies their RNG streams)
         self._session_counter = 0
         self._max_workers = max_workers
@@ -312,11 +313,12 @@ class Cluster:
         #: and a main-pool worker doing that join could deadlock a saturated
         #: pool — so background fills get their own lane (lazily spawned)
         self._aux_pool: Optional[ThreadPoolExecutor] = None
-        self._aux_lock = threading.Lock()
+        self._aux_lock = make_lock("Cluster._aux_lock")
         self._aux_closed = False
+        self._closed = False
         #: live watch-warmers, stopped on close
         self._warmers: List[WatchWarmer] = []
-        self._warmers_lock = threading.Lock()
+        self._warmers_lock = make_lock("Cluster._warmers_lock")
 
     # -- sessions ------------------------------------------------------------
     def session(
@@ -526,10 +528,19 @@ class Cluster:
         return sum(p.used_bytes() for p in self.provider_manager.providers())
 
     def close(self) -> None:
+        """Tear the shared plane down. Idempotent: concurrent/repeated calls
+        after the first are no-ops. Warmer threads are joined with a bounded
+        timeout so a wedged warmer cannot hang the close (and a watchdog-
+        enabled test run cannot leak instrumented threads between tests)."""
+        with self._aux_lock:
+            if self._closed:
+                return
+            self._closed = True
         with self._warmers_lock:
             warmers, self._warmers = self._warmers, []
         for warmer in warmers:
-            warmer.stop()  # warmers own sessions + fill tasks: stop them first
+            # warmers own sessions + fill tasks: stop them first
+            warmer.stop(timeout=5.0)
         with self._aux_lock:
             aux, self._aux_pool = self._aux_pool, None
             self._aux_closed = True
@@ -596,8 +607,8 @@ class Session:
         self.max_inflight_writes = max_inflight_writes
         self._write_window = threading.BoundedSemaphore(max_inflight_writes)
         self._writer_pool: Optional[ThreadPoolExecutor] = None
-        self._writer_pool_lock = threading.Lock()
-        self._async_lock = threading.Lock()
+        self._writer_pool_lock = make_lock("Session._writer_pool_lock")
+        self._async_lock = make_lock("Session._async_lock")
         self._async_writes: List[Future] = []
         self._pool = cluster._pool
         # per-session stream, DISTINCT per session: N sessions seeded alike
@@ -871,7 +882,8 @@ class Session:
             # flush()/close() so their errors cannot vanish unobserved
             self._async_writes = [
                 f for f in self._async_writes
-                if not f.done() or f.exception() is not None
+                # done() guards the exception() call: it cannot block here
+                if not f.done() or f.exception() is not None  # lint: allow(blocking-under-lock)
             ]
             self._async_writes.append(future)
         return future
@@ -1221,10 +1233,13 @@ class Session:
             futures, self._async_writes = self._async_writes, []
         for f in futures:
             f.exception()
+        # detach the pool under the lock, shut it down OUTSIDE it: a writer
+        # task that touches the session while close() waits for it would
+        # otherwise deadlock on _writer_pool_lock
         with self._writer_pool_lock:
-            if self._writer_pool is not None:
-                self._writer_pool.shutdown(wait=True)
-                self._writer_pool = None
+            pool, self._writer_pool = self._writer_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
         self.cluster._forget_session(self)
 
     def __enter__(self) -> "Session":
@@ -1433,7 +1448,7 @@ class Snapshot:
         self._total_pages = total_pages
         self._page_size = page_size
         self._pinned = True
-        self._pin_lock = threading.Lock()
+        self._pin_lock = make_lock("Snapshot._pin_lock")
 
     @property
     def blob_id(self) -> int:

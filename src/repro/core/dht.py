@@ -22,6 +22,7 @@ from collections import defaultdict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, TypeVar
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.segment_tree import NodeKey, TreeNode
 
 _T = TypeVar("_T")
@@ -61,7 +62,9 @@ class TrafficStats:
     per_dest_write_bytes: Dict[int, int] = dataclasses.field(
         default_factory=lambda: defaultdict(int)
     )
-    _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock, repr=False)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=lambda: make_lock("TrafficStats._lock"), repr=False
+    )
 
     def record(self, dest: int, n_messages: int, n_bytes: int) -> None:
         with self._lock:
@@ -206,14 +209,14 @@ class MetadataDHT:
         self.stats = stats or TrafficStats()
         self._executor = executor
         self._owns_executor = False
-        self._executor_lock = threading.Lock()
+        self._executor_lock = make_lock("MetadataDHT._executor_lock")
         # group-commit state for put_nodes_coalesced: writes arriving while
         # coalesce_max_rounds rounds are already in flight pile up here and
         # ride the next round together. The bound matters both ways: with
         # unbounded rounds nothing ever coalesces (that is put_nodes_async),
         # and with ONE serialized round a lone streamer pays +0.5 RTT per
         # write for no benefit — concurrent wire RPCs genuinely overlap
-        self._coalesce_lock = threading.Lock()
+        self._coalesce_lock = make_lock("MetadataDHT._coalesce_lock")
         self._coalesce_pending: List[Tuple[List[TreeNode], Future]] = []
         self._coalesce_active = 0
         self.coalesce_max_rounds = 4
@@ -248,11 +251,17 @@ class MetadataDHT:
         return [f.result() for f in futures]
 
     def close(self) -> None:
+        # detach under the lock, shut down OUTSIDE it: shutdown(wait=True)
+        # joins pool workers, and a worker calling _pool() while close()
+        # blocks on it inside _executor_lock would deadlock
+        pool: Optional[ThreadPoolExecutor] = None
         with self._executor_lock:
             if self._owns_executor and self._executor is not None:
-                self._executor.shutdown(wait=True)
+                pool = self._executor
                 self._executor = None
                 self._owns_executor = False
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     def _home(self, key: NodeKey) -> int:
         return hash((key.blob_id, key.version, key.offset, key.size)) % len(self.shards)

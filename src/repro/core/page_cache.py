@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.dht import TrafficStats
 
 #: Cache key: (blob_id, version, page_index).
@@ -79,7 +80,7 @@ class PageCache:
             raise ValueError("capacity_bytes must be positive")
         self.capacity_bytes = capacity_bytes
         self.stats = stats or TrafficStats()
-        self._lock = threading.Lock()
+        self._lock = make_lock("PageCache._lock")
         #: key -> (page, budget charge); the charge is usually page.nbytes
         #: but nominal for entries sharing a buffer (zero pages)
         self._lru: "OrderedDict[CacheKey, Tuple[np.ndarray, int]]" = OrderedDict()

@@ -42,6 +42,8 @@ import time
 from concurrent.futures import Future, TimeoutError as FutureTimeout
 from typing import TYPE_CHECKING, Dict, List, Optional, Set
 
+from repro.analysis.lockwatch import make_condition, make_lock
+
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (cluster imports us)
     from repro.core.cluster import Cluster, Session
 
@@ -84,7 +86,7 @@ class StridePrefetcher:
     ) -> None:
         self._session = session
         self.config = config or PrefetchConfig()
-        self._lock = threading.Lock()
+        self._lock = make_lock("StridePrefetcher._lock")
         self._state: Dict[int, _BlobStride] = {}
         self._inflight: Set[Future] = set()
         #: readahead issues / pages covered / observations dropped at the
@@ -222,7 +224,7 @@ class WatchWarmer:
         self._handle = self._session.open(blob_id)
         self._watch = self._handle.watch()
         self._stop = threading.Event()
-        self._cv = threading.Condition()
+        self._cv = make_condition("WatchWarmer._cv")
         self._warmed: Dict[int, int] = {}  # version -> pages filled
         self.pages_warmed = 0
         self._thread = threading.Thread(
@@ -298,11 +300,13 @@ class WatchWarmer:
         with self._cv:
             return dict(self._warmed)
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 10.0) -> None:
         """Stop the warming thread and release the warmer's session
-        (idempotent; called by :meth:`Cluster.close`)."""
+        (idempotent; called by :meth:`Cluster.close`). The join is bounded by
+        ``timeout`` — a warm pass wedged on a dead provider must not hang the
+        caller's close; the daemon thread then dies with the process."""
         if self._stop.is_set():
             return
         self._stop.set()
-        self._thread.join(timeout=10)
+        self._thread.join(timeout=timeout)
         self._session.close()

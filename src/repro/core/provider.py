@@ -22,12 +22,12 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.dht import ProviderFailed, TrafficStats
 from repro.core.segment_tree import PageRef
 
@@ -48,12 +48,21 @@ class DataProvider:
         self.provider_id = provider_id
         self.page_service_seconds = page_service_seconds
         self._pages: Dict[int, np.ndarray] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("DataProvider._lock")
         self.failed = False
 
     def _serve(self, n_pages: int) -> None:
         if self.page_service_seconds > 0.0 and n_pages > 0:
             time.sleep(self.page_service_seconds * n_pages)
+
+    def set_failed(self, failed: bool) -> None:
+        """Flip the failure-injection flag under this provider's own lock, so
+        the transition serializes against in-flight ``put_pages``/``get_pages``
+        (which check ``failed`` under the same lock): a request observes the
+        provider strictly before or strictly after the transition, never a
+        torn mid-request flip."""
+        with self._lock:
+            self.failed = failed
 
     def put_pages(self, items: Sequence[Tuple[int, np.ndarray]]) -> None:
         """Store pages zero-copy: the given arrays (typically read-only views
@@ -126,7 +135,7 @@ class ProviderManager:
         #: heap pushes + pops, for complexity assertions in tests
         self.placement_ops = 0
         self._page_key_counter = itertools.count()
-        self._lock = threading.Lock()
+        self._lock = make_lock("ProviderManager._lock")
         self.stats = stats or TrafficStats()
 
     # -- membership (dynamic join/leave, paper §III.A) ---------------------
@@ -227,15 +236,19 @@ class ProviderManager:
                     self._push(pid)
 
     # -- failure injection ---------------------------------------------------
+    # The manager lock only resolves the provider; the flag itself flips
+    # under the PROVIDER's lock (set_failed), strictly after the manager lock
+    # is released — manager(level 4) -> provider(level 5) nesting is legal but
+    # unnecessary here, and the provider lock is what put/get check under.
     def fail_provider(self, provider_id: int) -> None:
         with self._lock:
             provider = self._providers[provider_id]
-        provider.failed = True
+        provider.set_failed(True)
 
     def recover_provider(self, provider_id: int) -> None:
         with self._lock:
             provider = self._providers[provider_id]
-        provider.failed = False
+        provider.set_failed(False)
 
     def load_snapshot(self) -> Dict[int, int]:
         with self._lock:

@@ -29,9 +29,9 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import random
-import threading
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.provider import ProviderManager
 from repro.core.segment_tree import NodeKey, PageRef, TreeNode
@@ -72,10 +72,10 @@ class ReplicaBalancer:
         self.stats = stats
         self.config = config or BalancerConfig()
         #: guards _heat/_promoted/_since_check; held only for dict ops
-        self._heat_lock = threading.Lock()
+        self._heat_lock = make_lock("ReplicaBalancer._heat_lock")
         #: serializes promotion/demotion passes (and their node rewrites);
         #: the read path never blocks on it
-        self._rebalance_lock = threading.Lock()
+        self._rebalance_lock = make_lock("ReplicaBalancer._rebalance_lock")
         #: per-leaf fetch counters + the freshest node observed for that key
         self._heat: Dict[NodeKey, Tuple[int, TreeNode]] = {}
         #: promoted (extra) replicas per leaf — the only ones demote may drop

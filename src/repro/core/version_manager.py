@@ -24,11 +24,11 @@ that will never report success.
 from __future__ import annotations
 
 import dataclasses
-import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.lockwatch import make_condition, make_lock
 from repro.core.segment_tree import BorderLink, ZERO_VERSION, compute_border_links
 
 
@@ -68,8 +68,10 @@ class VersionManager:
     def __init__(self) -> None:
         self._blobs: Dict[int, _BlobState] = {}
         self._blob_id_counter = 0
-        self._lock = threading.Lock()
-        self._published_cv = threading.Condition(self._lock)
+        self._lock = make_lock("VersionManager._lock")
+        self._published_cv = make_condition(
+            "VersionManager._published_cv", lock=self._lock
+        )
         self.journal: List[JournalEntry] = []
 
     # -- ALLOC ---------------------------------------------------------------
@@ -93,6 +95,13 @@ class VersionManager:
         with self._lock:
             st = self._blobs[blob_id]
             return st.total_pages, st.page_size
+
+    def blob_ids(self) -> List[int]:
+        """Every allocated blob id (public API for invariant checkers — the
+        interleaving explorer sweeps all blobs without reaching into
+        ``_blobs``)."""
+        with self._lock:
+            return sorted(self._blobs)
 
     # -- WRITE protocol --------------------------------------------------------
     def assign_version(

@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.analysis.lockwatch import make_lock
 from repro.core.cluster import Session
 
 
@@ -59,7 +60,7 @@ class BlobCheckpointer:
         self.session = session
         self.page_size = page_size
         self.keep_last = keep_last
-        self._lock = threading.Lock()
+        self._lock = make_lock("BlobCheckpointer._lock")
 
         leaves = _leaf_paths(template)
         self.layout: List[LeafInfo] = []

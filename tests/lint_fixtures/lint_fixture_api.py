@@ -1,0 +1,23 @@
+"""Seeded lint fixture: forbidden-API rules.
+
+Parsed (never imported) by tests/test_analysis.py — must be flagged
+``facade-import``, ``fulfill-without-plan`` and ``direct-store-mutation``.
+"""
+
+from repro.core.blob import BlobStore  # EXPECT facade-import
+
+
+class SneakyFiller:
+    def backdoor_fill(self, cache, key, page):
+        cache.fulfill(key, page)  # EXPECT fulfill-without-plan
+
+    def honest_fill(self, cache, keys, pages):
+        plan = cache.plan(keys)
+        for key in plan.to_fetch:
+            cache.fulfill(key, pages[key])  # fine: planned first
+
+    def poke_provider(self, provider, page):
+        provider._pages[0] = page  # EXPECT direct-store-mutation
+
+    def drop_node(self, shard, key):
+        shard._nodes.pop(key)  # EXPECT direct-store-mutation

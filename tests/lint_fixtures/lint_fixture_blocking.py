@@ -1,0 +1,32 @@
+"""Seeded lint fixture: blocking calls inside strict critical sections.
+
+Parsed (never imported) by tests/test_analysis.py — each marked line must be
+flagged by the ``blocking-under-lock`` rule.
+"""
+
+import threading
+import time
+
+
+class SleepyCache:
+    def __init__(self):
+        self._fill_lock = threading.Lock()
+
+    def fill(self, fetch):
+        with self._fill_lock:
+            time.sleep(0.01)  # EXPECT blocking-under-lock
+            return fetch()
+
+    def fill_future(self, pool, fetch):
+        with self._fill_lock:
+            fut = pool.submit(fetch)
+            return fut.result()  # EXPECT blocking-under-lock
+
+    def drain(self, worker):
+        with self._fill_lock:
+            worker.join()  # EXPECT blocking-under-lock
+
+    def fill_allowed(self, fetch):
+        with self._fill_lock:
+            time.sleep(0.01)  # lint: allow(blocking-under-lock)
+            return fetch()

@@ -1,0 +1,30 @@
+"""Seeded lint fixture: acquisition edges that break the declared hierarchy.
+
+Parsed (never imported) by tests/test_analysis.py — the reversed nesting must
+be flagged ``lock-order`` and the unregistered name ``undeclared-lock``.
+"""
+
+from repro.analysis.lockwatch import make_lock
+
+
+class BackwardNesting:
+    def __init__(self):
+        self._cache_lock = make_lock("PageCache._lock")  # level 5
+        self._guard = make_lock("Cluster._gc_guard")  # level 1
+        self._stats_lock = make_lock("TrafficStats._lock")  # level 5
+        self._mystery = make_lock("Mystery._lock")  # EXPECT undeclared-lock
+
+    def reversed_pair(self):
+        with self._cache_lock:
+            with self._guard:  # EXPECT lock-order (5 -> 1)
+                pass
+
+    def same_level_pair(self):
+        with self._cache_lock:
+            with self._stats_lock:  # EXPECT lock-order (5 -> 5)
+                pass
+
+    def correct_pair(self):
+        with self._guard:
+            with self._cache_lock:  # fine: 1 -> 5
+                pass

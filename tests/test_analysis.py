@@ -1,0 +1,291 @@
+"""Tests for the concurrency-correctness toolkit (repro.analysis).
+
+Three parts, mirroring the toolkit:
+
+* the static lint — seeded-violation fixtures in ``tests/lint_fixtures/``
+  (parsed, never imported) must each be flagged at the marked line with the
+  marked rule, and the real tree must lint clean;
+* the runtime lock-order watchdog — seeded ABBA / reversed-order / join-
+  under-lock patterns on private ``LockWatch`` instances must be reported,
+  and the disabled path must return a plain ``threading.Lock``;
+* the deterministic interleaving explorer — every registered scenario must
+  pass under EVERY schedule, and a scenario seeded with an order bug must
+  be caught at exactly the offending interleaving.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis import lock_order, lockwatch, schedules
+from repro.analysis.lint import lint_paths
+from repro.analysis.lockwatch import (
+    LockWatch,
+    WatchedLock,
+    install_blocking_hooks,
+    make_lock,
+    remove_blocking_hooks,
+)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+SRC = os.path.normpath(os.path.join(HERE, "..", "src", "repro"))
+
+_EXPECT_RE = re.compile(r"#\s*EXPECT\s+([a-z-]+)")
+
+
+# -- static lint --------------------------------------------------------------
+
+def _expected_markers():
+    """(basename, line, rule) for every ``# EXPECT rule`` marker."""
+    expected = set()
+    for name in sorted(os.listdir(FIXTURES)):
+        if not name.endswith(".py"):
+            continue
+        with open(os.path.join(FIXTURES, name), encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, start=1):
+                m = _EXPECT_RE.search(line)
+                if m:
+                    expected.add((name, lineno, m.group(1)))
+    return expected
+
+
+def test_fixture_markers_flagged_exactly():
+    """Every seeded violation is flagged at its file:line with its rule —
+    and nothing else in the fixtures is flagged (pragma suppression and the
+    legal-pattern controls stay quiet)."""
+    expected = _expected_markers()
+    assert len(expected) >= 6, "fixture set lost its seeded violations"
+    got = {
+        (os.path.basename(v.path), v.line, v.rule)
+        for v in lint_paths([FIXTURES])
+    }
+    assert got == expected
+
+
+def test_fixture_rules_cover_required_set():
+    rules = {rule for _, _, rule in _expected_markers()}
+    assert {
+        "blocking-under-lock", "lock-order", "undeclared-lock",
+        "facade-import", "fulfill-without-plan", "direct-store-mutation",
+    } <= rules
+
+
+def test_real_tree_lints_clean():
+    violations = lint_paths([SRC])
+    assert not violations, "\n".join(str(v) for v in violations)
+
+
+def test_lint_finds_raw_lock_in_core_scope(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    mod = core / "mod.py"
+    mod.write_text("import threading\nL = threading.Lock()\n")
+    assert [v.rule for v in lint_paths([str(tmp_path)])] == ["raw-lock"]
+
+
+def test_lock_order_registry_is_consistent():
+    levels = {spec.name: spec.level for spec in lock_order.LOCKS}
+    assert len(levels) == len(lock_order.LOCKS), "duplicate lock names"
+    # the helper agrees with the table in both directions
+    assert lock_order.order_violation("Cluster._gc_guard", "PageCache._lock") is None
+    assert lock_order.order_violation("PageCache._lock", "Cluster._gc_guard")
+    assert lock_order.order_violation("PageCache._lock", "TrafficStats._lock")
+    assert lock_order.order_violation("PageCache._lock", "PageCache._lock")
+
+
+# -- runtime watchdog ---------------------------------------------------------
+
+def test_make_lock_disabled_is_plain_lock(monkeypatch):
+    monkeypatch.delenv(lockwatch.ENV_VAR, raising=False)
+    lock = make_lock("PageCache._lock")
+    assert type(lock) is type(threading.Lock())  # zero-overhead by identity
+
+
+def test_watchdog_reports_abba_cycle():
+    w = LockWatch()
+    a = WatchedLock("TestA._lock", w)  # undeclared on purpose: no order rule,
+    b = WatchedLock("TestB._lock", w)  # the CYCLE check alone must fire
+    with a:
+        with b:
+            pass
+    with b:
+        with a:  # second ordering closes the ABBA cycle
+            pass
+    assert any(v.rule == "lock-cycle" for v in w.violations), w.violations
+    msg = next(v for v in w.violations if v.rule == "lock-cycle").message
+    assert "TestA._lock" in msg and "TestB._lock" in msg
+
+
+def test_watchdog_reports_declared_order_violation():
+    w = LockWatch()
+    leaf = WatchedLock("PageCache._lock", w)  # level 5
+    guard = WatchedLock("Cluster._gc_guard", w)  # level 1
+    with guard:
+        with leaf:
+            pass  # correct direction: silent
+    assert not w.violations
+    with leaf:
+        with guard:
+            pass  # reversed: flagged immediately, no deadlock needed
+    assert any(v.rule == "lock-order" for v in w.violations), w.violations
+
+
+def test_watchdog_reports_same_name_reacquire():
+    w = LockWatch()
+    first = WatchedLock("PageCache._lock", w)
+    second = WatchedLock("PageCache._lock", w)  # distinct instance, same class
+    with first:
+        with second:
+            pass
+    assert any(
+        v.rule == "lock-cycle" and "re-acquiring" in v.message
+        for v in w.violations
+    ), w.violations
+
+
+def test_watchdog_trylock_excluded_from_cycles():
+    w = LockWatch()
+    a = WatchedLock("TestA._lock", w)
+    b = WatchedLock("TestB._lock", w)
+    with a:
+        with b:
+            pass
+    with b:
+        assert a.acquire(blocking=False)  # trylock: cannot deadlock
+        a.release()
+    assert not w.violations, w.violations
+    assert "TestA._lock" in w.try_edges.get("TestB._lock", set())
+
+
+def test_join_under_lock_reported_and_done_future_exempt():
+    w = LockWatch()
+    had_hooks = lockwatch._HOOKS is not None
+    if had_hooks:
+        remove_blocking_hooks()
+    install_blocking_hooks(target=w)
+    try:
+        lock = WatchedLock("PageCache._lock", w)  # strict leaf lock
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            done = pool.submit(lambda: 1)
+            assert done.result() == 1  # completes; now provably non-blocking
+            with lock:
+                assert done.result() == 1  # done future: exempt
+            assert not w.violations, w.violations
+            with lock:
+                pool.submit(time.sleep, 0.05).result()  # real wait under lock
+        assert any(v.rule == "join-under-lock" for v in w.violations)
+        assert "PageCache._lock" in w.violations[-1].message
+    finally:
+        remove_blocking_hooks()
+        if had_hooks and lockwatch.enabled():
+            install_blocking_hooks()
+
+
+def test_watched_condition_wait_keeps_stack_truthful(monkeypatch):
+    monkeypatch.setenv(lockwatch.ENV_VAR, "1")
+    cv = lockwatch.make_condition("WatchWarmer._cv")
+    with cv:
+        cv.wait(timeout=0.01)  # releases + re-acquires the aliased lock
+        assert lockwatch.watch().held() == ("WatchWarmer._cv",)
+    assert lockwatch.watch().held() == ()
+    lockwatch.watch().assert_clean(reset=True)
+
+
+def test_make_lock_undeclared_name_recorded(monkeypatch):
+    monkeypatch.setenv(lockwatch.ENV_VAR, "1")
+    make_lock("Nowhere._lock")
+    with pytest.raises(AssertionError, match="undeclared-lock"):
+        lockwatch.watch().assert_clean(reset=True)
+
+
+# -- core fixes that ride along ----------------------------------------------
+
+def test_cluster_close_is_idempotent_and_joins_warmers():
+    from repro.core.cluster import Cluster
+
+    cluster = Cluster(n_data_providers=2, n_metadata_providers=2, max_workers=2)
+    blob = cluster.alloc(4 * 4096, 4096)
+    warmer = cluster.warm_on_publish(blob)
+    cluster.close()
+    assert not warmer._thread.is_alive(), "close() must join warmer threads"
+    cluster.close()  # second close: no-op, no error
+
+
+def test_provider_fail_recover_serializes_on_provider_lock():
+    from repro.core.dht import ProviderFailed
+    from repro.core.provider import DataProvider, ProviderManager
+    import numpy as np
+
+    manager = ProviderManager(replication=1)
+    provider = DataProvider(0)
+    manager.register(provider)
+    manager.fail_provider(0)
+    with pytest.raises(ProviderFailed):
+        provider.put_pages([(0, np.zeros(8, dtype=np.uint8))])
+    manager.recover_provider(0)
+    provider.put_pages([(0, np.zeros(8, dtype=np.uint8))])
+    assert provider.n_pages == 1
+
+
+# -- interleaving explorer ----------------------------------------------------
+
+def test_interleavings_enumerates_all_merges():
+    orders = list(schedules.interleavings([2, 2]))
+    assert len(orders) == 6 == schedules.n_interleavings([2, 2])
+    assert len(set(orders)) == 6
+    for order in orders:
+        assert [i for i in order if i == 0] == [0, 0]  # per-actor order kept
+        assert [i for i in order if i == 1] == [1, 1]
+
+
+def test_explorer_refuses_unbounded_scenarios():
+    scenario = schedules.SCENARIOS["publish_vs_shared_fill"]
+    with pytest.raises(ValueError, match="interleavings exceed"):
+        schedules.explore(scenario, max_schedules=2)
+
+
+def test_explorer_catches_seeded_order_bug():
+    """A scenario with a real ordering bug: the explorer must report exactly
+    the schedule where the reader outruns the writer."""
+
+    def build():
+        fake_cluster = SimpleNamespace(close=lambda: None)
+        return SimpleNamespace(cluster=fake_cluster, errors=[], published=False)
+
+    def actors(ctx):
+        def publish():
+            ctx.published = True
+
+        def read():
+            if not ctx.published:
+                ctx.errors.append("read before publish")
+
+        return [("writer", [publish]), ("reader", [read])]
+
+    report = schedules.explore(
+        schedules.Scenario("seeded_order_bug", build, actors))
+    assert report.n_schedules == 2
+    assert len(report.failures) == 1
+    failure = report.failures[0]
+    assert failure.schedule[0] == "reader.0"
+    assert "read before publish" in failure.errors[0]
+
+
+def test_required_scenarios_registered():
+    assert {"gc_vs_pin", "publish_vs_shared_fill"} <= set(schedules.SCENARIOS)
+    assert len(schedules.SCENARIOS) >= 4
+
+
+@pytest.mark.parametrize("name", sorted(schedules.SCENARIOS))
+def test_scenario_passes_every_schedule(name):
+    report = schedules.explore(schedules.SCENARIOS[name])
+    assert report.n_schedules >= 2
+    assert report.ok, "\n".join(str(f) for f in report.failures)

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Concurrency-discipline lint CLI.
+
+Usage::
+
+    python tools/lint_concurrency.py src/repro [more paths...]
+
+Exits 0 when clean, 1 when any violation is found. See
+``repro.analysis.lint`` for the rule set and the ``# lint: allow(rule)``
+suppression pragma, and ``repro.analysis.lock_order`` for the declared lock
+hierarchy the ``lock-order`` rule enforces.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.lint import RULES, lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="static lock-discipline lint for the repro codebase")
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to lint")
+    parser.add_argument("--rule", action="append", default=None,
+                        choices=sorted(RULES),
+                        help="only report these rules (repeatable)")
+    args = parser.parse_args(argv)
+
+    violations = lint_paths(args.paths)
+    if args.rule:
+        wanted = set(args.rule)
+        violations = [v for v in violations if v.rule in wanted]
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\n{len(violations)} violation(s)")
+        return 1
+    print("clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
