@@ -19,6 +19,13 @@ On top of the paper's sweep, the client-side scaling modes:
   re-read overlapping windows, the supernovae-detector access pattern) with
   the page cache off vs on. Published-version immutability makes every
   repeat page a RAM hit, so cached-read shows the per-client bandwidth win.
+* ``degraded-read`` — the cached-read workload on a small 2-way-replicated
+  fleet (8 providers) where client 0 kills one provider halfway through the
+  measured window: the second half runs on replica fallback while
+  background repair re-replicates the lost copies. The resilience headline:
+  within 2x of the healthy cached-read aggregate at 16 clients, with the
+  ``retries``/``degraded_reads``/``repaired_pages`` columns showing the
+  self-healing machinery at work (see ``docs/FAULTS.md``).
 * ``readv`` — each iteration fetches K overlapping segments in ONE vectored
   call: shared pages are deduplicated and each data provider sees one
   aggregated RPC, so ``data_rounds`` collapses vs K separate reads.
@@ -104,7 +111,7 @@ from repro.configs.paper_sky import CONFIG as SKY
 from repro.core import BalancerConfig, Cluster, PrefetchConfig, Session
 
 MODES = ("read", "write", "stream-write", "mixed", "hot-read", "cached-read",
-         "readv", "skew-read-primary", "skew-read",
+         "degraded-read", "readv", "skew-read-primary", "skew-read",
          "multi-session-private", "multi-session",
          "stream-read", "watch-read")
 #: the pre-pipeline write path, kept out of the default sweep: enable the
@@ -127,6 +134,14 @@ HOT_FRACTION = 0.9
 SKEW_SERVICE_SECONDS = 0.01
 #: promoted copies per hot page: spread each hot page over up to 10 providers
 SKEW_MAX_EXTRA_REPLICAS = 9
+
+#: degraded-read topology: a small replicated fleet; client 0 kills one
+#: provider halfway through the measured window, so the second half runs on
+#: replica fallback + background repair. The A/B against cached-read (same
+#: workload, healthy fleet) is the resilience headline: within 2x of healthy
+#: aggregate bandwidth at 16 clients
+DEGRADED_PROVIDERS = 8
+DEGRADED_REPLICATION = 2
 
 #: multi-session modes: per-page service time — the provider-side resource a
 #: shared cache tier saves (each page crosses the network once per NODE, not
@@ -173,6 +188,13 @@ STREAM_SHARED_CACHE_BYTES = 512 << 20
 
 
 def _make_cluster(mode: str, n_providers: int, n_clients: int = 1) -> Cluster:
+    if mode == "degraded-read":
+        return Cluster(
+            n_data_providers=DEGRADED_PROVIDERS,
+            n_metadata_providers=n_providers,
+            max_workers=4 * DEGRADED_PROVIDERS, shared_cache_bytes=0,
+            page_replication=DEGRADED_REPLICATION,
+        )
     if mode.startswith("skew-read"):
         replicate = mode == "skew-read"
         return Cluster(
@@ -251,10 +273,12 @@ def _make_sessions(mode: str, cluster: Cluster, n_clients: int) -> List[Session]
             max_inflight_writes=STREAM_WINDOW_PER_CLIENT * n_clients,
         )
     else:
-        # the cache is the measured subject of cached-read; every other mode
-        # runs uncached so the paper's baseline stays the baseline
+        # the cache is the measured subject of cached-read (and its
+        # mid-crash A/B, degraded-read); every other mode runs uncached so
+        # the paper's baseline stays the baseline
         session = cluster.session(
-            cache_bytes=(128 << 20) if mode == "cached-read" else 0
+            cache_bytes=(128 << 20)
+            if mode in ("cached-read", "degraded-read") else 0
         )
     return [session] * n_clients
 
@@ -320,7 +344,8 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 # purpose (pool spin-up must not land in the timed window, and
                 # mixed never re-reads the prefill versions).
                 hot = SKY.hot_interval
-                if mode in ("hot-read", "cached-read", "readv"):
+                if mode in ("hot-read", "cached-read", "degraded-read",
+                            "readv"):
                     hot = min(hot, 64 << 20)
                 if mode.startswith("skew-read"):
                     hot = SKEW_WINDOW_PAGES * page_size
@@ -335,7 +360,8 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     mode.startswith("skew-read")
                     or mode in MULTI_SESSION_MODES
                     or mode in STREAM_READ_MODES
-                    or mode in ("hot-read", "cached-read", "readv")
+                    or mode in ("hot-read", "cached-read", "degraded-read",
+                                "readv")
                 )
                 if mode == "watch-read":
                     pass  # frames are published live by the epoch writer thread
@@ -431,10 +457,18 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                             phase = cid * max(mode_iters // max(n_clients, 1), 1)
                             seg = (i + phase) % mode_iters
                             moved += handle.read(seg * seg_bytes, seg_bytes).data.size
-                        elif mode in ("hot-read", "cached-read"):
+                        elif mode in ("hot-read", "cached-read",
+                                      "degraded-read"):
                             # detector re-read pattern: each client cycles over a
                             # few half-overlapping windows that also overlap its
                             # neighbours' — repeat pages dominate
+                            if (mode == "degraded-read" and cid == 0
+                                    and i == mode_iters // 2):
+                                # one of the fleet crashes mid-measurement:
+                                # reads keep completing through replica
+                                # fallback while background repair re-
+                                # replicates (degraded_reads/repaired columns)
+                                cluster.provider_manager.fail_provider(0)
                             span = max(hot - seg_bytes, page_size)
                             off = ((cid * 3 + (i % 4)) * (seg_bytes // 2)) % span
                             moved += handle.read(off, seg_bytes).data.size
@@ -554,6 +588,13 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     first_read_hit_rate=(
                         f_hits / (f_hits + f_misses) if f_hits + f_misses else 0.0
                     ),
+                    # self-healing counters (degraded-read is their showcase;
+                    # every mode records them — nonzero elsewhere means the
+                    # run itself hit trouble)
+                    retries=cluster.stats.retries,
+                    replica_fallbacks=cluster.stats.replica_fallbacks,
+                    degraded_reads=cluster.stats.degraded_reads,
+                    repaired_pages=cluster.stats.repaired_pages,
                 )
                 cluster.close()
                 if best is None or row["aggregate_MBps"] >= best["aggregate_MBps"]:
@@ -568,7 +609,8 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
 
 CSV_HEADER = ("mode,clients,per_client_MBps,min_client_MBps,aggregate_MBps,"
               "data_rounds,cache_hit_rate,promotions,write_skew,"
-              "p50_ms,p99_ms,first_read_hit_rate")
+              "p50_ms,p99_ms,first_read_hit_rate,"
+              "retries,replica_fallbacks,degraded_reads,repaired_pages")
 
 
 def to_csv(rows: Sequence[dict]) -> List[str]:
@@ -579,7 +621,9 @@ def to_csv(rows: Sequence[dict]) -> List[str]:
             f"{r['min_client_MBps']:.1f},{r['aggregate_MBps']:.1f},"
             f"{r['data_rounds']},{r['cache_hit_rate']:.2f},{r['promotions']},"
             f"{r.get('write_skew', 0.0):.2f},{r.get('p50_ms', 0.0):.1f},"
-            f"{r.get('p99_ms', 0.0):.1f},{r.get('first_read_hit_rate', 0.0):.2f}"
+            f"{r.get('p99_ms', 0.0):.1f},{r.get('first_read_hit_rate', 0.0):.2f},"
+            f"{r.get('retries', 0)},{r.get('replica_fallbacks', 0)},"
+            f"{r.get('degraded_reads', 0)},{r.get('repaired_pages', 0)}"
         )
     return out
 

@@ -17,8 +17,10 @@ level   locks
 0       ``BlobCheckpointer._lock`` — serializes whole checkpoint passes; a
         save calls the full write plane AND ``Cluster.gc`` underneath
 1       ``Cluster._gc_guard`` — serializes GC passes against snapshot pinning
-2       ``ReplicaBalancer._rebalance_lock`` — promotion passes; non-blocking
-        for readers, deliberately held across data-plane copies
+2       ``ReplicaBalancer._rebalance_lock`` / ``RepairService._lock`` —
+        promotion and re-replication/scrub passes; non-blocking for readers,
+        deliberately held across data-plane copies (one aliases the other
+        when both actors exist)
 3       per-object bookkeeping locks that guard small registries and windows
         (session lists, async-write windows, coalesce queues, pin flags)
 4       the shared actors' state locks (version manager, provider manager,
@@ -67,10 +69,17 @@ LOCKS = [
     LockSpec("Cluster._gc_guard", 1, allow_blocking=True,
              note="serializes GC passes against snapshot creation; the pass "
                   "does metadata/provider RPCs under it by design"),
-    # -- level 2: promotion passes -------------------------------------------
+    # -- level 2: promotion / repair passes ----------------------------------
     LockSpec("ReplicaBalancer._rebalance_lock", 2, allow_blocking=True,
              note="readers try-lock and skip; held across page copies so "
                   "promotions serialize without queueing the read path"),
+    LockSpec("RepairService._lock", 2, allow_blocking=True,
+             note="re-replication/scrub passes; held across data-plane "
+                  "copies like the rebalance lock. On clusters WITH a "
+                  "balancer this name is never constructed — the service "
+                  "ALIASES ReplicaBalancer._rebalance_lock so repair, "
+                  "promotion and GC exclusion all serialize on one lock "
+                  "(same level: the two names must never nest)"),
     # -- level 3: small registries / windows ---------------------------------
     LockSpec("Cluster._sessions_lock", 3),
     LockSpec("Cluster._membership_lock", 3),
@@ -85,6 +94,10 @@ LOCKS = [
     LockSpec("MetadataDHT._coalesce_lock", 3),
     LockSpec("MetadataDHT._executor_lock", 3),
     LockSpec("BlobStore._handles_lock", 3),
+    LockSpec("FaultInjector._lock", 3,
+             note="guards the chaos harness's op counter and pending "
+                  "fault queues; fault ACTIONS (kill/recover/sleep) run "
+                  "outside it"),
     # -- level 4: shared-actor state -----------------------------------------
     LockSpec("Cluster._aux_lock", 4),
     LockSpec("Cluster._pins_lock", 4),

@@ -19,11 +19,14 @@ from repro.core.cluster import (
     Snapshot,
     VersionWatch,
 )
+from repro.core.cluster import RetryPolicy
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.faults import FaultEvent, FaultInjector, FaultSchedule
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
 from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
-from repro.core.provider import DataProvider, ProviderManager
+from repro.core.provider import DataProvider, HealthConfig, ProviderManager
+from repro.core.repair import RepairService
 from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
 from repro.core.segment_tree import (
     BorderLink,
@@ -47,9 +50,15 @@ __all__ = [
     "DEFAULT_CACHE_BYTES",
     "DEFAULT_SHARED_CACHE_BYTES",
     "ReadResult",
+    "RetryPolicy",
     "Session",
     "Snapshot",
     "VersionWatch",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultSchedule",
+    "HealthConfig",
+    "RepairService",
     "CacheKey",
     "FetchPlan",
     "PageCache",

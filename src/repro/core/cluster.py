@@ -51,7 +51,7 @@ import threading
 import time
 from collections import defaultdict
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -59,7 +59,8 @@ from repro.analysis.lockwatch import make_lock
 from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
 from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
 from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
-from repro.core.provider import DataProvider, ProviderManager
+from repro.core.provider import DataProvider, HealthConfig, ProviderManager
+from repro.core.repair import RepairService
 from repro.core.replica_balancer import BalancerConfig, ReplicaBalancer
 from repro.core.segment_tree import (
     NodeKey,
@@ -78,6 +79,38 @@ DEFAULT_CACHE_BYTES = 64 << 20
 #: ``shared_cache_bytes=0`` disables the shared tier (each session then runs
 #: a standalone private cache, the pre-split topology).
 DEFAULT_SHARED_CACHE_BYTES = 256 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff for data-plane RPCs.
+
+    The jitter is *deterministic*: attempt ``k`` of a policy with seed ``s``
+    always backs off the same amount, so a chaos test with an injected
+    ``sleep`` (and the injected clock in :class:`~repro.core.provider.
+    HealthConfig`) replays identically. Backoff never runs under a lock —
+    every retry loop lives on a pool worker between RPCs.
+    """
+
+    max_attempts: int = 3
+    base_delay_seconds: float = 0.005
+    multiplier: float = 2.0
+    max_delay_seconds: float = 0.1
+    jitter: float = 0.5
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (0-based)."""
+        base = min(
+            self.base_delay_seconds * self.multiplier ** attempt,
+            self.max_delay_seconds,
+        )
+        frac = random.Random(self.seed * 0x9E3779B1 + attempt).random()
+        return base * (1.0 + self.jitter * frac)
+
+    def backoff(self, attempt: int) -> None:
+        self.sleep(self.delay(attempt))
 
 
 @dataclasses.dataclass
@@ -214,7 +247,12 @@ class _PageFetchStream:
         if fallback:
             # replica fallback in parallel, skipping the observed-dead choice;
             # tracked in _futures so quiesce() covers a fallback that raises
-            # mid-join (all replicas dead) with siblings still in flight
+            # mid-join (all replicas dead) with siblings still in flight.
+            # This read is DEGRADED: it completed, but only via surviving
+            # replicas — count it so operators see reads running on
+            # reduced redundancy before repair restores the factor
+            session._record_fallback(len(fallback))
+            session._record_degraded(1)
             fb = [
                 session._pool.submit(session._fetch_single, p, leaf, skip)
                 for p, leaf, skip in fallback
@@ -258,12 +296,16 @@ class Cluster:
         balancer_config: Optional[BalancerConfig] = None,
         page_service_seconds: float = 0.0,
         metadata_latency_seconds: float = 0.0,
+        retry_policy: Optional[RetryPolicy] = None,
+        health: Optional[HealthConfig] = None,
     ) -> None:
         #: cluster-wide aggregate traffic (every session records here too)
         self.stats = TrafficStats()
+        #: data-plane RPC retry/backoff policy (injectable for chaos tests)
+        self.retry_policy = retry_policy or RetryPolicy()
         self.version_manager = VersionManager()
         self.provider_manager = ProviderManager(
-            replication=page_replication, stats=self.stats
+            replication=page_replication, stats=self.stats, health=health
         )
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self.metadata = MetadataDHT(
@@ -290,6 +332,12 @@ class Cluster:
             if hot_replicas
             else None
         )
+        #: self-healing: when the health machine declares a provider dead the
+        #: manager's ``on_dead`` hook queues a background re-replication pass
+        #: on the aux pool (the hook fires OUTSIDE the manager lock, so the
+        #: level-4 ``_aux_lock`` acquisition below it is legal)
+        self.repair_service = RepairService(self)
+        self.provider_manager.on_dead = self.repair_service.schedule
         self._next_provider_id = n_data_providers
         self._membership_lock = make_lock("Cluster._membership_lock")
         #: registered sessions (GC must purge every private cache tier)
@@ -459,18 +507,28 @@ class Cluster:
         with self._gc_guard:
             keep = set(keep_versions) | self.pinned_versions(blob_id)
             if self.replica_balancer is not None:
+                # repair_service aliases the balancer's _rebalance_lock, so
+                # pausing the balancer excludes repair passes too
                 with self.replica_balancer.paused():
                     return self._gc_locked(blob_id, keep)
-            return self._gc_locked(blob_id, keep)
+            with self.repair_service.paused():
+                return self._gc_locked(blob_id, keep)
 
     def _gc_locked(self, blob_id: int, keep_versions: Set[int]) -> Tuple[int, int]:
-        total_pages, _ = self.version_manager.blob_info(blob_id)
-        latest = self.version_manager.latest_published(blob_id)
+        vm = self.version_manager
+        total_pages, _ = vm.blob_info(blob_id)
+        latest = vm.latest_published(blob_id)
         keep = sorted(v for v in keep_versions if v != ZERO_VERSION)
+        aborted = vm.aborted_view(blob_id)
         reachable_nodes: Set[NodeKey] = set()
         reachable_pages: Set[PageRef] = set()
 
         def mark(version: int, offset: int, size: int) -> None:
+            if version in aborted:
+                # dangling link into an abandoned write: resolve it the same
+                # way the read path does, so marking neither crashes on the
+                # missing node nor roots the hole's wreckage
+                version = vm.redirect_read_link(blob_id, version, offset, size)
             if version == ZERO_VERSION:
                 return
             key = NodeKey(blob_id, version, offset, size)
@@ -492,7 +550,7 @@ class Cluster:
         doomed_nodes: List[NodeKey] = []
         doomed_pages: Set[PageRef] = set()
         for key, node in self.metadata.iter_nodes(blob_id):
-            if key.version > latest:
+            if key.version > latest and key.version not in aborted:
                 continue  # never GC in-flight (unpublished) versions
             if key not in reachable_nodes:
                 doomed_nodes.append(key)
@@ -636,6 +694,18 @@ class Session:
         self.stats.record_cache(hits=hits, misses=misses)
         self.cluster.stats.record_cache(hits=hits, misses=misses)
 
+    def _record_retry(self, n: int = 1) -> None:
+        self.stats.record_retry(n)
+        self.cluster.stats.record_retry(n)
+
+    def _record_fallback(self, n: int = 1) -> None:
+        self.stats.record_fallback(n)
+        self.cluster.stats.record_fallback(n)
+
+    def _record_degraded(self, n: int = 1) -> None:
+        self.stats.record_degraded_read(n)
+        self.cluster.stats.record_degraded_read(n)
+
     @property
     def cache_hit_rate(self) -> float:
         h, m = self.stats.cache_hits, self.stats.cache_misses
@@ -735,6 +805,7 @@ class Session:
 
             # (2) LAUNCH the aggregated per-provider puts; the pipeline only
             #     joins them at the end (sync baseline: full barrier here)
+            data_pids = list(by_provider)
             data_futures = [
                 self._pool.submit(self._put_batch, pid, items)
                 for pid, items in by_provider.items()
@@ -773,11 +844,29 @@ class Session:
             else:
                 meta_futures.extend(metadata.put_nodes_async(all_nodes))
 
-            # join: every page and node must be durable before success
-            for f in data_futures + meta_futures:
+            # join: every page and node must be durable before success. The
+            # metadata futures join FIRST so that when a data batch has to be
+            # re-placed onto a healthy provider, no stale in-flight leaf put
+            # can overwrite the corrected refs we write below.
+            for f in meta_futures:
                 err = f.exception()
                 if err is not None:
                     raise err
+            failed_batches: List[Tuple[int, BaseException]] = []
+            for pid, f in zip(data_pids, data_futures):
+                err = f.exception()
+                if err is None:
+                    continue
+                if sync or not isinstance(err, (ProviderFailed, KeyError)):
+                    raise err  # sync baseline keeps abort-on-failure
+                failed_batches.append((pid, err))
+            if failed_batches:
+                # self-healing: move the dead provider's pages to healthy
+                # nodes mid-flight instead of aborting the whole writev;
+                # raises (→ abort path) only when no healthy target remains
+                self._replace_failed_batches(
+                    blob_id, failed_batches, by_provider, placements, all_nodes
+                )
 
             # (5) report success (one lock for the batch) → in-order publish
             vm.report_successes(blob_id, versions)
@@ -808,8 +897,123 @@ class Session:
         return versions
 
     def _put_batch(self, pid: int, items: List[Tuple[int, np.ndarray]]) -> None:
-        self.cluster.provider_manager.get_provider(pid).put_pages(items)
-        self._record_data(pid, len(items), sum(p.nbytes for _, p in items))
+        """One aggregated data put, retried per :class:`RetryPolicy`.
+
+        Every failed attempt feeds the health machine; retries stop early
+        once the target is declared dead (the writev join will re-place the
+        batch on a healthy provider instead). ``KeyError`` (the provider was
+        deregistered mid-flight) is not retried — the id will never come
+        back. Backoff runs on a pool worker, never under a lock."""
+        pm = self.cluster.provider_manager
+        policy = self.cluster.retry_policy
+        attempts = max(policy.max_attempts, 1)
+        for attempt in range(attempts):
+            try:
+                pm.get_provider(pid).put_pages(items)
+            except ProviderFailed:
+                pm.note_failure(pid)
+                if attempt + 1 < attempts and pid not in pm.dead_providers():
+                    self._record_retry()
+                    policy.backoff(attempt)
+                    continue
+                raise
+            pm.note_success(pid)
+            self._record_data(pid, len(items), sum(p.nbytes for _, p in items))
+            return
+
+    def _replace_failed_batches(
+        self,
+        blob_id: int,
+        failed_batches: List[Tuple[int, BaseException]],
+        by_provider: Dict[int, List[Tuple[int, np.ndarray]]],
+        placements: List[Tuple[PageRef, Tuple[PageRef, ...]]],
+        all_nodes: List[TreeNode],
+    ) -> None:
+        """Mid-flight write repair: a data batch whose provider died (or was
+        deregistered) after placement gets re-put onto healthy providers, and
+        the writev completes instead of aborting.
+
+        Works per failed batch, transactionally: either every item of the
+        batch lands on a healthy target (then the bookkeeping — load credit,
+        ``by_provider``, ``placements``, the woven leaves — is swung over to
+        the new refs), or the partial moves are undone and the original
+        error is re-raised so the normal abort path runs on *consistent*
+        state. Leaf corrections are plain re-puts of still-unpublished keys;
+        the metadata futures joined before this runs, so no stale in-flight
+        put can overwrite a corrected leaf."""
+        pm = self.cluster.provider_manager
+        metadata = self.cluster.metadata
+        failed_pids = {pid for pid, _ in failed_batches}
+        moved: Dict[PageRef, PageRef] = {}
+        for pid, original_err in failed_batches:
+            items = by_provider[pid]
+            # replica sets must stay on distinct providers: for each page key,
+            # know who else already holds a copy
+            holders: Dict[int, Set[int]] = defaultdict(set)
+            for other_pid, other_items in by_provider.items():
+                if other_pid != pid:
+                    for key, _ in other_items:
+                        holders[key].add(other_pid)
+            placed: List[Tuple[int, int, np.ndarray]] = []  # (target, key, page)
+            try:
+                for key, page in items:
+                    tried: Set[int] = set()
+                    while True:
+                        target = pm.least_loaded(
+                            exclude=tuple(holders[key] | failed_pids | tried)
+                        )
+                        if target is None:
+                            raise original_err  # no healthy target → abort
+                        try:
+                            pm.get_provider(target).put_pages([(key, page)])
+                        except (ProviderFailed, KeyError):
+                            pm.note_failure(target)
+                            tried.add(target)
+                            continue
+                        pm.note_success(target)
+                        pm.add_load(target, 1)
+                        placed.append((target, key, page))
+                        moved[(pid, key)] = (target, key)
+                        self._record_data(target, 1, page.nbytes)
+                        break
+            except BaseException:
+                # undo THIS batch's partial moves; earlier batches already
+                # committed their bookkeeping, so abort cleanup stays exact
+                for target, key, _ in placed:
+                    try:
+                        pm.get_provider(target).delete_pages([key])
+                    except (ProviderFailed, KeyError):
+                        pass
+                    moved.pop((pid, key), None)
+                pm.release([(target, key) for target, key, _ in placed])
+                raise
+            # commit: the dead provider's load credit moves to the new holders
+            pm.release([(pid, key) for key, _ in items])
+            del by_provider[pid]
+            for target, key, page in placed:
+                by_provider.setdefault(target, []).append((key, page))
+            self._record_retry(len(items))
+        # rewrite affected leaves with the corrected refs
+        corrected = [
+            dataclasses.replace(
+                node,
+                page=moved.get(node.page, node.page),
+                replicas=tuple(moved.get(r, r) for r in node.replicas),
+            )
+            for node in all_nodes
+            if node.is_leaf
+            and (node.page in moved or any(r in moved for r in node.replicas))
+        ]
+        if corrected:
+            metadata.put_nodes(corrected)
+        # swing placements to the new refs so a LATER failure's abort path
+        # deletes/releases what is actually stored now
+        for i, (primary, replicas) in enumerate(placements):
+            if primary in moved or any(r in moved for r in replicas):
+                placements[i] = (
+                    moved.get(primary, primary),
+                    tuple(moved.get(r, r) for r in replicas),
+                )
 
     def _abort_writev(
         self,
@@ -1015,13 +1219,14 @@ class Session:
         if owned:
             fulfilled: Set[int] = set()
             stream = _PageFetchStream(self, page_size)
+            redirect = self._read_redirect(blob_id)
             try:
                 if self.sync_read:
                     # phased baseline: the traversal runs to completion, THEN
                     # the leaves are fetched (one aggregated RPC per provider)
                     leaves = traverse_batch(
                         self.cluster.metadata.get_nodes, blob_id, version,
-                        total_pages, _merge_ranges(owned),
+                        total_pages, _merge_ranges(owned), redirect=redirect,
                     )
                     stream.submit(leaves)
                 else:
@@ -1038,6 +1243,7 @@ class Session:
                     leaves = traverse_batch(
                         _streaming_get_nodes, blob_id, version, total_pages,
                         _merge_ranges(owned), on_leaves=stream.submit,
+                        redirect=redirect,
                     )
                     # implicit-zero pages resolve in the traversal, not the
                     # data plane — record them with the stream's results
@@ -1109,6 +1315,30 @@ class Session:
             outs.append(out)
         return outs
 
+    def _read_redirect(self, blob_id: int) -> Optional[Callable[[int, int, int], int]]:
+        """Dangling-link resolver for tree traversals of ``blob_id``.
+
+        A writer that aborted mid-flight may have become a publication
+        *hole*: a later published version can carry border links into trees
+        the hole never stored (the write-plane leak the metadata scrub
+        eventually rewrites). The returned hook redirects any link into an
+        aborted version to the newest surviving version covering the same
+        segment — such a node always exists, because every stored node of a
+        version covers a canonical segment intersecting that version's
+        written interval. Returns ``None`` (zero overhead) when the blob has
+        no abandoned versions."""
+        vm = self.cluster.version_manager
+        aborted = vm.aborted_view(blob_id)
+        if not aborted:
+            return None
+
+        def redirect(version: int, offset: int, size: int) -> int:
+            if version not in aborted:
+                return version
+            return vm.redirect_read_link(blob_id, version, offset, size)
+
+        return redirect
+
     def _choose_ref(
         self, leaf: TreeNode, read_load: Dict[int, int], page_size: int
     ) -> PageRef:
@@ -1142,12 +1372,19 @@ class Session:
         self, pid: int, items: List[Tuple[int, int, TreeNode]]
     ) -> Optional[Dict[int, np.ndarray]]:
         """One aggregated ``get_pages`` RPC to provider ``pid``; ``None`` on
-        provider failure (the stream's join falls back per page)."""
+        provider failure (the stream's join falls back per page). Failures
+        feed the health machine — enough of them within the decay window
+        marks the source suspect, then dead (triggering background repair)."""
+        pm = self.cluster.provider_manager
         try:
-            provider = self.cluster.provider_manager.get_provider(pid)
+            provider = pm.get_provider(pid)
             fetched = provider.get_pages([key for _, key, _ in items])
-        except (ProviderFailed, KeyError):
-            return None  # provider down/deregistered: caller falls back
+        except ProviderFailed:
+            pm.note_failure(pid)
+            return None  # provider down: caller falls back per page
+        except KeyError:
+            return None  # deregistered: nothing to mark
+        pm.note_success(pid)
         self._record_data(
             pid, len(items), sum(pg.nbytes for pg in fetched), read=True
         )
@@ -1190,7 +1427,7 @@ class Session:
         try:
             leaves = traverse_batch(
                 self.cluster.metadata.get_nodes, blob_id, version, total_pages,
-                _merge_ranges(owned),
+                _merge_ranges(owned), redirect=self._read_redirect(blob_id),
             )
             fetched = self._fetch_pages(leaves, page_size)
             for p in owned:
@@ -1210,15 +1447,37 @@ class Session:
     def _fetch_single(
         self, page_index: int, leaf: TreeNode, skip_pid: Optional[int] = None
     ) -> np.ndarray:
+        """Per-page replica fallback with bounded retry rounds: every replica
+        is tried once per round (each failure feeding the health machine);
+        between rounds the retry policy backs off — a transient blip on ALL
+        replicas still completes, a truly lost page fails after
+        ``max_attempts`` rounds."""
+        pm = self.cluster.provider_manager
+        policy = self.cluster.retry_policy
         refs = [r for r in leaf.all_page_refs() if r[0] != skip_pid]
+        refs = list(refs or leaf.all_page_refs())
         last_err: Optional[Exception] = None
-        for pid, key in refs or leaf.all_page_refs():
-            try:
-                page = self.cluster.provider_manager.get_provider(pid).get_page(key)
+        for attempt in range(max(policy.max_attempts, 1)):
+            if attempt:
+                self._record_retry()
+                policy.backoff(attempt - 1)
+            retryable = False
+            for pid, key in refs:
+                try:
+                    page = pm.get_provider(pid).get_page(key)
+                except ProviderFailed as err:
+                    pm.note_failure(pid)
+                    last_err = err
+                    retryable = True  # the provider may come back
+                    continue
+                except KeyError as err:
+                    last_err = err  # missing page/provider: will not heal
+                    continue
+                pm.note_success(pid)
                 self._record_data(pid, 1, page.nbytes, read=True)
                 return page
-            except (ProviderFailed, KeyError) as err:
-                last_err = err
+            if not retryable:
+                break
         raise last_err if last_err else KeyError(f"page {page_index} unavailable")
 
     # -- lifecycle ---------------------------------------------------------------

@@ -51,6 +51,14 @@ class TrafficStats:
     metadata_rounds: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    #: self-healing plane (PR 7): RPC attempts retried after a failure,
+    #: per-page fetches served by a non-chosen replica after the chosen
+    #: source failed, read ops that completed with at least one provider
+    #: down, and pages re-replicated by the repair service
+    retries: int = 0
+    replica_fallbacks: int = 0
+    degraded_reads: int = 0
+    repaired_pages: int = 0
     per_dest_bytes: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
     #: read-path bytes per DATA provider only (no metadata shards, no writes) —
     #: the skew signal the replica balancer promotes hot pages from
@@ -107,6 +115,26 @@ class TrafficStats:
             self.cache_hits += hits
             self.cache_misses += misses
 
+    def record_retry(self, n: int = 1) -> None:
+        """RPC attempts re-issued after a ``ProviderFailed``."""
+        with self._lock:
+            self.retries += n
+
+    def record_fallback(self, n: int = 1) -> None:
+        """Page fetches recovered via a replica after the source failed."""
+        with self._lock:
+            self.replica_fallbacks += n
+
+    def record_degraded_read(self, n: int = 1) -> None:
+        """Read ops completed while at least one provider was down."""
+        with self._lock:
+            self.degraded_reads += n
+
+    def record_repair(self, n_pages: int) -> None:
+        """Pages re-replicated by the repair service."""
+        with self._lock:
+            self.repaired_pages += n_pages
+
     def reset(self) -> None:
         with self._lock:
             self.rpcs = 0
@@ -116,6 +144,10 @@ class TrafficStats:
             self.metadata_rounds = 0
             self.cache_hits = 0
             self.cache_misses = 0
+            self.retries = 0
+            self.replica_fallbacks = 0
+            self.degraded_reads = 0
+            self.repaired_pages = 0
             self.per_dest_bytes.clear()
             self.per_dest_read_bytes.clear()
             self.per_dest_write_bytes.clear()
@@ -140,10 +172,14 @@ class MetadataShard:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         for node in nodes:
             # Create-only: concurrent writers never target the same key
-            # because keys embed the (unique) version number. The one
-            # sanctioned re-put is the replica balancer rewriting a leaf with
-            # a grown/shrunk replica set — same page data, different placement
-            # hint — and it serializes those rewrites on its own lock.
+            # because keys embed the (unique) version number. The sanctioned
+            # re-puts are leaf rewrites that keep the page DATA identical and
+            # change only placement hints: the replica balancer's
+            # grown/shrunk replica sets and the repair service's
+            # re-replication (both serialize on the rebalance lock), plus a
+            # writer correcting its OWN still-unpublished leaves after a
+            # mid-flight provider death (no one else targets those keys
+            # until the version publishes).
             self._nodes[node.key] = node
 
     def get(self, key: NodeKey) -> Optional[TreeNode]:

@@ -1,0 +1,221 @@
+"""Deterministic chaos harness: seeded fault schedules for the data plane.
+
+The self-healing machinery (health states, retry/backoff, mid-flight write
+re-placement, replica-fallback reads, background repair) is only as
+trustworthy as the failures it was exercised under. This module injects
+those failures *deterministically*:
+
+* A :class:`FaultSchedule` is a seeded, immutable list of
+  :class:`FaultEvent`\\ s positioned in **operation space** — "at the N-th
+  data-plane RPC, kill provider 3" — not wall-clock time, so a loaded CI
+  machine and a laptop replay the same fault sequence.
+* A :class:`FaultInjector` attaches to every provider's ``fault_gate`` (an
+  RPC-entry hook that runs BEFORE the provider's lock) and counts RPCs
+  cluster-wide; events fire as their op index is crossed. Kills flip the
+  provider's failure flag through ``ProviderManager.fail_provider`` —
+  in-flight requests observe the flip exactly as a real crash: mid-batch,
+  under live traffic. Drops fail one single RPC; delays stall one RPC.
+
+Determinism caveat, stated honestly: the *schedule* is deterministic, but
+which concurrent client's RPC crosses the op threshold depends on thread
+interleaving. Chaos tests therefore assert interleaving-independent
+invariants (zero published-data loss, monotone publish frontier,
+replication-factor restoration) rather than exact traces — the properties
+the paper's lock-free design must hold under ANY interleaving.
+
+All injector state lives under its own level-3 lock; fault ACTIONS
+(kill/recover/sleep/raise) run strictly outside it, so the gate never nests
+into the manager or provider locks while holding anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import TYPE_CHECKING, Dict, List, Sequence, Set
+
+from repro.analysis.lockwatch import make_lock
+from repro.core.dht import ProviderFailed
+
+if TYPE_CHECKING:  # pragma: no cover - cluster imports stay one-directional
+    from repro.core.cluster import Cluster
+
+#: fault actions
+KILL = "kill"  #: flip the provider's failed flag (stays down until recover)
+RECOVER = "recover"  #: clear the flag + health record (rejoin announcement)
+DROP = "drop"  #: fail exactly one subsequent RPC at the provider
+DELAY = "delay"  #: stall exactly one subsequent RPC by ``param`` seconds
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One scheduled fault: at the ``at_op``-th cluster-wide data RPC (or
+    later — the next RPC to cross the threshold), apply ``action`` to
+    ``provider_id``. ``param`` is the delay in seconds for ``delay``."""
+
+    at_op: int
+    action: str
+    provider_id: int
+    param: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """An immutable, op-ordered fault sequence. Build directly from events
+    or via :meth:`generate` for a seeded random campaign."""
+
+    events: Sequence[FaultEvent] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "events", tuple(sorted(self.events)))
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        n_providers: int,
+        n_events: int = 12,
+        max_dead: int = 1,
+        min_gap: int = 5,
+        max_gap: int = 40,
+        delay_seconds: float = 0.002,
+        recover_all: bool = True,
+    ) -> "FaultSchedule":
+        """Seeded random campaign: kills, recoveries, drops and delays, with
+        at most ``max_dead`` providers down simultaneously (the chaos tests
+        pair this with replication > max_dead so published data must
+        survive). With ``recover_all`` every still-dead provider gets a
+        trailing recover event, so repair can restore full replication."""
+        rng = random.Random(seed)
+        events: List[FaultEvent] = []
+        dead: Set[int] = set()
+        op = 0
+        for _ in range(n_events):
+            op += rng.randint(min_gap, max_gap)
+            roll = rng.random()
+            alive = [p for p in range(n_providers) if p not in dead]
+            if dead and roll < 0.25:
+                pid = rng.choice(sorted(dead))
+                dead.discard(pid)
+                events.append(FaultEvent(op, RECOVER, pid))
+            elif len(dead) < max_dead and roll < 0.55 and alive:
+                pid = rng.choice(alive)
+                dead.add(pid)
+                events.append(FaultEvent(op, KILL, pid))
+            elif roll < 0.8 and alive:
+                events.append(FaultEvent(op, DROP, rng.choice(alive)))
+            elif alive:
+                events.append(
+                    FaultEvent(op, DELAY, rng.choice(alive), delay_seconds)
+                )
+        if recover_all:
+            for pid in sorted(dead):
+                op += rng.randint(min_gap, max_gap)
+                events.append(FaultEvent(op, RECOVER, pid))
+        return cls(tuple(events))
+
+
+class FaultInjector:
+    """Drives a :class:`FaultSchedule` against a live cluster.
+
+    Usage::
+
+        injector = FaultInjector(cluster, schedule)
+        injector.attach()
+        try:
+            ...  # run traffic; faults fire as RPCs cross the op thresholds
+            injector.drain()  # force any not-yet-reached kills/recovers
+        finally:
+            injector.detach()
+    """
+
+    def __init__(self, cluster: "Cluster", schedule: FaultSchedule) -> None:
+        self.cluster = cluster
+        self.schedule = schedule
+        self._lock = make_lock("FaultInjector._lock")
+        self._op = 0
+        self._pending: List[FaultEvent] = list(schedule.events)
+        #: per-provider one-shot faults armed by DROP/DELAY events
+        self._drops: Dict[int, int] = {}
+        self._delays: Dict[int, float] = {}
+        #: applied events, for test introspection
+        self.fired: List[FaultEvent] = []
+
+    # -- wiring ---------------------------------------------------------------
+    def attach(self) -> None:
+        for provider in self.cluster.provider_manager.providers():
+            provider.fault_gate = self._gate
+
+    def detach(self) -> None:
+        for provider in self.cluster.provider_manager.providers():
+            provider.fault_gate = None
+
+    # -- the gate -------------------------------------------------------------
+    def _gate(self, op: str, provider_id: int) -> None:
+        """RPC-entry hook (runs lock-free in the provider, before its own
+        lock): advance the op clock, apply due events, then enforce any
+        one-shot drop/delay armed for this provider."""
+        due: List[FaultEvent] = []
+        with self._lock:
+            self._op += 1
+            while self._pending and self._pending[0].at_op <= self._op:
+                due.append(self._pending.pop(0))
+        for event in due:
+            self._apply(event)
+        # consume one-shots AFTER applying due events, so a drop/delay whose
+        # op threshold this very RPC crossed hits this RPC, not the next one
+        with self._lock:
+            delay = self._delays.pop(provider_id, 0.0)
+            dropped = self._drops.get(provider_id, 0)
+            if dropped:
+                self._drops[provider_id] = dropped - 1
+        if delay > 0.0:
+            time.sleep(delay)  # outside every lock: stalls only this RPC
+        if dropped:
+            raise ProviderFailed(
+                f"injected drop: provider {provider_id} {op} RPC"
+            )
+
+    def _apply(self, event: FaultEvent) -> None:
+        pm = self.cluster.provider_manager
+        try:
+            if event.action == KILL:
+                pm.fail_provider(event.provider_id)
+            elif event.action == RECOVER:
+                pm.recover_provider(event.provider_id)
+            elif event.action == DROP:
+                with self._lock:
+                    self._drops[event.provider_id] = (
+                        self._drops.get(event.provider_id, 0) + 1
+                    )
+            elif event.action == DELAY:
+                with self._lock:
+                    self._delays[event.provider_id] = event.param
+            else:
+                raise ValueError(f"unknown fault action {event.action!r}")
+        except KeyError:
+            pass  # provider deregistered mid-campaign: fault is moot
+        with self._lock:
+            self.fired.append(event)
+
+    # -- campaign control -----------------------------------------------------
+    def drain(self) -> None:
+        """Apply every not-yet-fired kill/recover immediately (traffic ended
+        before the op clock reached them). One-shot drops/delays are
+        discarded — there is no RPC left for them to hit."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+            self._drops.clear()
+            self._delays.clear()
+        for event in pending:
+            if event.action in (KILL, RECOVER):
+                self._apply(event)
+
+    def ops_seen(self) -> int:
+        with self._lock:
+            return self._op
+
+    def pending_events(self) -> List[FaultEvent]:
+        with self._lock:
+            return list(self._pending)

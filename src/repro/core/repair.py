@@ -1,0 +1,301 @@
+"""Background re-replication and metadata scrub: the self-healing half of
+the data plane.
+
+The health machine in :class:`~repro.core.provider.ProviderManager` turns
+observed RPC failures into a ``live → suspect → dead`` verdict; this module
+is what happens *after* the verdict. When a provider is declared dead its
+published pages are down one replica — readers still complete through the
+surviving copies (the read plane's per-page fallback), but the cluster is
+running degraded until someone restores the replication factor. The
+:class:`RepairService` is that someone:
+
+* **Re-replication** (:meth:`RepairService.run_once`): for every published
+  leaf with a replica on a dead (or failure-flagged) provider, copy the page
+  from a surviving replica onto healthy providers until ``replication``
+  copies exist again, then re-put the leaf with the corrected ref set — the
+  same sanctioned placement-only leaf rewrite the replica balancer performs,
+  serialized on the same lock.
+* **Metadata scrub** (:meth:`RepairService.scrub`): writer recovery. A
+  writer that died mid-``writev`` was withdrawn by
+  :meth:`~repro.core.version_manager.VersionManager.abandon`; if it had
+  become a publication *hole*, later published versions may carry border
+  links into trees the hole never (fully) stored. Readers survive those
+  dangling links through the version manager's redirect
+  (:meth:`~repro.core.version_manager.VersionManager.redirect_read_link`),
+  but the wreckage — partial nodes, orphan pages, phantom placement load —
+  stays behind. The scrub rewrites every inner link that points into an
+  aborted version to its redirect target and deletes the hole's stored
+  nodes and pages, returning their placement credit. Abandons are
+  journaled, so a recovered version manager replays the same holes and the
+  scrub remains valid after recovery.
+
+Both passes run under ONE level-2 lock: on clusters with a replica balancer
+the service *aliases* ``ReplicaBalancer._rebalance_lock`` (repair, promotion
+and GC exclusion serialize together — GC pausing the balancer pauses repair
+for free); without a balancer it constructs its own declared
+``RepairService._lock`` at the same level and :meth:`Cluster.gc` pauses
+repair through :meth:`RepairService.paused`.
+
+Scheduling: ``ProviderManager.on_dead`` (fired outside the manager lock) is
+wired to :meth:`RepairService.schedule`, which queues one pass on the
+cluster's aux pool — repair never steals a data-plane worker, and a flurry
+of death verdicts coalesces into one pass.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import TYPE_CHECKING, Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.lockwatch import make_lock
+from repro.core.dht import ProviderFailed
+from repro.core.segment_tree import NodeKey, PageRef, TreeNode
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (cluster imports us)
+    from repro.core.cluster import Cluster
+
+
+class RepairService:
+    """Restores the replication factor and scrubs abandoned-write wreckage.
+
+    Construct once per cluster (done by ``Cluster.__init__``); thread-safe.
+    ``run_once``/``scrub`` may be called directly (tests, admin tooling) or
+    arrive via :meth:`schedule` on the aux pool.
+    """
+
+    def __init__(self, cluster: "Cluster") -> None:
+        self.cluster = cluster
+        balancer = cluster.replica_balancer
+        #: level-2 pass lock; aliases the balancer's rebalance lock when the
+        #: balancer exists so repair/promotion/GC-exclusion serialize on one
+        #: lock (see lock_order.py — the two NAMES must never nest)
+        if balancer is not None:
+            self._lock = balancer._rebalance_lock
+        else:
+            self._lock = make_lock("RepairService._lock")
+        #: best-effort dedup for schedule(): a benign race (two schedulers
+        #: both passing the check) just queues one redundant no-op pass
+        self._queued = False
+        #: last background-pass failure, kept observable (aux-pool futures
+        #: are fire-and-forget)
+        self.last_error: Optional[BaseException] = None
+        #: total page copies re-replicated by this service
+        self.pages_repaired = 0
+        #: total nodes scrubbed (hole nodes deleted + inner links rewritten)
+        self.nodes_scrubbed = 0
+
+    # -- scheduling ----------------------------------------------------------
+    def schedule(self, provider_id: Optional[int] = None) -> None:
+        """Queue one repair pass on the cluster's aux pool (the
+        ``ProviderManager.on_dead`` hook). Death verdicts arriving while a
+        pass is queued coalesce — the pass snapshots the dead set when it
+        runs, so it covers them all. Never raises: a closed cluster simply
+        drops the pass."""
+        if self._queued:
+            return
+        self._queued = True
+        try:
+            self.cluster._aux_submit(self._run_background)
+        except RuntimeError:  # cluster closed: nothing left to repair
+            self._queued = False
+
+    def _run_background(self) -> None:
+        self._queued = False  # re-arm BEFORE running: a death verdict that
+        # lands mid-pass must queue a fresh pass for the state it changed
+        try:
+            self.run_once()
+        except BaseException as err:  # noqa: BLE001 - keep the aux pool alive
+            self.last_error = err
+
+    # -- GC interlock --------------------------------------------------------
+    @contextlib.contextmanager
+    def paused(self) -> Iterator[None]:
+        """Block repair/scrub passes for the duration. ``Cluster.gc`` uses
+        this on balancer-less clusters; with a balancer, pausing the
+        balancer pauses repair too (same underlying lock)."""
+        with self._lock:
+            yield
+
+    # -- re-replication ------------------------------------------------------
+    def run_once(self, scrub: bool = True) -> Tuple[int, int]:
+        """One full repair pass over every blob: re-replicate published
+        leaves that lost copies to dead/failed providers, then (by default)
+        scrub abandoned-write wreckage. Returns
+        ``(pages_repaired, nodes_scrubbed)`` for this pass.
+
+        Pages whose every replica is unreachable are *unrepairable* and
+        skipped — with ``replication`` copies that takes ``replication``
+        simultaneous deaths, the same bound any replicated store carries.
+        Stale pages left on a provider that later recovers are orphans until
+        :meth:`Cluster.gc` collects them (their leaves no longer reference
+        that provider)."""
+        with self._lock:
+            repaired = 0
+            scrubbed = 0
+            vm = self.cluster.version_manager
+            for blob_id in vm.blob_ids():
+                repaired += self._repair_blob_locked(blob_id)
+                if scrub:
+                    scrubbed += self._scrub_blob_locked(blob_id)
+            self.pages_repaired += repaired
+            self.nodes_scrubbed += scrubbed
+            return repaired, scrubbed
+
+    def _unavailable_pids(self) -> Set[int]:
+        pm = self.cluster.provider_manager
+        down = set(pm.dead_providers())
+        for provider in pm.providers():
+            if provider.failed:
+                down.add(provider.provider_id)
+        return down
+
+    def _repair_blob_locked(self, blob_id: int) -> int:
+        pm = self.cluster.provider_manager
+        vm = self.cluster.version_manager
+        metadata = self.cluster.metadata
+        down = self._unavailable_pids()
+        if not down:
+            return 0
+        published = vm.latest_published(blob_id)
+        aborted = vm.aborted_view(blob_id)
+        corrected: List[TreeNode] = []
+        released: List[PageRef] = []
+        repaired = 0
+        for key, node in metadata.iter_nodes(blob_id):
+            if not node.is_leaf:
+                continue
+            if key.version > published or key.version in aborted:
+                continue  # in-flight writers fix their own placements
+            refs = node.all_page_refs()
+            lost = [r for r in refs if r[0] in down]
+            if not lost:
+                continue
+            survivors = [r for r in refs if r[0] not in down]
+            if not survivors:
+                continue  # every replica down at once: unrepairable
+            page = self._fetch_from_survivors(survivors)
+            holders = {r[0] for r in refs}
+            fresh: List[PageRef] = []
+            if page is not None:
+                want = max(pm.replication - len(survivors), 0)
+                for _ in range(want):
+                    placed = self._place_copy(page, survivors[0][1], holders)
+                    if placed is None:
+                        break  # out of healthy capacity; drop lost refs anyway
+                    holders.add(placed[0])
+                    fresh.append(placed)
+                repaired += len(fresh)
+            # rewrite the leaf without the lost refs even when no fresh copy
+            # could be placed — readers must stop dialing dead providers
+            new_refs = survivors + fresh
+            corrected.append(
+                dataclasses.replace(
+                    node, page=new_refs[0], replicas=tuple(new_refs[1:])
+                )
+            )
+            released.extend(lost)
+        if corrected:
+            metadata.put_nodes(corrected)
+            pm.release(released)
+        if repaired:
+            self.cluster.stats.record_repair(repaired)
+        return repaired
+
+    def _fetch_from_survivors(self, survivors: List[PageRef]):
+        pm = self.cluster.provider_manager
+        for pid, page_key in survivors:
+            try:
+                page = pm.get_provider(pid).get_page(page_key)
+            except ProviderFailed:
+                pm.note_failure(pid)
+                continue
+            except KeyError:
+                continue
+            pm.note_success(pid)
+            return page
+        return None
+
+    def _place_copy(
+        self, page, page_key: int, holders: Set[int]
+    ) -> Optional[PageRef]:
+        """Copy ``page`` (stored under ``page_key``) onto the least-loaded
+        healthy provider not already holding it; returns the new ref or
+        ``None`` when no target qualifies."""
+        pm = self.cluster.provider_manager
+        tried: Set[int] = set()
+        while True:
+            target = pm.least_loaded(exclude=tuple(holders | tried))
+            if target is None:
+                return None
+            try:
+                pm.get_provider(target).put_pages([(page_key, page)])
+            except ProviderFailed:
+                pm.note_failure(target)
+                tried.add(target)
+                continue
+            except KeyError:
+                tried.add(target)
+                continue
+            pm.note_success(target)
+            pm.add_load(target, 1)
+            return (target, page_key)
+
+    # -- metadata scrub (writer recovery) ------------------------------------
+    def scrub(self, blob_id: int) -> int:
+        """Scrub one blob's abandoned-write wreckage; see module docstring.
+        Returns nodes scrubbed (holes deleted + inner links rewritten)."""
+        with self._lock:
+            n = self._scrub_blob_locked(blob_id)
+            self.nodes_scrubbed += n
+            return n
+
+    def _scrub_blob_locked(self, blob_id: int) -> int:
+        vm = self.cluster.version_manager
+        pm = self.cluster.provider_manager
+        metadata = self.cluster.metadata
+        aborted = vm.aborted_view(blob_id)
+        if not aborted:
+            return 0
+        doomed: List[NodeKey] = []
+        doomed_pages: Set[PageRef] = set()
+        rewritten: List[TreeNode] = []
+        for key, node in metadata.iter_nodes(blob_id):
+            if key.version in aborted:
+                # wreckage the abort left behind (partial puts of a hole)
+                doomed.append(key)
+                if node.is_leaf:
+                    doomed_pages.update(node.all_page_refs())
+                continue
+            if node.is_leaf:
+                continue
+            left, right = node.left_version, node.right_version
+            if left not in aborted and right not in aborted:
+                continue
+            half = key.size // 2
+            if left in aborted:
+                left = vm.redirect_read_link(blob_id, left, key.offset, half)
+            if right in aborted:
+                right = vm.redirect_read_link(
+                    blob_id, right, key.offset + half, half
+                )
+            rewritten.append(
+                dataclasses.replace(node, left_version=left, right_version=right)
+            )
+        if rewritten:
+            # unlink FIRST: once no stored link reaches the holes, deleting
+            # their nodes cannot strand a concurrent traversal (which also
+            # redirects on its own via the aborted view)
+            metadata.put_nodes(rewritten)
+        if doomed:
+            metadata.delete_nodes(doomed)
+            by_provider: Dict[int, List[int]] = {}
+            for pid, page_key in doomed_pages:
+                by_provider.setdefault(pid, []).append(page_key)
+            for pid, page_keys in by_provider.items():
+                try:  # best-effort: a down provider keeps orphans until GC
+                    pm.get_provider(pid).delete_pages(page_keys)
+                except (ProviderFailed, KeyError):
+                    pass
+            pm.release(sorted(doomed_pages))
+        return len(doomed) + len(rewritten)

@@ -270,6 +270,7 @@ def traverse_batch(
     total_pages: int,
     ranges: Sequence[Tuple[int, int]],
     on_leaves: Optional[Callable[["dict[int, TreeNode]"], None]] = None,
+    redirect: Optional[Callable[[int, int, int], int]] = None,
 ) -> "dict[int, Optional[TreeNode]]":
     """Resolve every page of several ``(offset, size)`` page ranges in ONE
     traversal pass: the tree is walked level-synchronously, and all node
@@ -291,6 +292,14 @@ def traverse_batch(
     level-granularity catch-all that works with ANY ``get_nodes``.)
     Implicit-zero pages are never emitted — there is nothing to fetch for
     them; every emitted page also appears in the returned dict.
+
+    ``redirect`` is the dangling-link hook of writer recovery: when given,
+    every child link ``(version, offset, size)`` is mapped through it before
+    the zero-check or any fetch. The version manager supplies a mapping that
+    sends links to *aborted* versions (holes left by failed writers whose
+    neighbors had already woven border links against them) to the newest
+    live version covering the segment — so a traversal never fetches a
+    node of a tree that was never fully stored. Identity for live links.
 
     Returns ``{page_index: leaf_or_None}`` for exactly the requested pages
     (``None`` = implicit all-zero page).
@@ -326,6 +335,8 @@ def traverse_batch(
             for child_v, co in ((node.left_version, o), (node.right_version, o + half)):
                 if not wanted(co, half):
                     continue
+                if redirect is not None and child_v != ZERO_VERSION:
+                    child_v = redirect(child_v, co, half)
                 if child_v == ZERO_VERSION:
                     mark_zero(co, half)
                 else:

@@ -58,6 +58,10 @@ class _BlobState:
     #: versions withdrawn by failed writers; publication skips over them but
     #: they are never readable (their trees were never fully stored)
     aborted: set = dataclasses.field(default_factory=set)
+    #: immutable snapshot of ``aborted``, swapped (never mutated) under the
+    #: manager lock — read paths grab it lock-free to decide whether the
+    #: aborted-link redirect machinery needs to engage at all
+    aborted_view: frozenset = frozenset()
     #: per-page latest assigned version, for O(range-max) border queries
     page_versions: Optional[np.ndarray] = None
 
@@ -184,19 +188,42 @@ class VersionManager:
           number is reused by the next writer;
         * a concurrent writer was assigned after it — the version becomes an
           *aborted hole*: publication skips over it, reads of it are
-          rejected, but its interval stays in the history because later
-          writers may already have woven border links against it (resolving
-          those dangling links is writer recovery, the paper's future work).
+          rejected, and its interval stays in the history, but the per-page
+          latest-version array is rolled back past it so every writer
+          assigned *from now on* links straight to live versions. Writers
+          assigned *before* the abandon may already have woven border links
+          against the hole; those dangling links are resolved on the read
+          path via :meth:`redirect_read_link` and eventually unlinked by the
+          repair service's metadata scrub.
 
         Returns the set of versions that became holes (empty when everything
-        was erased) — the caller must NOT scrub a hole's stored pages/nodes,
-        since later writers' trees may reference them.
+        was erased) — the caller must NOT scrub a hole's stored pages/nodes
+        inline, since pre-abandon writers' trees may reference them (the
+        scrub runs later, once the read-path redirect makes it safe).
         """
         holes: set = set()
         with self._lock:
             st = self._blobs[blob_id]
             pv = st.page_versions
             assert pv is not None
+
+            def rolled_back(offset: int, size: int) -> np.ndarray:
+                """What the per-page latest-version array should say for
+                ``[offset, offset+size)`` given only live (non-aborted)
+                interval history."""
+                seg = np.full(size, ZERO_VERSION, dtype=np.int64)
+                for w, (wo, ws) in st.intervals.items():
+                    if w in st.aborted:
+                        continue  # holes must never resurface in pv
+                    lo, hi = max(offset, wo), min(offset + size, wo + ws)
+                    if lo < hi:
+                        np.maximum(
+                            seg[lo - offset : hi - offset],
+                            w,
+                            out=seg[lo - offset : hi - offset],
+                        )
+                return seg
+
             for v in sorted(set(versions), reverse=True):
                 if (
                     v <= st.published
@@ -209,21 +236,20 @@ class VersionManager:
                 if v == st.assigned:
                     offset, size = st.intervals.pop(v)
                     st.assigned -= 1
-                    # roll the per-page latest-version array back to what the
-                    # remaining interval history implies for the erased span
-                    seg = np.full(size, ZERO_VERSION, dtype=np.int64)
-                    for w, (wo, ws) in st.intervals.items():
-                        lo, hi = max(offset, wo), min(offset + size, wo + ws)
-                        if lo < hi:
-                            np.maximum(
-                                seg[lo - offset : hi - offset],
-                                w,
-                                out=seg[lo - offset : hi - offset],
-                            )
-                    pv[offset : offset + size] = seg
+                    pv[offset : offset + size] = rolled_back(offset, size)
                 else:
                     st.aborted.add(v)
                     holes.add(v)
+                    # roll pv back over the hole too: pages still carrying v
+                    # recompute from live history, pages a later writer
+                    # already overwrote stay theirs
+                    offset, size = st.intervals[v]
+                    span = pv[offset : offset + size]
+                    mine = span == v
+                    if mine.any():
+                        span[mine] = rolled_back(offset, size)[mine]
+            if holes:
+                st.aborted_view = frozenset(st.aborted)
             self._advance_published_locked(st)
         return holes
 
@@ -286,6 +312,37 @@ class VersionManager:
         use this to step over holes without delivering them."""
         with self._lock:
             return version in self._blobs[blob_id].aborted
+
+    def aborted_view(self, blob_id: int) -> frozenset:
+        """Lock-free snapshot of the blob's aborted (hole) versions.
+
+        The common case is the empty frozenset, letting read paths skip the
+        dangling-link redirect entirely without touching the manager lock.
+        Memory visibility is safe: a reader resolving its read version takes
+        the manager lock *after* any abandon that published the hole, so the
+        swapped-in frozenset (an immutable object, never mutated) is at
+        least as fresh as the version being read."""
+        return self._blobs[blob_id].aborted_view
+
+    def redirect_read_link(
+        self, blob_id: int, version: int, offset: int, size: int
+    ) -> int:
+        """Resolve a dangling border link: a stored tree node links segment
+        ``[offset, offset+size)`` (in pages) to aborted ``version``. Returns
+        the most recent live version below it whose interval intersects the
+        segment — the version whose tree holds the segment's real content
+        (aborted versions in between never stored data, so skipping them is
+        exactly COW semantics) — or ``ZERO_VERSION`` when no live writer
+        ever touched the segment (implicit zeros)."""
+        with self._lock:
+            st = self._blobs[blob_id]
+            best = ZERO_VERSION
+            for w, (wo, ws) in st.intervals.items():
+                if w >= version or w <= best or w in st.aborted:
+                    continue
+                if wo < offset + size and offset < wo + ws:
+                    best = w
+            return best
 
     def wait_published(self, blob_id: int, version: int, timeout: Optional[float] = None) -> bool:
         """Block until ``version`` publishes (liveness helper for tests)."""

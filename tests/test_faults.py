@@ -1,0 +1,644 @@
+"""Self-healing data plane: health states, retry/backoff, mid-flight write
+re-placement, background re-replication, writer recovery, and the seeded
+chaos harness.
+
+The chaos tests drive live mixed traffic from several sessions while a
+deterministic :class:`FaultSchedule` kills/recovers providers and injects
+RPC drops/delays, then assert the interleaving-independent invariants the
+paper's lock-free design must hold: zero data loss for published versions,
+a monotone publish frontier, and replication-factor restoration after
+repair.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    DataProvider,
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+    HealthConfig,
+    ProviderFailed,
+    ProviderManager,
+    RetryPolicy,
+    TrafficStats,
+    VersionManager,
+)
+from repro.core.faults import DELAY, DROP, KILL, RECOVER
+
+PAGE = 256
+
+
+class FakeClock:
+    def __init__(self, start=1000.0):
+        self.now = start
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt):
+        self.now += dt
+
+
+def make_manager(n=4, replication=1, **health_kw):
+    clock = health_kw.pop("clock", FakeClock())
+    mgr = ProviderManager(
+        replication=replication,
+        stats=TrafficStats(),
+        health=HealthConfig(clock=clock, **health_kw),
+    )
+    for i in range(n):
+        mgr.register(DataProvider(i))
+    return mgr, clock
+
+
+# ----------------------------- health machine ---------------------------------
+
+
+def test_health_state_machine_live_suspect_dead():
+    mgr, clock = make_manager(suspect_after=1, dead_after=3, window_seconds=10.0)
+    assert mgr.health_state(0) == "live"
+    mgr.note_failure(0)
+    assert mgr.health_state(0) == "suspect"
+    mgr.note_failure(0)
+    assert mgr.health_state(0) == "suspect"
+    mgr.note_failure(0)
+    assert mgr.health_state(0) == "dead"
+    assert mgr.dead_providers() == [0]
+    # an observed success is the recovery signal
+    mgr.note_success(0)
+    assert mgr.health_state(0) == "live"
+    assert mgr.dead_providers() == []
+
+
+def test_health_failures_decay_outside_window():
+    mgr, clock = make_manager(suspect_after=1, dead_after=3, window_seconds=10.0)
+    mgr.note_failure(0)
+    mgr.note_failure(0)
+    clock.advance(11.0)  # both failures age out of the window
+    assert mgr.health_state(0) == "live"
+    mgr.note_failure(0)  # fresh failure alone: suspect, NOT dead
+    assert mgr.health_state(0) == "suspect"
+    assert mgr.dead_providers() == []
+
+
+def test_on_dead_fires_exactly_once_outside_lock():
+    mgr, _ = make_manager(dead_after=2)
+    deaths = []
+    mgr.on_dead = deaths.append
+    for _ in range(5):
+        mgr.note_failure(1)
+    assert deaths == [1]  # once per death, not per failure
+    mgr.note_success(1)
+    mgr.note_failure(1)
+    mgr.note_failure(1)
+    assert deaths == [1, 1]  # a NEW death after recovery fires again
+
+
+def test_healthy_providers_excludes_suspect_and_failed():
+    mgr, _ = make_manager(suspect_after=1, dead_after=3)
+    mgr.note_failure(0)
+    mgr.fail_provider(1)
+    healthy = {p.provider_id for p in mgr.healthy_providers()}
+    assert healthy == {2, 3}
+
+
+# --------------------------- placement satellites ------------------------------
+
+
+def test_allocate_skips_failed_and_dead_providers():
+    """Satellite regression: fresh pages must never land on a provider whose
+    failure flag is set or that the health machine declared dead."""
+    mgr, _ = make_manager(n=4, replication=2, dead_after=1)
+    mgr.fail_provider(0)
+    mgr.note_failure(3)  # dead_after=1 -> declared dead
+    out = mgr.allocate(40)
+    pids = {pid for primary, replicas in out for pid, _ in (primary,) + replicas}
+    assert pids == {1, 2}
+    # suspect providers STAY placeable (one blip must not evict a node)
+    mgr2, _ = make_manager(n=2, replication=1, suspect_after=1, dead_after=3)
+    mgr2.note_failure(0)
+    assert mgr2.health_state(0) == "suspect"
+    assert {p for (p, _), _ in mgr2.allocate(10)} == {0, 1}
+
+
+def test_allocate_raises_only_when_healthy_below_replication():
+    mgr, _ = make_manager(n=3, replication=2)
+    mgr.fail_provider(0)
+    mgr.allocate(4)  # 2 healthy of 3: still satisfiable
+    mgr.fail_provider(1)
+    with pytest.raises(ProviderFailed, match="1 healthy providers"):
+        mgr.allocate(4)
+    mgr.recover_provider(1)
+    assert mgr.allocate(4)  # recovery restores placement immediately
+
+
+def test_recovered_provider_resurfaces_in_placement():
+    mgr, _ = make_manager(n=2, replication=1)
+    mgr.fail_provider(0)
+    assert {p for (p, _), _ in mgr.allocate(6)} == {1}
+    mgr.recover_provider(0)
+    pids = {p for (p, _), _ in mgr.allocate(8)}
+    assert 0 in pids  # least-loaded now, must be discoverable again
+
+
+def test_deregister_releases_load_credit():
+    """Satellite: a departing provider's outstanding load credit must not
+    haunt the books (it skewed every later least-loaded decision)."""
+    mgr, _ = make_manager(n=2, replication=1)
+    placements = mgr.allocate(10)
+    held = sum(1 for (pid, _), _ in placements if pid == 0)
+    assert mgr.deregister(0) == held
+    assert 0 not in mgr.load_snapshot()
+    # the remaining provider's credit is untouched
+    assert mgr.load_snapshot()[1] == 10 - held
+
+
+def test_unknown_provider_ids_raise_clear_keyerror():
+    mgr, _ = make_manager(n=2)
+    for op in (mgr.get_provider, mgr.fail_provider, mgr.recover_provider,
+               mgr.health_state):
+        with pytest.raises(KeyError, match="unknown data provider id 99"):
+            op(99)
+
+
+# ------------------------------ retry policy -----------------------------------
+
+
+def test_retry_policy_deterministic_and_bounded():
+    a = RetryPolicy(seed=7)
+    b = RetryPolicy(seed=7)
+    delays = [a.delay(k) for k in range(5)]
+    assert delays == [b.delay(k) for k in range(5)]  # replayable
+    assert delays[0] < delays[1] < delays[2]  # exponential growth
+    for k, d in enumerate(delays):
+        assert d <= a.max_delay_seconds * (1 + a.jitter)
+    assert RetryPolicy(seed=8).delay(1) != a.delay(1)  # jitter is seeded
+
+
+def test_put_batch_retries_transient_failure_then_succeeds():
+    """A provider that blips for one RPC must not fail the write: the retry
+    layer absorbs it (and counts it), the health machine sees both sides."""
+    slept = []
+    cluster = Cluster(
+        n_data_providers=2, shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=3, sleep=slept.append),
+    )
+    provider = cluster.provider_manager.get_provider(0)
+    real_put = provider.put_pages
+    blips = {"left": 1}
+
+    def flaky_put(items):
+        if blips["left"]:
+            blips["left"] -= 1
+            raise ProviderFailed("injected blip")
+        return real_put(items)
+
+    provider.put_pages = flaky_put
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    v = handle.write(np.full(4 * PAGE, 9, np.uint8), 0)
+    assert slept, "backoff must have run"
+    assert cluster.stats.retries >= 1
+    np.testing.assert_array_equal(
+        handle.read(0, 4 * PAGE, version=v).data, np.full(4 * PAGE, 9, np.uint8)
+    )
+    assert cluster.provider_manager.health_state(0) == "live"  # success cleared
+    cluster.close()
+
+
+def test_writev_replaces_dead_providers_batch_midflight():
+    """Tentpole: a provider that dies AFTER placement does not abort the
+    writev — its batch is re-put on healthy providers, the leaves are
+    corrected, and the version publishes with full replication."""
+    cluster = Cluster(
+        n_data_providers=3, page_replication=2, shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+        health=HealthConfig(dead_after=1),
+    )
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    provider = cluster.provider_manager.get_provider(0)
+    started, release = threading.Event(), threading.Event()
+    real_put = provider.put_pages
+
+    def dying_put(items):
+        started.set()
+        assert release.wait(10)
+        return real_put(items)
+
+    provider.put_pages = dying_put
+    versions = []
+    t = threading.Thread(
+        target=lambda: versions.append(handle.write(np.full(6 * PAGE, 5, np.uint8), 0))
+    )
+    t.start()
+    assert started.wait(10)
+    cluster.provider_manager.fail_provider(0)  # dies mid-flight
+    release.set()
+    t.join(10)
+    assert versions == [1], "write must complete despite the death"
+    # the published version's leaves reference only live providers
+    for key, node in cluster.metadata.iter_nodes(handle.blob_id):
+        if node.is_leaf:
+            pids = [pid for pid, _ in node.all_page_refs()]
+            assert 0 not in pids
+            assert len(set(pids)) == 2  # replication preserved
+    # and the data is truly there (no cache: straight from the providers)
+    np.testing.assert_array_equal(
+        handle.read(0, 6 * PAGE, version=1).data, np.full(6 * PAGE, 5, np.uint8)
+    )
+    assert cluster.stats.retries >= 1
+    cluster.close()
+
+
+def test_degraded_read_falls_back_and_counts():
+    """Reads of data with a dead replica complete through the survivors and
+    are counted as degraded (the operator's signal that redundancy is low)."""
+    cluster = Cluster(n_data_providers=3, page_replication=2,
+                      shared_cache_bytes=0)
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    data = np.arange(8 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    cluster.provider_manager.fail_provider(0)
+    out = handle.read(0, 8 * PAGE, version=v).data
+    np.testing.assert_array_equal(out, data)
+    assert cluster.stats.replica_fallbacks >= 1
+    assert cluster.stats.degraded_reads >= 1
+    assert cluster.provider_manager.health_state(0) in ("suspect", "dead")
+    cluster.close()
+
+
+# ------------------------------- repair ----------------------------------------
+
+
+def test_repair_restores_replication_factor():
+    """Re-replication: after a provider is declared dead, a repair pass
+    copies its published pages from survivors onto healthy providers and
+    rewrites the leaves — the replication factor is whole again."""
+    cluster = Cluster(n_data_providers=4, page_replication=2,
+                      shared_cache_bytes=0, health=HealthConfig(dead_after=1))
+    pm = cluster.provider_manager
+    pm.on_dead = None  # drive the pass by hand for determinism
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(16 * PAGE, PAGE)
+    data = np.random.default_rng(3).integers(0, 255, 16 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    pm.fail_provider(0)
+    pm.note_failure(0)
+    assert pm.dead_providers() == [0]
+    repaired, _ = cluster.repair_service.run_once()
+    assert repaired > 0
+    assert cluster.stats.repaired_pages == repaired
+    for key, node in cluster.metadata.iter_nodes(handle.blob_id):
+        if node.is_leaf:
+            refs = node.all_page_refs()
+            pids = {pid for pid, _ in refs}
+            assert 0 not in pids, "leaves must stop referencing the dead node"
+            assert len(pids) == 2, "replication factor restored"
+            for pid, page_key in refs:
+                assert pm.get_provider(pid).has_page(page_key)
+    np.testing.assert_array_equal(
+        sess.open(handle.blob_id).read(0, 16 * PAGE, version=v).data, data
+    )
+    cluster.close()
+
+
+def test_death_schedules_background_repair():
+    """The on_dead hook queues repair on the aux pool automatically."""
+    cluster = Cluster(n_data_providers=4, page_replication=2,
+                      shared_cache_bytes=0, health=HealthConfig(dead_after=1))
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    handle.write(np.full(8 * PAGE, 3, np.uint8), 0)
+    cluster.provider_manager.fail_provider(1)
+    cluster.provider_manager.note_failure(1)  # -> dead -> schedule()
+    deadline = threading.Event()
+    for _ in range(200):  # aux-pool pass is asynchronous: poll briefly
+        if all(
+            1 not in {pid for pid, _ in node.all_page_refs()}
+            for key, node in cluster.metadata.iter_nodes(handle.blob_id)
+            if node.is_leaf
+        ):
+            break
+        deadline.wait(0.02)
+    assert cluster.repair_service.last_error is None
+    assert all(
+        1 not in {pid for pid, _ in node.all_page_refs()}
+        for key, node in cluster.metadata.iter_nodes(handle.blob_id)
+        if node.is_leaf
+    )
+    cluster.close()
+
+
+def test_unrepairable_when_all_replicas_dead_is_skipped():
+    cluster = Cluster(n_data_providers=2, page_replication=2,
+                      shared_cache_bytes=0, health=HealthConfig(dead_after=1))
+    pm = cluster.provider_manager
+    pm.on_dead = None
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(4 * PAGE, PAGE)
+    handle.write(np.full(4 * PAGE, 1, np.uint8), 0)
+    for pid in (0, 1):
+        pm.fail_provider(pid)
+        pm.note_failure(pid)
+    repaired, _ = cluster.repair_service.run_once()
+    assert repaired == 0  # nothing to copy FROM; no crash, no bogus rewrite
+    cluster.close()
+
+
+# --------------------------- writer recovery / scrub ---------------------------
+
+
+def _make_hole(cluster, sess, handle):
+    """Drive a writer into a publication hole: writer A blocks on its data
+    put, writer B is assigned after it, then every provider dies so A's
+    re-placement finds no target and A aborts. Returns B's version."""
+    blob = handle.blob_id
+    provider = cluster.provider_manager.get_provider(0)
+    started, release = threading.Event(), threading.Event()
+    real_put = provider.put_pages
+
+    def blocked_put(items):
+        started.set()
+        assert release.wait(10)
+        return real_put(items)
+
+    provider.put_pages = blocked_put
+    failures = []
+
+    def writer_a():
+        try:
+            handle.write(np.full(PAGE, 1, np.uint8), 0)
+        except ProviderFailed as err:
+            failures.append(err)
+
+    t = threading.Thread(target=writer_a)
+    t.start()
+    assert started.wait(10)
+    for _ in range(500):
+        if cluster.version_manager.assigned_versions(blob) >= 1:
+            break
+        threading.Event().wait(0.01)
+    v2 = cluster.session(cache_bytes=0).open(blob).write(
+        np.full(PAGE, 2, np.uint8), PAGE
+    )
+    for pid in (0, 1):
+        cluster.provider_manager.fail_provider(pid)
+    release.set()
+    t.join(10)
+    provider.put_pages = real_put
+    assert failures, "A must abort once no healthy target remains"
+    cluster.provider_manager.recover_provider(1)
+    return v2
+
+
+def test_hole_readers_redirect_around_dangling_links():
+    """Writer recovery, read side: B published with border links woven
+    against A's hole; readers resolve them to surviving versions instead of
+    crashing on missing nodes."""
+    cluster = Cluster(n_data_providers=2, shared_cache_bytes=0,
+                      retry_policy=RetryPolicy(max_attempts=1))
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    v2 = _make_hole(cluster, sess, handle)
+    vm = cluster.version_manager
+    assert vm.latest_published(handle.blob_id) == v2
+    assert vm.aborted_view(handle.blob_id) == frozenset([1])
+    reader = cluster.session(cache_bytes=0).open(handle.blob_id)
+    np.testing.assert_array_equal(
+        reader.read(PAGE, PAGE, version=v2).data, np.full(PAGE, 2, np.uint8)
+    )
+    # the region A never published reads as zeros, not as A's lost bytes
+    np.testing.assert_array_equal(
+        reader.read(0, PAGE, version=v2).data, np.zeros(PAGE, np.uint8)
+    )
+    cluster.close()
+
+
+def test_scrub_unlinks_dangling_links_and_reclaims_wreckage():
+    """Writer recovery, scrub side: the metadata scrub rewrites inner links
+    pointing into the hole and deletes the hole's stored nodes/pages —
+    reads stay correct before AND after."""
+    cluster = Cluster(n_data_providers=2, shared_cache_bytes=0,
+                      retry_policy=RetryPolicy(max_attempts=1))
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    blob = handle.blob_id
+    v2 = _make_hole(cluster, sess, handle)
+    hole_nodes_before = [
+        key for key, _ in cluster.metadata.iter_nodes(blob) if key.version == 1
+    ]
+    scrubbed = cluster.repair_service.scrub(blob)
+    assert scrubbed >= len(hole_nodes_before)
+    assert not any(
+        key.version == 1 for key, _ in cluster.metadata.iter_nodes(blob)
+    ), "hole wreckage gone"
+    assert not any(
+        node.left_version == 1 or node.right_version == 1
+        for _, node in cluster.metadata.iter_nodes(blob)
+        if not node.is_leaf
+    ), "no stored link reaches the hole anymore"
+    reader = cluster.session(cache_bytes=0).open(blob)
+    np.testing.assert_array_equal(
+        reader.read(PAGE, PAGE, version=v2).data, np.full(PAGE, 2, np.uint8)
+    )
+    cluster.close()
+
+
+def test_abandon_journal_replay_reconstructs_state():
+    """Satellite: recover() on a journal with interleaved assign / success /
+    abandon entries rebuilds the same publish frontier, holes, and per-page
+    version array as the live manager."""
+    vm = VersionManager()
+    blob = vm.alloc(16, PAGE)
+    v1, _ = vm.assign_version(blob, 0, 4)
+    v2, _ = vm.assign_version(blob, 2, 4)
+    v3, _ = vm.assign_version(blob, 8, 4)
+    vm.report_success(blob, v1)
+    vm.abandon(blob, [v2])          # hole (v3 assigned after it)
+    vm.report_success(blob, v3)
+    v4, _ = vm.assign_version(blob, 0, 2)
+    vm.abandon(blob, [v4])          # tail erase: number reused
+    v4b, _ = vm.assign_version(blob, 12, 4)
+    assert v4b == v4
+    vm.report_success(blob, v4b)
+
+    recovered, orphans = VersionManager.recover(list(vm.journal))
+    assert recovered.latest_published(blob) == vm.latest_published(blob)
+    assert recovered.aborted_view(blob) == vm.aborted_view(blob)
+    assert recovered.assigned_versions(blob) == vm.assigned_versions(blob)
+    np.testing.assert_array_equal(
+        recovered._blobs[blob].page_versions, vm._blobs[blob].page_versions
+    )
+    assert orphans == {blob: []}
+
+
+# ------------------------------ chaos harness ----------------------------------
+
+
+def test_fault_schedule_generation_is_deterministic_and_bounded():
+    a = FaultSchedule.generate(seed=11, n_providers=8, max_dead=2)
+    b = FaultSchedule.generate(seed=11, n_providers=8, max_dead=2)
+    assert a.events == b.events
+    assert a.events != FaultSchedule.generate(seed=12, n_providers=8).events
+    dead = set()
+    for ev in a.events:
+        if ev.action == KILL:
+            dead.add(ev.provider_id)
+            assert len(dead) <= 2
+        elif ev.action == RECOVER:
+            dead.discard(ev.provider_id)
+    assert not dead, "generate(recover_all=True) must recover everyone"
+
+
+def test_injector_drop_fails_exactly_one_rpc():
+    cluster = Cluster(n_data_providers=1, shared_cache_bytes=0,
+                      retry_policy=RetryPolicy(max_attempts=1))
+    schedule = FaultSchedule([FaultEvent(1, DROP, 0)])
+    injector = FaultInjector(cluster, schedule)
+    injector.attach()
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(4 * PAGE, PAGE)
+    with pytest.raises(ProviderFailed, match="injected drop"):
+        handle.write(np.full(PAGE, 1, np.uint8), 0)
+    # the drop was one-shot: the very next write sails through
+    v = handle.write(np.full(PAGE, 2, np.uint8), 0)
+    injector.detach()
+    np.testing.assert_array_equal(
+        handle.read(0, PAGE, version=v).data, np.full(PAGE, 2, np.uint8)
+    )
+    cluster.close()
+
+
+def test_injector_drop_is_absorbed_by_retry():
+    cluster = Cluster(n_data_providers=1, shared_cache_bytes=0,
+                      retry_policy=RetryPolicy(max_attempts=3,
+                                               sleep=lambda s: None))
+    injector = FaultInjector(cluster, FaultSchedule([FaultEvent(1, DROP, 0)]))
+    injector.attach()
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(4 * PAGE, PAGE)
+    v = handle.write(np.full(PAGE, 7, np.uint8), 0)  # retry absorbs the drop
+    injector.detach()
+    assert v == 1
+    assert cluster.stats.retries >= 1
+    cluster.close()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_mixed_traffic_zero_published_data_loss(seed):
+    """THE acceptance chaos test: 8 providers, 3-way replication, live mixed
+    traffic from multiple writer+reader sessions while a seeded schedule
+    kills up to 2 providers at a time (and injects drops/delays). Published
+    versions must lose nothing, reads must all complete, the frontier must
+    be monotone, and repair must restore full replication after recovery."""
+    n_providers, replication = 8, 3
+    cluster = Cluster(
+        n_data_providers=n_providers, page_replication=replication,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=3, base_delay_seconds=0.001,
+                                 max_delay_seconds=0.004),
+        health=HealthConfig(dead_after=2, window_seconds=60.0),
+    )
+    writer_sessions = [cluster.session(cache_bytes=0) for _ in range(2)]
+    blob = writer_sessions[0].create(64 * PAGE, PAGE).blob_id
+    schedule = FaultSchedule.generate(
+        seed=seed, n_providers=n_providers, n_events=10, max_dead=2,
+        min_gap=3, max_gap=25,
+    )
+    injector = FaultInjector(cluster, schedule)
+    injector.attach()
+
+    published = []  # (version, page_offset, n_pages, fill) — the oracle
+    published_lock = threading.Lock()
+    frontiers = []
+    errors = []
+    n_rounds, regions = 8, 4  # each writer owns `regions` disjoint regions
+
+    def writer(wid, sess):
+        handle = sess.open(blob)
+        fill = 1
+        for r in range(n_rounds):
+            region = (wid * regions + r % regions) * 8  # 8-page regions
+            value = (wid * 100 + fill) % 251 + 1
+            fill += 1
+            try:
+                v = handle.write(
+                    np.full(8 * PAGE, value, np.uint8), region * PAGE
+                )
+            except ProviderFailed:
+                continue  # aborted cleanly (no healthy target at that instant)
+            with published_lock:
+                published.append((v, region, 8, value))
+
+    def reader():
+        sess = cluster.session(cache_bytes=0)
+        handle = sess.open(blob)
+        last = 0
+        for _ in range(30):
+            v = handle.latest_published()
+            assert v >= last, "publish frontier must be monotone"
+            frontiers.append(v)
+            last = v
+            if v:
+                try:
+                    handle.read(0, 64 * PAGE, version=v)
+                except ProviderFailed as err:  # pragma: no cover - must not happen
+                    errors.append(err)
+            threading.Event().wait(0.002)
+
+    threads = [
+        threading.Thread(target=writer, args=(i, s))
+        for i, s in enumerate(writer_sessions)
+    ] + [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, f"reads failed under chaos: {errors[:3]}"
+
+    injector.drain()   # recover any provider still down
+    injector.detach()
+    repaired, scrubbed = cluster.repair_service.run_once()
+
+    # -- zero data loss: every published write is byte-exact from providers
+    checker = cluster.session(cache_bytes=0).open(blob)
+    latest = checker.latest_published()
+    for v, region, n, value in published:
+        out = checker.read(region * PAGE, n * PAGE, version=v).data
+        np.testing.assert_array_equal(
+            out, np.full(n * PAGE, value, np.uint8),
+            err_msg=f"seed {seed}: version {v} lost data",
+        )
+    # -- the full blob at the frontier matches the newest write per region
+    expected = np.zeros(64 * PAGE, np.uint8)
+    for v, region, n, value in sorted(published):
+        if v <= latest:
+            expected[region * PAGE:(region + n) * PAGE] = value
+    np.testing.assert_array_equal(
+        checker.read(0, 64 * PAGE, version=latest).data, expected
+    )
+    # -- replication factor restored on every published leaf
+    pm = cluster.provider_manager
+    aborted = cluster.version_manager.aborted_view(blob)
+    for key, node in cluster.metadata.iter_nodes(blob):
+        if not node.is_leaf or key.version > latest or key.version in aborted:
+            continue
+        refs = node.all_page_refs()
+        pids = {pid for pid, _ in refs}
+        # >= not ==: the replica balancer may have promoted hot pages to
+        # EXTRA replicas under the reader traffic, which is fine
+        assert len(pids) >= replication, (
+            f"seed {seed}: leaf {key} under-replicated after repair: {refs}"
+        )
+        for pid, page_key in refs:
+            provider = pm.get_provider(pid)
+            assert not provider.failed
+            assert provider.has_page(page_key)
+    cluster.close()

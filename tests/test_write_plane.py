@@ -94,6 +94,7 @@ def test_abort_leaks_hole_version_wreckage_for_later_readers():
     into them."""
     sess = make_session(n_data_providers=2, cache_bytes=0)
     cluster = sess.cluster
+    cluster.provider_manager.on_dead = None  # scrubbing is RepairService's job
     handle = sess.create(8 * PAGE, PAGE)
     blob = handle.blob_id
     started, release = _blocking_provider(cluster, 0)
@@ -115,7 +116,10 @@ def test_abort_leaks_hole_version_wreckage_for_later_readers():
     # B runs in its own session, assigned after A
     v2 = cluster.session().open(blob).write(page(2), PAGE)
     assert v2 == 2
-    cluster.provider_manager.fail_provider(0)
+    # EVERY provider fails: A's mid-flight re-placement (which would
+    # otherwise rescue the write onto provider 1) has no target -> abort
+    for pid in (0, 1):
+        cluster.provider_manager.fail_provider(pid)
     release.set()
     t.join(10)
     assert failed  # A's data put raised and its writev aborted
@@ -126,8 +130,10 @@ def test_abort_leaks_hole_version_wreckage_for_later_readers():
     from repro.core import NodeKey
     leaked = dict(cluster.metadata.iter_nodes(blob))
     assert NodeKey(blob, 1, 0, 1) in leaked
-    # B's own data is readable; A's page is genuinely lost (never stored),
-    # which is writer-recovery territory — but the metadata spine is intact
+    # B's own data is readable once its provider rejoins; A's page is
+    # genuinely lost (never stored), which is writer-recovery territory —
+    # but the metadata spine is intact
+    cluster.provider_manager.recover_provider(1)
     np.testing.assert_array_equal(
         handle.read(PAGE, PAGE, version=v2).data, page(2)
     )
@@ -360,16 +366,31 @@ def test_flush_surfaces_async_write_failure():
 
 
 def test_failed_writev_releases_placements_and_deletes_orphans():
-    """Satellite: a mid-writev provider failure must not leak load credits,
-    stored pages, or metadata nodes — and must not wedge publication."""
-    sess = make_session(cache_bytes=0)
+    """Satellite: a mid-writev provider failure with no healthy provider
+    left to re-place onto must not leak load credits, stored pages, or
+    metadata nodes — and must not wedge publication."""
+    # replication 2 over 2 providers: every page holds a ref on BOTH, so
+    # when provider 0 dies mid-flight the re-placement has no target left
+    sess = make_session(n_data_providers=2, page_replication=2, cache_bytes=0)
     cluster = sess.cluster
+    cluster.provider_manager.on_dead = None  # keep the abort path isolated
     handle = sess.create(16 * PAGE, PAGE)
     baseline_load = cluster.provider_manager.load_snapshot()
-    cluster.provider_manager.fail_provider(2)
+    provider = cluster.provider_manager.get_provider(0)
+    real_put = provider.put_pages
+    dropping = [True]
+
+    def crashed_put(items):
+        if dropping[0]:
+            raise ProviderFailed("injected: provider crashed mid-writev")
+        return real_put(items)
+
+    provider.put_pages = crashed_put
     with pytest.raises(ProviderFailed):
-        # 8 pages over 4 providers: the failed one is guaranteed a batch
+        # every retry fails, the health machine declares provider 0 dead,
+        # and the mid-flight re-placement finds no healthy non-holder
         handle.write(page(1, 8 * PAGE), 0)
+    assert cluster.provider_manager.dead_providers() == [0]
     # placement credits returned
     assert cluster.provider_manager.load_snapshot() == baseline_load
     # orphaned pages deleted from the live providers
@@ -382,7 +403,8 @@ def test_failed_writev_releases_placements_and_deletes_orphans():
     assert cluster.metadata.total_nodes() == 0
     # the assigned version was withdrawn: nothing wedges, number is reused
     assert cluster.version_manager.assigned_versions(handle.blob_id) == 0
-    cluster.provider_manager.recover_provider(2)
+    dropping[0] = False
+    cluster.provider_manager.recover_provider(0)  # rejoin: live + placeable
     v = handle.write(page(2, 4 * PAGE), 0)
     assert v == 1
     assert handle.latest_published() == 1
