@@ -26,6 +26,13 @@ On top of the paper's sweep, the client-side scaling modes:
   within 2x of the healthy cached-read aggregate at 16 clients, with the
   ``retries``/``degraded_reads``/``repaired_pages`` columns showing the
   self-healing machinery at work (see ``docs/FAULTS.md``).
+* ``degraded-metadata`` — the same cached-read workload with a
+  2-way-replicated METADATA plane where client 0 kills one of each node's
+  two replica shards halfway through the window: the second half runs on
+  metadata replica fallback under the bounded retry policy. Acceptance:
+  aggregate read bandwidth >= 0.5x the healthy cached-read run at 16
+  clients, with the ``metadata_retries``/``checksum_failures`` columns
+  showing the plane degrading instead of hanging.
 * ``readv`` — each iteration fetches K overlapping segments in ONE vectored
   call: shared pages are deduplicated and each data provider sees one
   aggregated RPC, so ``data_rounds`` collapses vs K separate reads.
@@ -111,7 +118,8 @@ from repro.configs.paper_sky import CONFIG as SKY
 from repro.core import BalancerConfig, Cluster, PrefetchConfig, Session
 
 MODES = ("read", "write", "stream-write", "mixed", "hot-read", "cached-read",
-         "degraded-read", "readv", "skew-read-primary", "skew-read",
+         "degraded-read", "degraded-metadata", "readv",
+         "skew-read-primary", "skew-read",
          "multi-session-private", "multi-session",
          "stream-read", "watch-read")
 #: the pre-pipeline write path, kept out of the default sweep: enable the
@@ -142,6 +150,16 @@ SKEW_MAX_EXTRA_REPLICAS = 9
 #: aggregate bandwidth at 16 clients
 DEGRADED_PROVIDERS = 8
 DEGRADED_REPLICATION = 2
+#: degraded-metadata topology: the cached-read workload on a 2-way-replicated
+#: METADATA plane (consecutive-shard replicas); client 0 kills every even
+#: shard halfway through the window — with R=2 that is exactly ONE of each
+#: node's two replica homes — so the second half runs on metadata replica
+#: fallback under the bounded retry policy. A/B against cached-read: within
+#: 2x of healthy aggregate bandwidth at 16 clients, with the
+#: ``metadata_retries``/``checksum_failures`` columns showing the plane
+#: degrading instead of hanging (see ``docs/FAULTS.md``)
+DEGRADED_META_SHARDS = 8
+DEGRADED_META_REPLICATION = 2
 
 #: multi-session modes: per-page service time — the provider-side resource a
 #: shared cache tier saves (each page crosses the network once per NODE, not
@@ -192,6 +210,14 @@ def _make_cluster(mode: str, n_providers: int, n_clients: int = 1) -> Cluster:
         return Cluster(
             n_data_providers=DEGRADED_PROVIDERS,
             n_metadata_providers=n_providers,
+            max_workers=4 * DEGRADED_PROVIDERS, shared_cache_bytes=0,
+            page_replication=DEGRADED_REPLICATION,
+        )
+    if mode == "degraded-metadata":
+        return Cluster(
+            n_data_providers=DEGRADED_PROVIDERS,
+            n_metadata_providers=DEGRADED_META_SHARDS,
+            metadata_replication=DEGRADED_META_REPLICATION,
             max_workers=4 * DEGRADED_PROVIDERS, shared_cache_bytes=0,
             page_replication=DEGRADED_REPLICATION,
         )
@@ -278,7 +304,8 @@ def _make_sessions(mode: str, cluster: Cluster, n_clients: int) -> List[Session]
         # the paper's baseline stays the baseline
         session = cluster.session(
             cache_bytes=(128 << 20)
-            if mode in ("cached-read", "degraded-read") else 0
+            if mode in ("cached-read", "degraded-read", "degraded-metadata")
+            else 0
         )
     return [session] * n_clients
 
@@ -345,7 +372,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 # mixed never re-reads the prefill versions).
                 hot = SKY.hot_interval
                 if mode in ("hot-read", "cached-read", "degraded-read",
-                            "readv"):
+                            "degraded-metadata", "readv"):
                     hot = min(hot, 64 << 20)
                 if mode.startswith("skew-read"):
                     hot = SKEW_WINDOW_PAGES * page_size
@@ -361,7 +388,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     or mode in MULTI_SESSION_MODES
                     or mode in STREAM_READ_MODES
                     or mode in ("hot-read", "cached-read", "degraded-read",
-                                "readv")
+                                "degraded-metadata", "readv")
                 )
                 if mode == "watch-read":
                     pass  # frames are published live by the epoch writer thread
@@ -458,7 +485,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                             seg = (i + phase) % mode_iters
                             moved += handle.read(seg * seg_bytes, seg_bytes).data.size
                         elif mode in ("hot-read", "cached-read",
-                                      "degraded-read"):
+                                      "degraded-read", "degraded-metadata"):
                             # detector re-read pattern: each client cycles over a
                             # few half-overlapping windows that also overlap its
                             # neighbours' — repeat pages dominate
@@ -469,6 +496,16 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                                 # fallback while background repair re-
                                 # replicates (degraded_reads/repaired columns)
                                 cluster.provider_manager.fail_provider(0)
+                            if (mode == "degraded-metadata" and cid == 0
+                                    and i == mode_iters // 2):
+                                # every even metadata shard crashes mid-
+                                # measurement — exactly one of each node's
+                                # two consecutive replica homes. Reads keep
+                                # completing through metadata replica
+                                # fallback under the bounded retry policy
+                                # (metadata_retries column)
+                                for sid in range(0, DEGRADED_META_SHARDS, 2):
+                                    cluster.metadata.fail_shard(sid)
                             span = max(hot - seg_bytes, page_size)
                             off = ((cid * 3 + (i % 4)) * (seg_bytes // 2)) % span
                             moved += handle.read(off, seg_bytes).data.size
@@ -595,6 +632,10 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     replica_fallbacks=cluster.stats.replica_fallbacks,
                     degraded_reads=cluster.stats.degraded_reads,
                     repaired_pages=cluster.stats.repaired_pages,
+                    # metadata-plane fault counters (degraded-metadata is
+                    # their showcase; nonzero elsewhere means real trouble)
+                    metadata_retries=cluster.stats.metadata_retries,
+                    checksum_failures=cluster.stats.checksum_failures,
                 )
                 cluster.close()
                 if best is None or row["aggregate_MBps"] >= best["aggregate_MBps"]:
@@ -610,7 +651,8 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
 CSV_HEADER = ("mode,clients,per_client_MBps,min_client_MBps,aggregate_MBps,"
               "data_rounds,cache_hit_rate,promotions,write_skew,"
               "p50_ms,p99_ms,first_read_hit_rate,"
-              "retries,replica_fallbacks,degraded_reads,repaired_pages")
+              "retries,replica_fallbacks,degraded_reads,repaired_pages,"
+              "metadata_retries,checksum_failures")
 
 
 def to_csv(rows: Sequence[dict]) -> List[str]:
@@ -623,7 +665,8 @@ def to_csv(rows: Sequence[dict]) -> List[str]:
             f"{r.get('write_skew', 0.0):.2f},{r.get('p50_ms', 0.0):.1f},"
             f"{r.get('p99_ms', 0.0):.1f},{r.get('first_read_hit_rate', 0.0):.2f},"
             f"{r.get('retries', 0)},{r.get('replica_fallbacks', 0)},"
-            f"{r.get('degraded_reads', 0)},{r.get('repaired_pages', 0)}"
+            f"{r.get('degraded_reads', 0)},{r.get('repaired_pages', 0)},"
+            f"{r.get('metadata_retries', 0)},{r.get('checksum_failures', 0)}"
         )
     return out
 

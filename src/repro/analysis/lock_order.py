@@ -107,6 +107,10 @@ LOCKS = [
                   "lock, so nesting the two names is a self-deadlock (equal "
                   "levels forbid it)"),
     LockSpec("ProviderManager._lock", 4),
+    LockSpec("MetadataDHT._health_lock", 4,
+             note="shard health records (failure window + dead set), the "
+                  "metadata mirror of ProviderManager._lock; on_dead fires "
+                  "OUTSIDE it"),
     LockSpec("ReplicaBalancer._heat_lock", 4),
     # -- level 5: leaves ------------------------------------------------------
     LockSpec("PageCache._lock", 5),

@@ -453,6 +453,83 @@ def _actors_warmer_vs_demand(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
     ]
 
 
+# -- scenario: metadata shard failover vs concurrent publish ------------------
+
+def _build_shard_failover_vs_publish() -> SimpleNamespace:
+    from repro.core.cluster import Cluster
+    from repro.core.dht import RetryPolicy
+
+    cluster = Cluster(
+        n_data_providers=2,
+        n_metadata_providers=2,
+        metadata_replication=2,  # every node on BOTH shards: failover always has a home
+        max_workers=2,
+        shared_cache_bytes=0,  # every read re-traverses the metadata plane
+        hot_replicas=False,
+        retry_policy=RetryPolicy(max_attempts=1, sleep=lambda s: None),
+    )
+    ctx = SimpleNamespace(cluster=cluster, errors=[])
+    ctx.blob_id = cluster.alloc(_PAGE * _PAGES, _PAGE)
+    ctx.session = cluster.session(cache_bytes=0)
+    ctx.handle = ctx.session.open(ctx.blob_id)
+    ctx.handle.write(_fill(1), 0)  # v1 on both replicas before the race
+    return ctx
+
+
+def _actors_shard_failover_vs_publish(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    """A metadata shard dies, rejoins blank of the versions published while
+    it was down, and is re-replicated — all racing a writer that keeps
+    publishing and a reader that keeps traversing. The reader must NEVER
+    observe a torn tree (an inner node resolved on one replica pointing at a
+    leaf state the other replica never stored): every read is uniform and a
+    value some published version actually wrote."""
+
+    def publish(value):
+        return lambda: ctx.handle.write(_fill(value), 0)
+
+    def kill():
+        ctx.cluster.metadata.fail_shard(0)
+
+    def rejoin():
+        # rejoins LIVE but stale: nodes published during the outage are
+        # missing until the repair step — the classic torn-tree window
+        ctx.cluster.metadata.recover_shard(0)
+
+    def repair():
+        ctx.cluster.repair_service.run_once()
+
+    def read():
+        data = ctx.handle.read(0, _PAGE * _PAGES).data
+        _check_uniform(ctx, data, "read across shard failover")
+
+    return [
+        ("writer", [publish(2), publish(3)]),
+        ("failover", [kill, rejoin, repair]),
+        ("reader", [read, read]),
+    ]
+
+
+def _finalize_shard_failover_vs_publish(ctx) -> None:
+    metadata = ctx.cluster.metadata
+    if metadata.dead_shards() or metadata.shards[0].failed:
+        metadata.recover_shard(0)
+    ctx.cluster.repair_service.run_once()
+    data = ctx.handle.read(0, _PAGE * _PAGES).data
+    if not (data == _fill(3)).all():
+        ctx.errors.append(
+            "after failover + repair the frontier read is not v3's data")
+    # replication whole again: every journal-covered node on BOTH shards
+    vm = ctx.cluster.version_manager
+    published, aborted = vm.repair_horizon(ctx.blob_id)
+    for key, node in metadata.iter_nodes(ctx.blob_id):
+        if key.version > published or key.version in aborted:
+            continue
+        for sid in metadata._replica_ids(key):
+            if metadata.shards[sid].get(key) is None:
+                ctx.errors.append(
+                    f"replica {sid} missing {key} after failover repair")
+
+
 SCENARIOS: Dict[str, Scenario] = {
     s.name: s
     for s in [
@@ -466,6 +543,10 @@ SCENARIOS: Dict[str, Scenario] = {
                  finalize=_finalize_write_async_vs_flush),
         Scenario("warmer_vs_demand_read",
                  _build_warmer_vs_demand, _actors_warmer_vs_demand),
+        Scenario("shard_failover_vs_publish",
+                 _build_shard_failover_vs_publish,
+                 _actors_shard_failover_vs_publish,
+                 finalize=_finalize_shard_failover_vs_publish),
     ]
 }
 

@@ -20,7 +20,12 @@ from repro.core.cluster import (
     VersionWatch,
 )
 from repro.core.cluster import RetryPolicy
-from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.dht import (
+    MetadataDHT,
+    ProviderFailed,
+    TrafficStats,
+    page_checksum,
+)
 from repro.core.faults import FaultEvent, FaultInjector, FaultSchedule
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
@@ -68,6 +73,7 @@ __all__ = [
     "MetadataDHT",
     "ProviderFailed",
     "TrafficStats",
+    "page_checksum",
     "FlatView",
     "ZERO_PAGE",
     "flatten",

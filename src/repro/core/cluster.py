@@ -56,7 +56,13 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Set, Tupl
 import numpy as np
 
 from repro.analysis.lockwatch import make_lock
-from repro.core.dht import MetadataDHT, ProviderFailed, TrafficStats
+from repro.core.dht import (
+    MetadataDHT,
+    ProviderFailed,
+    RetryPolicy,
+    TrafficStats,
+    page_checksum,
+)
 from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
 from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
 from repro.core.provider import DataProvider, HealthConfig, ProviderManager
@@ -81,36 +87,8 @@ DEFAULT_CACHE_BYTES = 64 << 20
 DEFAULT_SHARED_CACHE_BYTES = 256 << 20
 
 
-@dataclasses.dataclass(frozen=True)
-class RetryPolicy:
-    """Bounded retry with exponential backoff for data-plane RPCs.
-
-    The jitter is *deterministic*: attempt ``k`` of a policy with seed ``s``
-    always backs off the same amount, so a chaos test with an injected
-    ``sleep`` (and the injected clock in :class:`~repro.core.provider.
-    HealthConfig`) replays identically. Backoff never runs under a lock —
-    every retry loop lives on a pool worker between RPCs.
-    """
-
-    max_attempts: int = 3
-    base_delay_seconds: float = 0.005
-    multiplier: float = 2.0
-    max_delay_seconds: float = 0.1
-    jitter: float = 0.5
-    seed: int = 0
-    sleep: Callable[[float], None] = time.sleep
-
-    def delay(self, attempt: int) -> float:
-        """Backoff before retry number ``attempt`` (0-based)."""
-        base = min(
-            self.base_delay_seconds * self.multiplier ** attempt,
-            self.max_delay_seconds,
-        )
-        frac = random.Random(self.seed * 0x9E3779B1 + attempt).random()
-        return base * (1.0 + self.jitter * frac)
-
-    def backoff(self, attempt: int) -> None:
-        self.sleep(self.delay(attempt))
+# NOTE: RetryPolicy lives in repro.core.dht now (both planes share it); the
+# import above keeps ``from repro.core.cluster import RetryPolicy`` working.
 
 
 @dataclasses.dataclass
@@ -226,7 +204,11 @@ class _PageFetchStream:
 
     def join(self) -> Dict[int, Optional[np.ndarray]]:
         session = self._session
-        fallback: List[Tuple[int, TreeNode, int]] = []
+        #: (page, leaf, skip_pid, corrupt_refs): pages needing per-page
+        #: replica fallback — the whole batch when the provider failed, or
+        #: individual pages whose fetched bytes failed checksum verification
+        #: (those also carry the corrupt copy's ref so it gets repaired)
+        fallback: List[Tuple[int, TreeNode, int, Tuple]] = []
         fetched_leaves: List[TreeNode] = []
         # drain futures may schedule no successors, so a single pass over
         # the (append-only) future list until it stops growing joins all
@@ -240,9 +222,16 @@ class _PageFetchStream:
                 pid, items, got = f.result()
                 fetched_leaves.extend(leaf for _, _, leaf in items)
                 if got is None:
-                    fallback.extend((p, leaf, pid) for p, _, leaf in items)
+                    fallback.extend((p, leaf, pid, ()) for p, _, leaf in items)
                 else:
                     self._result.update(got)
+                    # pages absent from a successful batch failed their
+                    # checksum: fall back AND repair the corrupt copy
+                    fallback.extend(
+                        (p, leaf, pid, ((pid, key),))
+                        for p, key, leaf in items
+                        if p not in got
+                    )
             done = len(futures)
         if fallback:
             # replica fallback in parallel, skipping the observed-dead choice;
@@ -254,12 +243,14 @@ class _PageFetchStream:
             session._record_fallback(len(fallback))
             session._record_degraded(1)
             fb = [
-                session._pool.submit(session._fetch_single, p, leaf, skip)
-                for p, leaf, skip in fallback
+                session._pool.submit(
+                    session._fetch_single, p, leaf, skip, corrupt
+                )
+                for p, leaf, skip, corrupt in fallback
             ]
             with self._lock:
                 self._futures.extend(fb)
-            for (p, _, _), f in zip(fallback, fb):
+            for (p, _, _, _), f in zip(fallback, fb):
                 self._result[p] = f.result()
         if session.cluster.replica_balancer is not None and fetched_leaves:
             session.cluster.replica_balancer.note_fetches(fetched_leaves)
@@ -298,10 +289,12 @@ class Cluster:
         metadata_latency_seconds: float = 0.0,
         retry_policy: Optional[RetryPolicy] = None,
         health: Optional[HealthConfig] = None,
+        metadata_timeout_seconds: Optional[float] = None,
     ) -> None:
         #: cluster-wide aggregate traffic (every session records here too)
         self.stats = TrafficStats()
-        #: data-plane RPC retry/backoff policy (injectable for chaos tests)
+        #: RPC retry/backoff policy, shared by BOTH planes (injectable for
+        #: chaos tests); ``health`` likewise configures both health machines
         self.retry_policy = retry_policy or RetryPolicy()
         self.version_manager = VersionManager()
         self.provider_manager = ProviderManager(
@@ -314,6 +307,9 @@ class Cluster:
             stats=self.stats,
             executor=self._pool,
             rpc_latency_seconds=metadata_latency_seconds,
+            retry_policy=self.retry_policy,
+            health=health,
+            rpc_timeout_seconds=metadata_timeout_seconds,
         )
         #: shared intra-node cache tier: filled ONLY by the read path (whose
         #: versions are validated against the publish frontier), hit by every
@@ -338,6 +334,10 @@ class Cluster:
         #: level-4 ``_aux_lock`` acquisition below it is legal)
         self.repair_service = RepairService(self)
         self.provider_manager.on_dead = self.repair_service.schedule
+        #: the metadata plane gets the same treatment: a shard death verdict
+        #: queues a repair pass, whose metadata half re-replicates the dead
+        #: replica's node set from survivors once it rejoins
+        self.metadata.on_dead = self.repair_service.schedule
         self._next_provider_id = n_data_providers
         self._membership_lock = make_lock("Cluster._membership_lock")
         #: registered sessions (GC must purge every private cache tier)
@@ -706,6 +706,10 @@ class Session:
         self.stats.record_degraded_read(n)
         self.cluster.stats.record_degraded_read(n)
 
+    def _record_checksum_failure(self, n: int = 1) -> None:
+        self.stats.record_checksum_failure(n)
+        self.cluster.stats.record_checksum_failure(n)
+
     @property
     def cache_hit_rate(self) -> float:
         h, m = self.stats.cache_hits, self.stats.cache_misses
@@ -789,19 +793,26 @@ class Session:
         meta_futures: List[Future] = []
         try:
             cursor = 0
+            #: per patch, per page: the integrity checksum stamped onto the
+            #: leaf — computed HERE, at freeze time, so it attests to exactly
+            #: the immutable bytes handed to the store
+            checksums: List[List[int]] = []
             for src, (_, n_pages) in zip(bufs, spans):
                 mine = placements[cursor : cursor + n_pages]
                 cursor += n_pages
                 per_patch.append(mine)
                 pages: List[np.ndarray] = []
+                sums: List[int] = []
                 for i, (primary, replicas) in enumerate(mine):
                     page = src[i * page_size : (i + 1) * page_size]
                     if sync:
                         page = page.copy()  # pre-pipeline baseline: defensive copy
                     pages.append(page)
+                    sums.append(page_checksum(page))
                     for pid, key in (primary,) + replicas:
                         by_provider.setdefault(pid, []).append((key, page))
                 stored_pages.append(pages)
+                checksums.append(sums)
 
             # (2) LAUNCH the aggregated per-provider puts; the pipeline only
             #     joins them at the end (sync baseline: full barrier here)
@@ -826,12 +837,13 @@ class Session:
             #     (paper §V.A aggregation across the whole writev); the sync
             #     baseline runs the same aggregated put behind a barrier
             all_nodes: List[TreeNode] = []
-            for (page_offset, n_pages), mine, (version, links) in zip(
-                spans, per_patch, assigned
+            for (page_offset, n_pages), mine, sums, (version, links) in zip(
+                spans, per_patch, checksums, assigned
             ):
                 all_nodes.extend(
                     build_write_tree(
-                        blob_id, version, total_pages, page_offset, n_pages, mine, links
+                        blob_id, version, total_pages, page_offset, n_pages,
+                        mine, links, leaf_checksums=sums,
                     )
                 )
             node_keys.extend(node.key for node in all_nodes)
@@ -1384,11 +1396,26 @@ class Session:
             return None  # provider down: caller falls back per page
         except KeyError:
             return None  # deregistered: nothing to mark
-        pm.note_success(pid)
         self._record_data(
             pid, len(items), sum(pg.nbytes for pg in fetched), read=True
         )
-        return {p: pg for (p, _, _), pg in zip(items, fetched)}
+        # end-to-end integrity: verify every page against the checksum its
+        # leaf carries; a mismatch is a provider failure, not a crash — the
+        # bad page is simply absent from the result, and the stream's join
+        # falls back to a replica and repairs the corrupt copy
+        good: Dict[int, np.ndarray] = {}
+        corrupt = 0
+        for (p, _, leaf), pg in zip(items, fetched):
+            if leaf.checksum is not None and page_checksum(pg) != leaf.checksum:
+                corrupt += 1
+                continue
+            good[p] = pg
+        if corrupt:
+            self._record_checksum_failure(corrupt)
+            pm.note_failure(pid)
+        else:
+            pm.note_success(pid)
+        return good
 
     def _prefetch_fill(
         self,
@@ -1445,17 +1472,28 @@ class Session:
         return len(done)
 
     def _fetch_single(
-        self, page_index: int, leaf: TreeNode, skip_pid: Optional[int] = None
+        self,
+        page_index: int,
+        leaf: TreeNode,
+        skip_pid: Optional[int] = None,
+        repair_refs: Sequence[PageRef] = (),
     ) -> np.ndarray:
         """Per-page replica fallback with bounded retry rounds: every replica
         is tried once per round (each failure feeding the health machine);
         between rounds the retry policy backs off — a transient blip on ALL
         replicas still completes, a truly lost page fails after
-        ``max_attempts`` rounds."""
+        ``max_attempts`` rounds.
+
+        Integrity: a fetched page whose checksum mismatches the leaf's is
+        treated as a failed (non-retryable) copy — the fallback continues to
+        the other replicas, and once a verified-good page is in hand every
+        corrupt copy observed (plus any the caller already detected, via
+        ``repair_refs``) is overwritten in place with the good bytes."""
         pm = self.cluster.provider_manager
         policy = self.cluster.retry_policy
         refs = [r for r in leaf.all_page_refs() if r[0] != skip_pid]
         refs = list(refs or leaf.all_page_refs())
+        corrupt: List[PageRef] = list(repair_refs)
         last_err: Optional[Exception] = None
         for attempt in range(max(policy.max_attempts, 1)):
             if attempt:
@@ -1463,6 +1501,8 @@ class Session:
                 policy.backoff(attempt - 1)
             retryable = False
             for pid, key in refs:
+                if (pid, key) in corrupt:
+                    continue  # known-bad copy: only a repair target now
                 try:
                     page = pm.get_provider(pid).get_page(key)
                 except ProviderFailed as err:
@@ -1473,12 +1513,42 @@ class Session:
                 except KeyError as err:
                     last_err = err  # missing page/provider: will not heal
                     continue
+                if (
+                    leaf.checksum is not None
+                    and page_checksum(page) != leaf.checksum
+                ):
+                    # silent corruption: never return the bad bytes; the
+                    # copy will not heal by retrying, so fall through to
+                    # the remaining replicas and remember it for repair
+                    self._record_checksum_failure()
+                    pm.note_failure(pid)
+                    corrupt.append((pid, key))
+                    last_err = ProviderFailed(
+                        f"page {page_index} checksum mismatch at provider {pid}"
+                    )
+                    continue
                 pm.note_success(pid)
                 self._record_data(pid, 1, page.nbytes, read=True)
+                for ref in corrupt:
+                    self._repair_corrupt_copy(ref, page)
                 return page
             if not retryable:
                 break
         raise last_err if last_err else KeyError(f"page {page_index} unavailable")
+
+    def _repair_corrupt_copy(self, ref: PageRef, page: np.ndarray) -> None:
+        """Overwrite a checksum-failed stored copy with verified-good bytes.
+        Best-effort: page CONTENT under a key is immutable, so rewriting a
+        corrupt copy restores the published data rather than mutating it (the
+        same sanctioned-re-put argument the repair service relies on)."""
+        pm = self.cluster.provider_manager
+        pid, key = ref
+        try:
+            pm.get_provider(pid).put_pages([(key, page)])
+        except (ProviderFailed, KeyError):
+            return  # the copy stays bad; reads keep falling back around it
+        self.stats.record_repair(1)
+        self.cluster.stats.record_repair(1)
 
     # -- lifecycle ---------------------------------------------------------------
     def close(self) -> None:

@@ -16,10 +16,13 @@ model network completion time for the Fig. 3 reproductions.
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
+import zlib
 from collections import defaultdict
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, TypeVar
 
 from repro.analysis.lockwatch import make_lock
@@ -31,6 +34,86 @@ _R = TypeVar("_R")
 
 class ProviderFailed(RuntimeError):
     """Raised when an injected failure makes a provider unreachable."""
+
+
+#: provider/shard health states (paper-deferred fault tolerance, PR 7; the
+#: metadata plane joined in PR 8). ``live`` nodes take fresh traffic;
+#: ``suspect`` ones (recent RPC failures within the decay window) still serve
+#: but are candidates for retry avoidance; ``dead`` ones (failure count over
+#: threshold) are excluded and trigger re-replication repair.
+LIVE = "live"
+SUSPECT = "suspect"
+DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Failure-detection knobs shared by the data plane's
+    :class:`~repro.core.provider.ProviderManager` and the metadata plane's
+    :class:`MetadataDHT`.
+
+    A node becomes ``suspect`` after ``suspect_after`` observed RPC
+    failures inside the trailing ``window_seconds``, and ``dead`` at
+    ``dead_after`` failures. Suspicion decays: once the window slides past
+    the recorded failures the node is ``live`` again. Death is sticky —
+    only an explicit recover call (the rejoin announcement) or an observed
+    success clears it. ``clock`` is injectable so tests drive the decay
+    window deterministically.
+    """
+
+    suspect_after: int = 1
+    dead_after: int = 3
+    window_seconds: float = 30.0
+    clock: Callable[[], float] = time.monotonic
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff with deterministic jitter, shared by the
+    data plane's page RPCs and the metadata plane's shard RPCs.
+
+    ``delay(attempt)`` grows ``base_delay_seconds`` by ``multiplier`` per
+    attempt, capped at ``max_delay_seconds``, then adds up to ``jitter``
+    fraction of deterministic noise (seeded per attempt, so two runs with the
+    same seed replay the same schedule). ``sleep`` is injectable: tests pass
+    a recorder to assert the exact backoff sequence without wall-clock cost.
+    """
+
+    max_attempts: int = 3
+    base_delay_seconds: float = 0.005
+    multiplier: float = 2.0
+    max_delay_seconds: float = 0.1
+    jitter: float = 0.5
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (0-based)."""
+        raw = min(
+            self.base_delay_seconds * (self.multiplier ** attempt),
+            self.max_delay_seconds,
+        )
+        rng = random.Random(self.seed * 0x9E3779B1 + attempt)
+        return raw * (1.0 + self.jitter * rng.random())
+
+    def backoff(self, attempt: int) -> None:
+        self.sleep(self.delay(attempt))
+
+    def max_backoff_seconds(self) -> float:
+        """Worst-case total injected sleep for one fully retried RPC — the
+        bound chaos tests assert a dead shard can never exceed."""
+        return sum(
+            self.delay(attempt) for attempt in range(max(self.max_attempts - 1, 0))
+        )
+
+
+def page_checksum(page) -> int:
+    """End-to-end integrity checksum of one stored page (CRC32 of its raw
+    bytes). Computed once at ``writev`` freeze time (the page is immutable
+    from that point on), stored in the leaf's :class:`TreeNode`, and verified
+    on every provider fetch — a mismatch is treated exactly like a provider
+    failure: replica fallback plus repair of the corrupt copy."""
+    return zlib.crc32(memoryview(page).cast("B"))
 
 
 @dataclasses.dataclass
@@ -59,6 +142,11 @@ class TrafficStats:
     replica_fallbacks: int = 0
     degraded_reads: int = 0
     repaired_pages: int = 0
+    #: metadata-plane self-healing (PR 8): shard RPC attempts re-issued after
+    #: a failure, and stored pages whose checksum did not match on fetch
+    #: (each one also triggers the replica-fallback + repair path)
+    metadata_retries: int = 0
+    checksum_failures: int = 0
     per_dest_bytes: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
     #: read-path bytes per DATA provider only (no metadata shards, no writes) —
     #: the skew signal the replica balancer promotes hot pages from
@@ -135,6 +223,16 @@ class TrafficStats:
         with self._lock:
             self.repaired_pages += n_pages
 
+    def record_metadata_retry(self, n: int = 1) -> None:
+        """Metadata shard RPC attempts re-issued after a failure."""
+        with self._lock:
+            self.metadata_retries += n
+
+    def record_checksum_failure(self, n: int = 1) -> None:
+        """Fetched pages whose stored checksum did not match their bytes."""
+        with self._lock:
+            self.checksum_failures += n
+
     def reset(self) -> None:
         with self._lock:
             self.rpcs = 0
@@ -148,6 +246,8 @@ class TrafficStats:
             self.replica_fallbacks = 0
             self.degraded_reads = 0
             self.repaired_pages = 0
+            self.metadata_retries = 0
+            self.checksum_failures = 0
             self.per_dest_bytes.clear()
             self.per_dest_read_bytes.clear()
             self.per_dest_write_bytes.clear()
@@ -166,8 +266,19 @@ class MetadataShard:
         self.shard_id = shard_id
         self._nodes: Dict[NodeKey, TreeNode] = {}
         self.failed = False
+        #: chaos-harness hook (:mod:`repro.core.faults`): called at RPC entry
+        #: with ``(op, shard_id)``, mirroring ``DataProvider.fault_gate`` —
+        #: an injector may sleep (delay), raise ``ProviderFailed`` (drop), or
+        #: flip failure flags; shards hold no lock, so the gate runs free
+        self.fault_gate: Optional[Callable[[str, int], None]] = None
+
+    def _gate(self, op: str) -> None:
+        gate = self.fault_gate
+        if gate is not None:
+            gate(op, self.shard_id)
 
     def put_many(self, nodes: Sequence[TreeNode]) -> None:
+        self._gate("put_many")
         if self.failed:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         for node in nodes:
@@ -183,6 +294,7 @@ class MetadataShard:
             self._nodes[node.key] = node
 
     def get(self, key: NodeKey) -> Optional[TreeNode]:
+        self._gate("get")
         if self.failed:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         return self._nodes.get(key)
@@ -191,6 +303,7 @@ class MetadataShard:
         """One aggregated RPC: every found node for ``keys`` (missing keys are
         simply absent from the result — the caller decides whether to fall
         back to a replica or error)."""
+        self._gate("get_many")
         if self.failed:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         out: Dict[NodeKey, TreeNode] = {}
@@ -201,6 +314,7 @@ class MetadataShard:
         return out
 
     def nodes_of_blob(self, blob_id: int) -> Dict[NodeKey, TreeNode]:
+        self._gate("nodes_of_blob")
         if self.failed:
             raise ProviderFailed(f"metadata shard {self.shard_id} is down")
         return {k: n for k, n in list(self._nodes.items()) if k.blob_id == blob_id}
@@ -218,7 +332,18 @@ class MetadataDHT:
 
     ``replication`` > 1 stores each node on that many consecutive shards
     (BambooDHT-style neighbor replication); reads fall back across replicas,
-    which is the paper's (inherited) metadata fault tolerance.
+    which is the paper's (inherited) metadata fault tolerance. Writes commit
+    to a quorum of ``ceil(replication / 2)`` replicas per node — nodes are
+    create-only and immutable, so a sub-majority quorum is sound: any single
+    surviving copy is the truth, reads fall back across all ``replication``
+    homes, and :meth:`restore_replication` (driven by the repair service)
+    rebuilds lost copies from survivors. Every shard RPC runs under the
+    shared bounded :class:`RetryPolicy` and the same ``live → suspect →
+    dead`` health machine the data plane uses: observed failures accumulate
+    toward a death verdict (``on_dead`` schedules repair), a declared-dead
+    shard fails fast instead of burning the retry budget, and an optional
+    ``rpc_timeout_seconds`` bounds each attempt so a wedged (delayed) shard
+    degrades latency instead of hanging the read plane.
 
     ``rpc_latency_seconds`` > 0 models the wire round-trip of one *parallel
     round* of aggregated shard RPCs (the metadata half of the paper's network
@@ -236,13 +361,34 @@ class MetadataDHT:
         stats: Optional[TrafficStats] = None,
         executor: Optional[ThreadPoolExecutor] = None,
         rpc_latency_seconds: float = 0.0,
+        retry_policy: Optional[RetryPolicy] = None,
+        health: Optional[HealthConfig] = None,
+        rpc_timeout_seconds: Optional[float] = None,
     ) -> None:
         if replication > n_shards:
             raise ValueError("replication cannot exceed shard count")
         self.shards = [MetadataShard(i) for i in range(n_shards)]
         self.rpc_latency_seconds = rpc_latency_seconds
         self.replication = replication
+        #: replicas a node put must land on for the write to succeed; see the
+        #: class docstring for why ceil(R/2) (not majority-of-ack R) is sound
+        #: for a create-only store
+        self.write_quorum = (replication + 1) // 2
         self.stats = stats or TrafficStats()
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.health_config = health or HealthConfig()
+        #: per-attempt RPC bound; ``None`` (default) trusts shards to answer.
+        #: When set, each attempt runs on a pool worker and is abandoned
+        #: after the timeout (counted as a failure toward the shard's health)
+        self.rpc_timeout_seconds = rpc_timeout_seconds
+        #: shard health records, same shape as ``ProviderManager``'s: failure
+        #: timestamps within the decay window plus the sticky dead set
+        self._health_lock = make_lock("MetadataDHT._health_lock")
+        self._failures: Dict[int, List[float]] = {}
+        self._dead: set = set()
+        #: invoked OUTSIDE the health lock when a shard transitions to dead —
+        #: the cluster wires this to RepairService scheduling (metadata pass)
+        self.on_dead: Optional[Callable[[int], None]] = None
         self._executor = executor
         self._owns_executor = False
         self._executor_lock = make_lock("MetadataDHT._executor_lock")
@@ -299,6 +445,117 @@ class MetadataDHT:
         if pool is not None:
             pool.shutdown(wait=True)
 
+    # -- shard health (live -> suspect -> dead, mirroring ProviderManager) ---
+    def note_shard_failure(self, shard_id: int) -> None:
+        """Record an observed shard RPC failure; transitions the shard
+        ``live -> suspect -> dead`` per :class:`HealthConfig`. ``on_dead``
+        fires exactly once per death, outside the health lock (it schedules
+        repair work that takes other locks)."""
+        now = self.health_config.clock()
+        horizon = now - self.health_config.window_seconds
+        newly_dead = False
+        with self._health_lock:
+            record = self._failures.setdefault(shard_id, [])
+            record.append(now)
+            while record and record[0] < horizon:
+                record.pop(0)
+            if (
+                len(record) >= self.health_config.dead_after
+                and shard_id not in self._dead
+            ):
+                self._dead.add(shard_id)
+                newly_dead = True
+            callback = self.on_dead
+        if newly_dead and callback is not None:
+            callback(shard_id)
+
+    def note_shard_success(self, shard_id: int) -> None:
+        """An observed successful RPC clears suspicion and death (recovery is
+        observed, not configured — same rule as the data plane). The unlocked
+        membership probe keeps the healthy fast path free; the race with a
+        concurrent ``note_shard_failure`` is a benign interleaving of the two
+        observations."""
+        if shard_id not in self._failures and shard_id not in self._dead:
+            return
+        with self._health_lock:
+            self._failures.pop(shard_id, None)
+            self._dead.discard(shard_id)
+
+    def shard_health(self, shard_id: int) -> str:
+        """``live``/``suspect``/``dead`` verdict for one shard."""
+        now = self.health_config.clock()
+        horizon = now - self.health_config.window_seconds
+        with self._health_lock:
+            if shard_id in self._dead:
+                return DEAD
+            record = self._failures.get(shard_id)
+            if not record:
+                return LIVE
+            recent = sum(1 for t in record if t >= horizon)
+            return SUSPECT if recent >= self.health_config.suspect_after else LIVE
+
+    def dead_shards(self) -> List[int]:
+        """Shard ids currently declared dead (the repair pass's work queue)."""
+        with self._health_lock:
+            return sorted(self._dead)
+
+    # -- bounded shard RPC (retry + per-attempt timeout) ---------------------
+    def _attempt(self, sid: int, fn: Callable[[], _R], timed: bool) -> _R:
+        """One shard RPC attempt, bounded by ``rpc_timeout_seconds`` when set
+        (and ``timed``): the call runs on a pool worker and is abandoned on
+        timeout, which surfaces as a ``ProviderFailed`` — a wedged shard
+        costs one timeout per attempt, never a hang. ``timed=False`` callers
+        (the async write rounds, which already run ON a pool worker) stay
+        inline so a saturated pool cannot deadlock on nested futures."""
+        timeout = self.rpc_timeout_seconds
+        if timeout is None or not timed:
+            return fn()
+        fut = self._pool().submit(fn)
+        try:
+            return fut.result(timeout=timeout)
+        except FutureTimeout:
+            raise ProviderFailed(
+                f"metadata shard {sid} RPC timed out after {timeout}s"
+            ) from None
+
+    def _with_retry(self, sid: int, fn: Callable[[], _R], timed: bool = True) -> _R:
+        """Run one shard RPC under the bounded :class:`RetryPolicy`. Every
+        failed attempt is recorded against the shard's health; retries stop
+        early once the shard is declared dead (fail fast — its replicas
+        carry the load) and never run under a lock."""
+        policy = self.retry_policy
+        attempts = max(policy.max_attempts, 1)
+        for attempt in range(attempts):
+            try:
+                out = self._attempt(sid, fn, timed)
+            except ProviderFailed:
+                self.note_shard_failure(sid)
+                if attempt + 1 < attempts and sid not in self.dead_shards():
+                    self.stats.record_metadata_retry()
+                    policy.backoff(attempt)
+                    continue
+                raise
+            self.note_shard_success(sid)
+            return out
+        raise AssertionError("unreachable")  # pragma: no cover
+
+    def _check_quorum(self, nodes: Sequence[TreeNode], failed: set) -> None:
+        """Raise unless every node landed on at least ``write_quorum`` of its
+        replica shards (``failed`` holds the shard ids whose batch store
+        failed after retries)."""
+        if not failed:
+            return
+        for node in nodes:
+            stored = sum(
+                1 for sid in self._replica_ids(node.key) if sid not in failed
+            )
+            if stored < self.write_quorum:
+                raise ProviderFailed(
+                    f"metadata write quorum lost for {node.key}: {stored}/"
+                    f"{self.replication} replicas stored "
+                    f"(need {self.write_quorum})"
+                )
+
     def _home(self, key: NodeKey) -> int:
         return hash((key.blob_id, key.version, key.offset, key.size)) % len(self.shards)
 
@@ -308,18 +565,30 @@ class MetadataDHT:
 
     def put_nodes(self, nodes: Sequence[TreeNode]) -> None:
         """Store nodes, aggregating all puts to the same shard into one RPC;
-        the per-shard RPCs are issued concurrently (one parallel round)."""
+        the per-shard RPCs are issued concurrently (one parallel round), each
+        under the retry policy. A shard that stays down after retries costs
+        its replicas only: the put succeeds as long as every node reached its
+        write quorum, and raises ``ProviderFailed`` otherwise."""
         by_shard: Dict[int, List[TreeNode]] = defaultdict(list)
         for node in nodes:
             for sid in self._replica_ids(node.key):
                 by_shard[sid].append(node)
 
-        def _put(sid: int, batch: List[TreeNode]) -> None:
-            self.shards[sid].put_many(batch)
+        def _put(sid: int, batch: List[TreeNode]) -> Optional[int]:
+            try:
+                self._with_retry(sid, lambda: self.shards[sid].put_many(batch))
+            except ProviderFailed:
+                return sid
             self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
+            return None
 
-        self._fan_out(list(by_shard.items()), _put)
+        failed = {
+            sid
+            for sid in self._fan_out(list(by_shard.items()), _put)
+            if sid is not None
+        }
         self._round_trip()
+        self._check_quorum(nodes, failed)
 
     def put_nodes_async(self, nodes: Sequence[TreeNode]) -> List[Future]:
         """Pipelined :meth:`put_nodes`: returns immediately with the round's
@@ -335,12 +604,23 @@ class MetadataDHT:
         for node in nodes:
             for sid in self._replica_ids(node.key):
                 by_shard[sid].append(node)
+        frozen = list(nodes)
 
         def _put_round() -> None:
+            failed = set()
             for sid, batch in by_shard.items():
-                self.shards[sid].put_many(batch)
+                try:
+                    # timed=False: this worker must not wait on a nested
+                    # pool future (a saturated pool would deadlock)
+                    self._with_retry(
+                        sid, lambda: self.shards[sid].put_many(batch), timed=False
+                    )
+                except ProviderFailed:
+                    failed.add(sid)
+                    continue
                 self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
             self._round_trip()
+            self._check_quorum(frozen, failed)
 
         return [self._pool().submit(_put_round)]
 
@@ -399,28 +679,34 @@ class MetadataDHT:
                     return
                 self.coalesced_rounds += 1  # under the lock: flushes race
             by_shard: Dict[int, List[TreeNode]] = defaultdict(list)
-            homes: List[set] = []  # per queued write, the shards it touches
             for nodes, _ in batch:
-                touched: set = set()
                 for node in nodes:
                     for sid in self._replica_ids(node.key):
                         by_shard[sid].append(node)
-                        touched.add(sid)
-                homes.append(touched)
-            failed: Dict[int, BaseException] = {}
+            failed: set = set()
             for sid, shard_nodes in by_shard.items():
                 try:
-                    self.shards[sid].put_many(shard_nodes)
-                    self.stats.record_metadata(
-                        sid, len(shard_nodes), len(shard_nodes) * NODE_WIRE_BYTES
+                    # timed=False: flush workers must not wait on nested
+                    # pool futures (a saturated pool would deadlock)
+                    self._with_retry(
+                        sid,
+                        lambda: self.shards[sid].put_many(shard_nodes),
+                        timed=False,
                     )
-                except BaseException as err:
-                    failed[sid] = err
+                except BaseException:
+                    failed.add(sid)
+                    continue
+                self.stats.record_metadata(
+                    sid, len(shard_nodes), len(shard_nodes) * NODE_WIRE_BYTES
+                )
             self._round_trip()
-            for (_, fut), touched in zip(batch, homes):
-                errs = [failed[sid] for sid in touched if sid in failed]
-                if errs:
-                    fut.set_exception(errs[0])
+            # settle per queued write: a failed shard fails exactly the calls
+            # whose nodes dropped below their write quorum, not the round
+            for nodes, fut in batch:
+                try:
+                    self._check_quorum(nodes, failed)
+                except ProviderFailed as err:
+                    fut.set_exception(err)
                 else:
                     fut.set_result(None)
 
@@ -428,7 +714,7 @@ class MetadataDHT:
         last_err: Optional[Exception] = None
         for sid in self._replica_ids(key):
             try:
-                node = self.shards[sid].get(key)
+                node = self._with_retry(sid, lambda: self.shards[sid].get(key))
                 self.stats.record_metadata(sid, 1, NODE_WIRE_BYTES)
                 self._round_trip()
             except ProviderFailed as err:  # replica fallback
@@ -468,7 +754,7 @@ class MetadataDHT:
             sid: int, batch: List[NodeKey]
         ) -> Tuple[List[NodeKey], Optional[Dict[NodeKey, TreeNode]], Optional[ProviderFailed]]:
             try:
-                got = self.shards[sid].get_many(batch)
+                got = self._with_retry(sid, lambda: self.shards[sid].get_many(batch))
                 self.stats.record_metadata(sid, len(batch), len(batch) * NODE_WIRE_BYTES)
                 if on_partial is not None and got:
                     on_partial(got)
@@ -510,7 +796,11 @@ class MetadataDHT:
         merged: Dict[NodeKey, TreeNode] = {}
         for shard in self.shards:
             try:
-                merged.update(shard.nodes_of_blob(blob_id))
+                merged.update(
+                    self._with_retry(
+                        shard.shard_id, lambda s=shard: s.nodes_of_blob(blob_id)
+                    )
+                )
             except ProviderFailed:
                 continue  # replicas on live shards still cover its nodes
         return iter(merged.items())
@@ -523,6 +813,44 @@ class MetadataDHT:
         for sid, batch in by_shard.items():
             self.shards[sid].delete_many(batch)
 
+    def restore_replication(self, nodes: Sequence[TreeNode]) -> int:
+        """Metadata re-replication (the repair service's metadata pass): for
+        every given node, ensure a copy exists on each of its *live* replica
+        shards, re-putting the copies a dead-then-recovered (or wiped)
+        replica lost. Per live shard this costs one aggregated ``get_many``
+        probe plus at most one ``put_many`` of the missing nodes; shards that
+        are still down are skipped (the next pass gets them). Returns the
+        number of node copies restored."""
+        if self.replication <= 1:
+            return 0
+        wanted: Dict[int, Dict[NodeKey, TreeNode]] = defaultdict(dict)
+        for node in nodes:
+            for sid in self._replica_ids(node.key):
+                wanted[sid][node.key] = node
+        restored = 0
+        for sid, want in wanted.items():
+            keys = list(want)
+            try:
+                held = self._with_retry(
+                    sid, lambda: self.shards[sid].get_many(keys)
+                )
+            except ProviderFailed:
+                continue  # still down: repair again after it rejoins
+            missing = [node for key, node in want.items() if key not in held]
+            if not missing:
+                continue
+            try:
+                self._with_retry(
+                    sid, lambda: self.shards[sid].put_many(missing)
+                )
+            except ProviderFailed:
+                continue
+            self.stats.record_metadata(
+                sid, len(missing), len(missing) * NODE_WIRE_BYTES
+            )
+            restored += len(missing)
+        return restored
+
     def total_nodes(self) -> int:
         return sum(len(s) for s in self.shards)
 
@@ -530,4 +858,11 @@ class MetadataDHT:
         self.shards[shard_id].failed = True
 
     def recover_shard(self, shard_id: int) -> None:
+        """Rejoin announcement: clear the failure flag AND the health record,
+        so the shard comes back ``live`` immediately (matching
+        ``ProviderManager.recover_provider``). Nodes stored while it was down
+        are missing until :meth:`restore_replication` re-puts them."""
         self.shards[shard_id].failed = False
+        with self._health_lock:
+            self._failures.pop(shard_id, None)
+            self._dead.discard(shard_id)

@@ -1,4 +1,4 @@
-"""Deterministic chaos harness: seeded fault schedules for the data plane.
+"""Deterministic chaos harness: seeded fault schedules for both planes.
 
 The self-healing machinery (health states, retry/backoff, mid-flight write
 re-placement, replica-fallback reads, background repair) is only as
@@ -9,10 +9,11 @@ those failures *deterministically*:
   :class:`FaultEvent`\\ s positioned in **operation space** — "at the N-th
   data-plane RPC, kill provider 3" — not wall-clock time, so a loaded CI
   machine and a laptop replay the same fault sequence.
-* A :class:`FaultInjector` attaches to every provider's ``fault_gate`` (an
-  RPC-entry hook that runs BEFORE the provider's lock) and counts RPCs
-  cluster-wide; events fire as their op index is crossed. Kills flip the
-  provider's failure flag through ``ProviderManager.fail_provider`` —
+* A :class:`FaultInjector` attaches to every data provider's AND metadata
+  shard's ``fault_gate`` (an RPC-entry hook that runs BEFORE the actor's
+  lock) and counts RPCs cluster-wide on one shared clock; events fire as
+  their op index is crossed. Kills flip the actor's failure flag
+  (``ProviderManager.fail_provider`` / ``MetadataDHT.fail_shard``) —
   in-flight requests observe the flip exactly as a real crash: mid-batch,
   under live traffic. Drops fail one single RPC; delays stall one RPC.
 
@@ -33,7 +34,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import time
-from typing import TYPE_CHECKING, Dict, List, Sequence, Set
+from typing import TYPE_CHECKING, Dict, List, Sequence, Set, Tuple
 
 from repro.analysis.lockwatch import make_lock
 from repro.core.dht import ProviderFailed
@@ -47,17 +48,26 @@ RECOVER = "recover"  #: clear the flag + health record (rejoin announcement)
 DROP = "drop"  #: fail exactly one subsequent RPC at the provider
 DELAY = "delay"  #: stall exactly one subsequent RPC by ``param`` seconds
 
+#: fault targets — which plane's RPCs the event hits
+DATA = "data"  #: ``provider_id`` names a data provider
+METADATA = "metadata"  #: ``provider_id`` names a metadata shard
+
 
 @dataclasses.dataclass(frozen=True, order=True)
 class FaultEvent:
-    """One scheduled fault: at the ``at_op``-th cluster-wide data RPC (or
+    """One scheduled fault: at the ``at_op``-th cluster-wide RPC (or
     later — the next RPC to cross the threshold), apply ``action`` to
-    ``provider_id``. ``param`` is the delay in seconds for ``delay``."""
+    ``provider_id``. ``param`` is the delay in seconds for ``delay``;
+    ``target`` selects the plane (``provider_id`` is a data provider id for
+    :data:`DATA`, a metadata shard id for :data:`METADATA`). Both planes
+    advance the SAME op clock, so a mixed campaign interleaves its kills
+    exactly where the merged traffic crossed each threshold."""
 
     at_op: int
     action: str
     provider_id: int
     param: float = 0.0
+    target: str = DATA
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +91,15 @@ class FaultSchedule:
         max_gap: int = 40,
         delay_seconds: float = 0.002,
         recover_all: bool = True,
+        target: str = DATA,
     ) -> "FaultSchedule":
         """Seeded random campaign: kills, recoveries, drops and delays, with
         at most ``max_dead`` providers down simultaneously (the chaos tests
         pair this with replication > max_dead so published data must
         survive). With ``recover_all`` every still-dead provider gets a
-        trailing recover event, so repair can restore full replication."""
+        trailing recover event, so repair can restore full replication.
+        ``target`` aims the whole campaign at one plane; merge two campaigns
+        with ``FaultSchedule(a.events + b.events)`` for mixed chaos."""
         rng = random.Random(seed)
         events: List[FaultEvent] = []
         dead: Set[int] = set()
@@ -98,21 +111,25 @@ class FaultSchedule:
             if dead and roll < 0.25:
                 pid = rng.choice(sorted(dead))
                 dead.discard(pid)
-                events.append(FaultEvent(op, RECOVER, pid))
+                events.append(FaultEvent(op, RECOVER, pid, target=target))
             elif len(dead) < max_dead and roll < 0.55 and alive:
                 pid = rng.choice(alive)
                 dead.add(pid)
-                events.append(FaultEvent(op, KILL, pid))
+                events.append(FaultEvent(op, KILL, pid, target=target))
             elif roll < 0.8 and alive:
-                events.append(FaultEvent(op, DROP, rng.choice(alive)))
+                events.append(
+                    FaultEvent(op, DROP, rng.choice(alive), target=target)
+                )
             elif alive:
                 events.append(
-                    FaultEvent(op, DELAY, rng.choice(alive), delay_seconds)
+                    FaultEvent(
+                        op, DELAY, rng.choice(alive), delay_seconds, target
+                    )
                 )
         if recover_all:
             for pid in sorted(dead):
                 op += rng.randint(min_gap, max_gap)
-                events.append(FaultEvent(op, RECOVER, pid))
+                events.append(FaultEvent(op, RECOVER, pid, target=target))
         return cls(tuple(events))
 
 
@@ -136,9 +153,9 @@ class FaultInjector:
         self._lock = make_lock("FaultInjector._lock")
         self._op = 0
         self._pending: List[FaultEvent] = list(schedule.events)
-        #: per-provider one-shot faults armed by DROP/DELAY events
-        self._drops: Dict[int, int] = {}
-        self._delays: Dict[int, float] = {}
+        #: per-(target, id) one-shot faults armed by DROP/DELAY events
+        self._drops: Dict[Tuple[str, int], int] = {}
+        self._delays: Dict[Tuple[str, int], float] = {}
         #: applied events, for test introspection
         self.fired: List[FaultEvent] = []
 
@@ -146,17 +163,31 @@ class FaultInjector:
     def attach(self) -> None:
         for provider in self.cluster.provider_manager.providers():
             provider.fault_gate = self._gate
+        for shard in self.cluster.metadata.shards:
+            shard.fault_gate = self._meta_gate
 
     def detach(self) -> None:
         for provider in self.cluster.provider_manager.providers():
             provider.fault_gate = None
+        for shard in self.cluster.metadata.shards:
+            shard.fault_gate = None
 
-    # -- the gate -------------------------------------------------------------
+    # -- the gates ------------------------------------------------------------
     def _gate(self, op: str, provider_id: int) -> None:
-        """RPC-entry hook (runs lock-free in the provider, before its own
-        lock): advance the op clock, apply due events, then enforce any
-        one-shot drop/delay armed for this provider."""
+        """Data-plane RPC-entry hook (runs lock-free in the provider, before
+        its own lock)."""
+        self._gate_common(op, provider_id, DATA)
+
+    def _meta_gate(self, op: str, shard_id: int) -> None:
+        """Metadata-plane RPC-entry hook: same op clock as the data gate, so
+        one schedule interleaves faults across both planes."""
+        self._gate_common(op, shard_id, METADATA)
+
+    def _gate_common(self, op: str, actor_id: int, target: str) -> None:
+        """Advance the shared op clock, apply due events, then enforce any
+        one-shot drop/delay armed for this (plane, actor)."""
         due: List[FaultEvent] = []
+        key = (target, actor_id)
         with self._lock:
             self._op += 1
             while self._pending and self._pending[0].at_op <= self._op:
@@ -166,38 +197,50 @@ class FaultInjector:
         # consume one-shots AFTER applying due events, so a drop/delay whose
         # op threshold this very RPC crossed hits this RPC, not the next one
         with self._lock:
-            delay = self._delays.pop(provider_id, 0.0)
-            dropped = self._drops.get(provider_id, 0)
+            delay = self._delays.pop(key, 0.0)
+            dropped = self._drops.get(key, 0)
             if dropped:
-                self._drops[provider_id] = dropped - 1
+                self._drops[key] = dropped - 1
         if delay > 0.0:
             time.sleep(delay)  # outside every lock: stalls only this RPC
         if dropped:
             raise ProviderFailed(
-                f"injected drop: provider {provider_id} {op} RPC"
+                f"injected drop: {target} actor {actor_id} {op} RPC"
             )
 
     def _apply(self, event: FaultEvent) -> None:
-        pm = self.cluster.provider_manager
         try:
             if event.action == KILL:
-                pm.fail_provider(event.provider_id)
+                self._kill(event)
             elif event.action == RECOVER:
-                pm.recover_provider(event.provider_id)
+                self._recover(event)
             elif event.action == DROP:
                 with self._lock:
-                    self._drops[event.provider_id] = (
-                        self._drops.get(event.provider_id, 0) + 1
-                    )
+                    key = (event.target, event.provider_id)
+                    self._drops[key] = self._drops.get(key, 0) + 1
             elif event.action == DELAY:
                 with self._lock:
-                    self._delays[event.provider_id] = event.param
+                    self._delays[(event.target, event.provider_id)] = (
+                        event.param
+                    )
             else:
                 raise ValueError(f"unknown fault action {event.action!r}")
         except KeyError:
             pass  # provider deregistered mid-campaign: fault is moot
         with self._lock:
             self.fired.append(event)
+
+    def _kill(self, event: FaultEvent) -> None:
+        if event.target == METADATA:
+            self.cluster.metadata.fail_shard(event.provider_id)
+        else:
+            self.cluster.provider_manager.fail_provider(event.provider_id)
+
+    def _recover(self, event: FaultEvent) -> None:
+        if event.target == METADATA:
+            self.cluster.metadata.recover_shard(event.provider_id)
+        else:
+            self.cluster.provider_manager.recover_provider(event.provider_id)
 
     # -- campaign control -----------------------------------------------------
     def drain(self) -> None:

@@ -20,7 +20,6 @@ membership churn) are discarded on pop; every push/pop is counted in
 
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
 import time
@@ -29,36 +28,19 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.analysis.lockwatch import make_lock
-from repro.core.dht import ProviderFailed, TrafficStats
+
+# DEAD/LIVE/SUSPECT and HealthConfig moved to repro.core.dht in the
+# metadata-fault PR (both planes share one health machine); imported here so
+# existing ``repro.core.provider.HealthConfig`` references keep working.
+from repro.core.dht import (  # noqa: F401 - re-exports
+    DEAD,
+    LIVE,
+    SUSPECT,
+    HealthConfig,
+    ProviderFailed,
+    TrafficStats,
+)
 from repro.core.segment_tree import PageRef
-
-#: provider health states (paper-deferred fault tolerance, PR 7). ``live``
-#: providers take fresh placements; ``suspect`` ones (recent RPC failures
-#: within the decay window) still serve and place but are candidates for
-#: retry avoidance; ``dead`` ones (failure count over threshold) are excluded
-#: from placement and trigger re-replication repair.
-LIVE = "live"
-SUSPECT = "suspect"
-DEAD = "dead"
-
-
-@dataclasses.dataclass(frozen=True)
-class HealthConfig:
-    """Failure-detection knobs for :class:`ProviderManager`.
-
-    A provider becomes ``suspect`` after ``suspect_after`` observed RPC
-    failures inside the trailing ``window_seconds``, and ``dead`` at
-    ``dead_after`` failures. Suspicion decays: once the window slides past
-    the recorded failures the provider is ``live`` again. Death is sticky —
-    only an explicit :meth:`ProviderManager.recover_provider` (the rejoin
-    announcement) or an observed success clears it. ``clock`` is injectable
-    so tests drive the decay window deterministically.
-    """
-
-    suspect_after: int = 1
-    dead_after: int = 3
-    window_seconds: float = 30.0
-    clock: Callable[[], float] = time.monotonic
 
 
 class DataProvider:

@@ -15,6 +15,14 @@ running degraded until someone restores the replication factor. The
   copies exist again, then re-put the leaf with the corrected ref set — the
   same sanctioned placement-only leaf rewrite the replica balancer performs,
   serialized on the same lock.
+* **Metadata re-replication** (part of :meth:`RepairService.run_once`): the
+  same treatment for the metadata plane. When a metadata shard dies
+  (``MetadataDHT.on_dead`` is wired to :meth:`schedule`, exactly like the
+  provider hook) its node copies are down one replica; once the shard — or
+  a blank stand-in — rejoins, the pass rebuilds its journal-covered node
+  set from the surviving consecutive-home replicas via
+  :meth:`~repro.core.dht.MetadataDHT.restore_replication`. Create-only
+  nodes make any survivor an authoritative source.
 * **Metadata scrub** (:meth:`RepairService.scrub`): writer recovery. A
   writer that died mid-``writev`` was withdrawn by
   :meth:`~repro.core.version_manager.VersionManager.abandon`; if it had
@@ -49,7 +57,7 @@ import dataclasses
 from typing import TYPE_CHECKING, Dict, Iterator, List, Optional, Set, Tuple
 
 from repro.analysis.lockwatch import make_lock
-from repro.core.dht import ProviderFailed
+from repro.core.dht import ProviderFailed, page_checksum
 from repro.core.segment_tree import NodeKey, PageRef, TreeNode
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (cluster imports us)
@@ -84,6 +92,8 @@ class RepairService:
         self.pages_repaired = 0
         #: total nodes scrubbed (hole nodes deleted + inner links rewritten)
         self.nodes_scrubbed = 0
+        #: total metadata node copies re-replicated onto recovered shards
+        self.nodes_rereplicated = 0
 
     # -- scheduling ----------------------------------------------------------
     def schedule(self, provider_id: Optional[int] = None) -> None:
@@ -120,9 +130,10 @@ class RepairService:
     # -- re-replication ------------------------------------------------------
     def run_once(self, scrub: bool = True) -> Tuple[int, int]:
         """One full repair pass over every blob: re-replicate published
-        leaves that lost copies to dead/failed providers, then (by default)
-        scrub abandoned-write wreckage. Returns
-        ``(pages_repaired, nodes_scrubbed)`` for this pass.
+        leaves that lost copies to dead/failed providers, (by default)
+        scrub abandoned-write wreckage, then restore metadata replication
+        for journal-covered nodes (tracked in :attr:`nodes_rereplicated`).
+        Returns ``(pages_repaired, nodes_scrubbed)`` for this pass.
 
         Pages whose every replica is unreachable are *unrepairable* and
         skipped — with ``replication`` copies that takes ``replication``
@@ -133,13 +144,16 @@ class RepairService:
         with self._lock:
             repaired = 0
             scrubbed = 0
+            rereplicated = 0
             vm = self.cluster.version_manager
             for blob_id in vm.blob_ids():
                 repaired += self._repair_blob_locked(blob_id)
                 if scrub:
                     scrubbed += self._scrub_blob_locked(blob_id)
+                rereplicated += self._restore_metadata_locked(blob_id)
             self.pages_repaired += repaired
             self.nodes_scrubbed += scrubbed
+            self.nodes_rereplicated += rereplicated
             return repaired, scrubbed
 
     def _unavailable_pids(self) -> Set[int]:
@@ -157,8 +171,7 @@ class RepairService:
         down = self._unavailable_pids()
         if not down:
             return 0
-        published = vm.latest_published(blob_id)
-        aborted = vm.aborted_view(blob_id)
+        published, aborted = vm.repair_horizon(blob_id)
         corrected: List[TreeNode] = []
         released: List[PageRef] = []
         repaired = 0
@@ -174,7 +187,7 @@ class RepairService:
             survivors = [r for r in refs if r[0] not in down]
             if not survivors:
                 continue  # every replica down at once: unrepairable
-            page = self._fetch_from_survivors(survivors)
+            page = self._fetch_from_survivors(survivors, node.checksum)
             holders = {r[0] for r in refs}
             fresh: List[PageRef] = []
             if page is not None:
@@ -202,7 +215,12 @@ class RepairService:
             self.cluster.stats.record_repair(repaired)
         return repaired
 
-    def _fetch_from_survivors(self, survivors: List[PageRef]):
+    def _fetch_from_survivors(
+        self, survivors: List[PageRef], checksum: Optional[int] = None
+    ):
+        """First *verified* copy among the survivors: a fetch whose bytes do
+        not match the leaf's freeze-time checksum is silent corruption, not a
+        repair source — it is skipped (and counted) like a failed provider."""
         pm = self.cluster.provider_manager
         for pid, page_key in survivors:
             try:
@@ -211,6 +229,10 @@ class RepairService:
                 pm.note_failure(pid)
                 continue
             except KeyError:
+                continue
+            if checksum is not None and page_checksum(page) != checksum:
+                self.cluster.stats.record_checksum_failure()
+                pm.note_failure(pid)
                 continue
             pm.note_success(pid)
             return page
@@ -240,6 +262,32 @@ class RepairService:
             pm.note_success(target)
             pm.add_load(target, 1)
             return (target, page_key)
+
+    # -- metadata re-replication ---------------------------------------------
+    def _restore_metadata_locked(self, blob_id: int) -> int:
+        """Rebuild a dead/recovered metadata replica's node set from the
+        surviving replicas: every journal-covered node (at or below the
+        publish frontier, not an abandoned hole) is re-put to any of its
+        ``metadata_replication`` consecutive home shards that lost it. The
+        node store is create-only, so re-putting from ANY survivor is sound
+        — there is nothing newer a dead replica could have held for these
+        keys. Runs under the same level-2 pass lock as page repair and the
+        scrub, so a scrub deleting hole nodes never races a pass restoring
+        them."""
+        metadata = self.cluster.metadata
+        if metadata.replication <= 1:
+            return 0
+        published, aborted = self.cluster.version_manager.repair_horizon(
+            blob_id
+        )
+        covered: List[TreeNode] = []
+        for key, node in metadata.iter_nodes(blob_id):
+            if key.version > published or key.version in aborted:
+                continue  # outside the journal-covered horizon
+            covered.append(node)
+        if not covered:
+            return 0
+        return metadata.restore_replication(covered)
 
     # -- metadata scrub (writer recovery) ------------------------------------
     def scrub(self, blob_id: int) -> int:

@@ -57,8 +57,14 @@ class NodeKey:
 class TreeNode:
     """An immutable metadata node.
 
-    Leaves (``size == 1``) carry ``page`` (+ replicas); inner nodes carry the
-    versions of their two children.
+    Leaves (``size == 1``) carry ``page`` (+ replicas) and, since the
+    metadata-fault PR, an end-to-end page ``checksum`` (CRC32 of the page
+    bytes, computed at ``writev`` freeze time and verified on every provider
+    fetch; ``None`` for pre-checksum nodes and inner nodes). The sanctioned
+    leaf rewrites (balancer promotion, repair re-placement) go through
+    ``dataclasses.replace`` and change only placement fields, so the
+    checksum follows the page data it attests to.
+    Inner nodes carry the versions of their two children.
     """
 
     key: NodeKey
@@ -66,6 +72,7 @@ class TreeNode:
     right_version: int = ZERO_VERSION
     page: Optional[PageRef] = None
     replicas: Tuple[PageRef, ...] = ()
+    checksum: Optional[int] = None
 
     @property
     def is_leaf(self) -> bool:
@@ -147,13 +154,15 @@ def build_write_tree(
     write_size: int,
     leaf_pages: Sequence[Tuple[PageRef, Tuple[PageRef, ...]]],
     border_links: Sequence[BorderLink],
+    leaf_checksums: Optional[Sequence[int]] = None,
 ) -> List[TreeNode]:
     """Materialize all nodes of version ``version``'s (incomplete) tree.
 
-    ``leaf_pages[i]`` is ``(primary, replicas)`` for page ``write_offset+i``.
-    Returns the new nodes (leaves + inner + root); nothing is written to the
-    DHT here — the caller stores them, then reports success to the version
-    manager (two-phase write, paper §III.B).
+    ``leaf_pages[i]`` is ``(primary, replicas)`` for page ``write_offset+i``;
+    ``leaf_checksums[i]`` (when given) is that page's integrity checksum,
+    stamped onto the leaf. Returns the new nodes (leaves + inner + root);
+    nothing is written to the DHT here — the caller stores them, then reports
+    success to the version manager (two-phase write, paper §III.B).
     """
     border = {(b.offset, b.size): b for b in border_links}
     nodes: List[TreeNode] = []
@@ -161,8 +170,14 @@ def build_write_tree(
     def descend(offset: int, size: int) -> None:
         key = NodeKey(blob_id, version, offset, size)
         if size == 1:
-            primary, replicas = leaf_pages[offset - write_offset]
-            nodes.append(TreeNode(key, page=primary, replicas=tuple(replicas)))
+            i = offset - write_offset
+            primary, replicas = leaf_pages[i]
+            checksum = leaf_checksums[i] if leaf_checksums is not None else None
+            nodes.append(
+                TreeNode(
+                    key, page=primary, replicas=tuple(replicas), checksum=checksum
+                )
+            )
             return
         half = size // 2
         lo, ls = offset, half

@@ -324,6 +324,22 @@ class VersionManager:
         least as fresh as the version being read."""
         return self._blobs[blob_id].aborted_view
 
+    def repair_horizon(self, blob_id: int) -> Tuple[int, frozenset]:
+        """The journal-covered repair window: ``(latest_published,
+        aborted_view)`` read under ONE lock acquisition so the pair is
+        mutually consistent. Repair passes (page re-replication, metadata
+        re-replication) must only touch versions the journal vouches for —
+        at or below the publish frontier and not an abandoned hole:
+        everything above the frontier is an in-flight writer's private state
+        (the writer fixes its own placements or gets withdrawn), and holes
+        are the scrub's business. Both values derive from journaled
+        transitions (``publish``/``abandon``), so a recovered manager
+        replays the identical horizon and a repair decided before the crash
+        stays valid after it."""
+        with self._lock:
+            st = self._blobs[blob_id]
+            return self._latest_readable_locked(st), st.aborted_view
+
     def redirect_read_link(
         self, blob_id: int, version: int, offset: int, size: int
     ) -> int:

@@ -22,13 +22,15 @@ from repro.core import (
     FaultInjector,
     FaultSchedule,
     HealthConfig,
+    MetadataDHT,
     ProviderFailed,
     ProviderManager,
     RetryPolicy,
     TrafficStats,
     VersionManager,
+    page_checksum,
 )
-from repro.core.faults import DELAY, DROP, KILL, RECOVER
+from repro.core.faults import DELAY, DROP, KILL, METADATA, RECOVER
 
 PAGE = 256
 
@@ -528,6 +530,441 @@ def test_injector_drop_is_absorbed_by_retry():
     injector.detach()
     assert v == 1
     assert cluster.stats.retries >= 1
+    cluster.close()
+
+
+# ----------------------- metadata plane: health + quorum -----------------------
+
+
+def test_metadata_shard_health_machine():
+    clock = FakeClock()
+    dht = MetadataDHT(
+        4, replication=2,
+        health=HealthConfig(suspect_after=1, dead_after=3,
+                            window_seconds=10.0, clock=clock),
+    )
+    assert dht.shard_health(0) == "live"
+    dht.note_shard_failure(0)
+    assert dht.shard_health(0) == "suspect"
+    dht.note_shard_failure(0)
+    dht.note_shard_failure(0)
+    assert dht.shard_health(0) == "dead"
+    assert dht.dead_shards() == [0]
+    dht.note_shard_success(0)  # observed success is the recovery signal
+    assert dht.shard_health(0) == "live"
+    # failures age out of the window instead of accumulating forever
+    dht.note_shard_failure(1)
+    dht.note_shard_failure(1)
+    clock.advance(11.0)
+    assert dht.shard_health(1) == "live"
+
+
+def test_metadata_shard_on_dead_fires_once_and_schedules_repair():
+    dht = MetadataDHT(4, replication=2, health=HealthConfig(dead_after=2))
+    deaths = []
+    dht.on_dead = deaths.append
+    for _ in range(5):
+        dht.note_shard_failure(2)
+    assert deaths == [2]
+
+
+def test_metadata_write_commits_on_quorum_with_dead_replica():
+    """With metadata_replication=2 the write quorum is 1: killing one shard
+    loses at most one of each node's two consecutive homes, so writes keep
+    committing and reads fall back to the survivor."""
+    cluster = Cluster(
+        n_data_providers=2, n_metadata_providers=4, metadata_replication=2,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    cluster.metadata.fail_shard(1)
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    data = np.arange(8 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)  # must commit: every node keeps >= 1 replica
+    np.testing.assert_array_equal(handle.read(0, 8 * PAGE, version=v).data, data)
+    cluster.close()
+
+
+def test_metadata_write_aborts_cleanly_on_quorum_loss():
+    """When a node cannot reach its write quorum on ANY replica the writev
+    aborts through the normal abandon path — no partial publish, no hang,
+    and the frontier stays where it was."""
+    cluster = Cluster(
+        n_data_providers=2, n_metadata_providers=4, metadata_replication=2,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=1, sleep=lambda s: None),
+    )
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    v = handle.write(np.full(8 * PAGE, 3, np.uint8), 0)
+    for sid in range(4):
+        cluster.metadata.fail_shard(sid)
+    with pytest.raises(ProviderFailed):
+        handle.write(np.full(8 * PAGE, 4, np.uint8), 0)
+    for sid in range(4):
+        cluster.metadata.recover_shard(sid)
+    assert handle.latest_published() == v  # frontier unmoved, hole withdrawn
+    np.testing.assert_array_equal(
+        handle.read(0, 8 * PAGE).data, np.full(8 * PAGE, 3, np.uint8)
+    )
+    cluster.close()
+
+
+def test_metadata_transient_blip_absorbed_by_bounded_retry():
+    """One flaky shard RPC is absorbed by the retry layer: counted in
+    ``metadata_retries``, each backoff drawn from the bounded policy, and the
+    shard's health returns to live on the retried success."""
+    slept = []
+    policy = RetryPolicy(max_attempts=3, sleep=slept.append)
+    cluster = Cluster(
+        n_data_providers=2, n_metadata_providers=4, metadata_replication=2,
+        shared_cache_bytes=0, retry_policy=policy,
+    )
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    data = np.arange(8 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    shard = cluster.metadata.shards[0]
+    real_get_many = shard.get_many
+    blips = {"left": 1}
+
+    def flaky_get_many(keys):
+        if blips["left"]:
+            blips["left"] -= 1
+            raise ProviderFailed("injected metadata blip")
+        return real_get_many(keys)
+
+    shard.get_many = flaky_get_many
+    before = len(slept)
+    np.testing.assert_array_equal(
+        sess.open(handle.blob_id).read(0, 8 * PAGE, version=v).data, data
+    )
+    shard.get_many = real_get_many
+    assert cluster.stats.metadata_retries >= 1
+    new_sleeps = slept[before:]
+    assert new_sleeps, "a retry must back off"
+    bound = policy.max_delay_seconds * (1 + policy.jitter)
+    assert all(0 <= s <= bound for s in new_sleeps)
+    assert sum(new_sleeps) <= cluster.stats.metadata_retries * bound
+    assert cluster.metadata.shard_health(0) == "live"  # success cleared it
+    cluster.close()
+
+
+def test_dead_metadata_shard_fails_fast_never_hangs_reads():
+    """Acceptance: a dead shard replica never hangs a read. With the shard
+    DECLARED dead the retry loop fails fast — the read completes through the
+    surviving replica with ZERO backoff sleeps (asserted via the injected
+    sleep, so the test itself never waits on wall clock)."""
+    slept = []
+    cluster = Cluster(
+        n_data_providers=2, n_metadata_providers=4, metadata_replication=2,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=3, sleep=slept.append),
+        health=HealthConfig(dead_after=2, clock=FakeClock()),
+    )
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(16 * PAGE, PAGE)
+    data = np.arange(16 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    cluster.metadata.fail_shard(0)
+    cluster.metadata.note_shard_failure(0)
+    cluster.metadata.note_shard_failure(0)  # -> declared dead
+    assert cluster.metadata.dead_shards() == [0]
+    before = len(slept)
+    np.testing.assert_array_equal(
+        sess.open(handle.blob_id).read(0, 16 * PAGE, version=v).data, data
+    )
+    assert slept[before:] == [], "dead shards must not burn the retry budget"
+    cluster.close()
+
+
+def test_wedged_metadata_shard_bounded_by_rpc_timeout():
+    """A shard that answers arbitrarily slowly (wedged, not crashed) costs
+    one bounded timeout per attempt instead of hanging the read plane."""
+    cluster = Cluster(
+        n_data_providers=2, n_metadata_providers=4, metadata_replication=2,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=1, sleep=lambda s: None),
+        metadata_timeout_seconds=0.05,
+    )
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    data = np.arange(8 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    shard = cluster.metadata.shards[0]
+    real_get_many = shard.get_many
+
+    def wedged_get_many(keys):
+        threading.Event().wait(0.3)  # far past the 50ms attempt budget
+        return real_get_many(keys)
+
+    shard.get_many = wedged_get_many
+    np.testing.assert_array_equal(
+        sess.open(handle.blob_id).read(0, 8 * PAGE, version=v).data, data
+    )
+    shard.get_many = real_get_many
+    assert cluster.metadata.shard_health(0) in ("suspect", "dead")
+    cluster.close()
+
+
+def test_mid_writev_shard_kill_write_completes_and_repairs():
+    """Tentpole mirror of the data-plane mid-flight death: a metadata shard
+    that dies while its node batch is in flight does not abort the writev —
+    the quorum rule publishes through the surviving replicas, and the repair
+    pass rebuilds the dead replica's node set once the shard rejoins."""
+    cluster = Cluster(
+        n_data_providers=2, n_metadata_providers=4, metadata_replication=2,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    shard = cluster.metadata.shards[2]
+    started, release = threading.Event(), threading.Event()
+    real_put_many = shard.put_many
+
+    def dying_put_many(nodes):
+        started.set()
+        assert release.wait(10)
+        return real_put_many(nodes)
+
+    shard.put_many = dying_put_many
+    data = np.arange(8 * PAGE, dtype=np.uint8)
+    versions = []
+    t = threading.Thread(target=lambda: versions.append(handle.write(data, 0)))
+    t.start()
+    if not started.wait(5):
+        # no node of this write homes on shard 2: kill it anyway — the write
+        # must still complete untouched
+        pass
+    cluster.metadata.fail_shard(2)  # dies mid-flight (put raises on release)
+    release.set()
+    t.join(10)
+    shard.put_many = real_put_many
+    assert versions == [1], "write must publish despite the mid-flight death"
+    np.testing.assert_array_equal(handle.read(0, 8 * PAGE, version=1).data, data)
+    # rejoin + repair: the dead replica's journal-covered node set is rebuilt
+    cluster.metadata.recover_shard(2)
+    cluster.repair_service.run_once()
+    blob = handle.blob_id
+    published, aborted = cluster.version_manager.repair_horizon(blob)
+    for key, node in cluster.metadata.iter_nodes(blob):
+        if key.version > published or key.version in aborted:
+            continue
+        for sid in cluster.metadata._replica_ids(key):
+            assert cluster.metadata.shards[sid].get(key) is not None, (
+                f"replica {sid} missing {key} after repair"
+            )
+    cluster.close()
+
+
+# --------------------------- page integrity (checksums) ------------------------
+
+
+def test_leaf_checksums_computed_at_freeze_time():
+    cluster = Cluster(n_data_providers=2, shared_cache_bytes=0)
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(4 * PAGE, PAGE)
+    handle.write(np.arange(4 * PAGE, dtype=np.uint8), 0)
+    pm = cluster.provider_manager
+    leaves = 0
+    for key, node in cluster.metadata.iter_nodes(handle.blob_id):
+        if not node.is_leaf:
+            continue
+        leaves += 1
+        assert node.checksum is not None
+        pid, page_key = node.page
+        assert page_checksum(pm.get_provider(pid).get_page(page_key)) == node.checksum
+    assert leaves > 0
+    cluster.close()
+
+
+def _corrupt_stored_page(provider, page_key):
+    bad = provider._pages[page_key].copy()
+    bad[0] ^= 0xFF
+    bad.flags.writeable = False
+    provider._pages[page_key] = bad
+
+
+def test_corrupt_page_read_falls_back_verifies_and_repairs():
+    """Satellite: flip a byte in a stored page. The read must return the
+    CORRECT bytes via a verified replica, count the checksum failure, and
+    repair the corrupt copy in place."""
+    cluster = Cluster(n_data_providers=3, page_replication=2,
+                      shared_cache_bytes=0)
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(8 * PAGE, PAGE)
+    data = np.random.default_rng(5).integers(0, 255, 8 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    # corrupt the PRIMARY copy of the first leaf
+    target = None
+    for key, node in cluster.metadata.iter_nodes(handle.blob_id):
+        if node.is_leaf and node.key.offset == 0:
+            target = node
+            break
+    assert target is not None
+    pid, page_key = target.page
+    provider = cluster.provider_manager.get_provider(pid)
+    _corrupt_stored_page(provider, page_key)
+    out = sess.open(handle.blob_id).read(0, 8 * PAGE, version=v).data
+    np.testing.assert_array_equal(out, data)  # corruption never surfaces
+    assert cluster.stats.checksum_failures >= 1
+    assert cluster.stats.repaired_pages >= 1
+    # the bad copy was overwritten with verified bytes
+    assert page_checksum(provider._pages[page_key]) == target.checksum
+    cluster.close()
+
+
+def test_repair_skips_corrupt_survivor_as_source():
+    """A corrupt copy must never become the repair SOURCE: re-replication
+    verifies each survivor against the leaf checksum and copies only
+    verified bytes onto the replacement provider."""
+    cluster = Cluster(n_data_providers=4, page_replication=3,
+                      shared_cache_bytes=0, health=HealthConfig(dead_after=1))
+    pm = cluster.provider_manager
+    pm.on_dead = None  # drive the pass by hand
+    sess = cluster.session(cache_bytes=0)
+    handle = sess.create(4 * PAGE, PAGE)
+    data = np.random.default_rng(7).integers(0, 255, 4 * PAGE, dtype=np.uint8)
+    v = handle.write(data, 0)
+    # pick one leaf: corrupt its primary's copy, kill one replica holder
+    target = next(
+        node for _, node in cluster.metadata.iter_nodes(handle.blob_id)
+        if node.is_leaf and node.key.offset == 0
+    )
+    (bad_pid, bad_key), victims = target.page, target.replicas
+    _corrupt_stored_page(pm.get_provider(bad_pid), bad_key)
+    dead_pid = victims[0][0]
+    pm.fail_provider(dead_pid)
+    pm.note_failure(dead_pid)
+    repaired, _ = cluster.repair_service.run_once()
+    assert repaired > 0
+    assert cluster.stats.checksum_failures >= 1  # the corrupt source was seen
+    # every fresh copy of that leaf verifies against the freeze-time checksum
+    for key, node in cluster.metadata.iter_nodes(handle.blob_id):
+        if not node.is_leaf or node.key != target.key:
+            continue
+        for pid, page_key in node.all_page_refs():
+            if pid == bad_pid:
+                continue  # still holds its corrupt copy (read path repairs it)
+            assert page_checksum(pm.get_provider(pid).get_page(page_key)) \
+                == node.checksum
+    np.testing.assert_array_equal(
+        sess.open(handle.blob_id).read(0, 4 * PAGE, version=v).data, data
+    )
+    cluster.close()
+
+
+# --------------------------- metadata chaos campaign ---------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_metadata_faults_zero_published_data_loss(seed):
+    """Satellite chaos campaign: mixed writer/reader traffic while a seeded
+    schedule kills/drops/delays METADATA shards (at most 1 of each node's 2
+    replicas at a time) alongside light data-plane faults. Published
+    versions must lose nothing, the frontier must stay monotone, and after
+    drain + repair every journal-covered node is back on ALL its replica
+    shards."""
+    n_shards, meta_replication = 4, 2
+    cluster = Cluster(
+        n_data_providers=4, page_replication=2,
+        n_metadata_providers=n_shards, metadata_replication=meta_replication,
+        shared_cache_bytes=0,
+        retry_policy=RetryPolicy(max_attempts=3, base_delay_seconds=0.001,
+                                 max_delay_seconds=0.004),
+        health=HealthConfig(dead_after=2, window_seconds=60.0),
+    )
+    writer_sessions = [cluster.session(cache_bytes=0) for _ in range(2)]
+    blob = writer_sessions[0].create(64 * PAGE, PAGE).blob_id
+    meta_faults = FaultSchedule.generate(
+        seed=seed, n_providers=n_shards, n_events=8, max_dead=1,
+        min_gap=3, max_gap=20, target=METADATA,
+    )
+    data_faults = FaultSchedule.generate(
+        seed=seed + 100, n_providers=4, n_events=4, max_dead=1,
+        min_gap=10, max_gap=40,
+    )
+    injector = FaultInjector(
+        cluster, FaultSchedule(meta_faults.events + data_faults.events)
+    )
+    injector.attach()
+
+    published = []
+    published_lock = threading.Lock()
+    errors = []
+    n_rounds, regions = 8, 4
+
+    def writer(wid, sess):
+        handle = sess.open(blob)
+        fill = 1
+        for r in range(n_rounds):
+            region = (wid * regions + r % regions) * 8
+            value = (wid * 100 + fill) % 251 + 1
+            fill += 1
+            try:
+                v = handle.write(
+                    np.full(8 * PAGE, value, np.uint8), region * PAGE
+                )
+            except ProviderFailed:
+                continue  # clean abort (quorum loss at that instant)
+            with published_lock:
+                published.append((v, region, 8, value))
+
+    def reader():
+        sess = cluster.session(cache_bytes=0)
+        handle = sess.open(blob)
+        last = 0
+        for _ in range(30):
+            v = handle.latest_published()
+            assert v >= last, "publish frontier must be monotone"
+            last = v
+            if v:
+                try:
+                    handle.read(0, 64 * PAGE, version=v)
+                except ProviderFailed as err:  # pragma: no cover
+                    errors.append(err)
+            threading.Event().wait(0.002)
+
+    threads = [
+        threading.Thread(target=writer, args=(i, s))
+        for i, s in enumerate(writer_sessions)
+    ] + [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, f"reads failed under metadata chaos: {errors[:3]}"
+
+    injector.drain()
+    injector.detach()
+    cluster.repair_service.run_once()
+
+    checker = cluster.session(cache_bytes=0).open(blob)
+    latest = checker.latest_published()
+    for v, region, n, value in published:
+        np.testing.assert_array_equal(
+            checker.read(region * PAGE, n * PAGE, version=v).data,
+            np.full(n * PAGE, value, np.uint8),
+            err_msg=f"seed {seed}: version {v} lost data",
+        )
+    expected = np.zeros(64 * PAGE, np.uint8)
+    for v, region, n, value in sorted(published):
+        if v <= latest:
+            expected[region * PAGE:(region + n) * PAGE] = value
+    np.testing.assert_array_equal(
+        checker.read(0, 64 * PAGE, version=latest).data, expected
+    )
+    # metadata replication restored: every journal-covered node on ALL homes
+    published_frontier, aborted = cluster.version_manager.repair_horizon(blob)
+    for key, node in cluster.metadata.iter_nodes(blob):
+        if key.version > published_frontier or key.version in aborted:
+            continue
+        for sid in cluster.metadata._replica_ids(key):
+            assert cluster.metadata.shards[sid].get(key) is not None, (
+                f"seed {seed}: replica {sid} missing {key} after repair"
+            )
     cluster.close()
 
 
