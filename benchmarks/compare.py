@@ -1,21 +1,24 @@
-"""Diff BENCH_concurrent.json against the previous git-rev-stamped rows.
+"""Diff git-rev-stamped benchmark payloads against their previous rows.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare [--json PATH] [--clients N]
 
 Loads the current ``BENCH_concurrent.json`` (working tree), walks the git
 history of that file for the most recent committed payload with a different
 ``git_rev`` stamp, and prints per-(mode, clients) deltas of aggregate
-bandwidth — the PR-to-PR perf trajectory check the ROADMAP calls for. A mode
-that did not exist in the previous payload reports ``new`` (never an error —
-every PR that adds a benchmark mode hits this case), a mode that disappeared
-reports ``removed``, and rows missing expected keys degrade to ``?`` cells.
+bandwidth — the PR-to-PR perf trajectory check the ROADMAP calls for. The
+serving payload ``BENCH_serving.json`` (tokens/s per (mode, sessions)) gets
+the same treatment when present. A mode that did not exist in the previous
+payload reports ``new`` (never an error — every PR that adds a benchmark
+mode hits this case), a mode that disappeared reports ``removed``, and rows
+missing expected keys degrade to ``?`` cells.
 
 By default this is a reporting tool (exit status 0 no matter what the deltas
 say). With ``--fail-over PCT`` it becomes CI's regression gate: the exit
 status is nonzero if any (mode, clients) pair present in BOTH payloads lost
-more than PCT% aggregate bandwidth — so a read-plane PR can't silently rot
-the write-plane numbers (or vice versa). New and removed modes never trip
-the gate.
+more than PCT% aggregate bandwidth — or any (mode, sessions) pair lost more
+than PCT% serving tokens/s — so a read-plane PR can't silently rot the
+write-plane numbers (or the serving plane's, or vice versa). New and removed
+modes never trip the gate.
 """
 
 from __future__ import annotations
@@ -61,29 +64,35 @@ def load_previous(path: pathlib.Path) -> Optional[dict]:
     return None
 
 
-def _index(payload: dict) -> Dict[Tuple[str, int], dict]:
+def _index(payload: dict, count_key: str = "clients") -> Dict[Tuple[str, int], dict]:
     return {
-        (r["mode"], r["clients"]): r
+        (r["mode"], r[count_key]): r
         for r in payload.get("rows", [])
-        if "mode" in r and "clients" in r
+        if "mode" in r and count_key in r
     }
 
 
-def _cell(row: Optional[dict]) -> str:
-    """Format a row's aggregate bandwidth; '?' for schema-mismatched rows."""
+def _cell(row: Optional[dict], metric: str = "aggregate_MBps") -> str:
+    """Format a row's metric; '?' for schema-mismatched rows."""
     if row is None:
         return "-"
-    value = row.get("aggregate_MBps")
+    value = row.get(metric)
     return f"{value:.1f}" if isinstance(value, (int, float)) else "?"
 
 
-def diff_rows(old: dict, new: dict, clients: Optional[int] = None) -> List[str]:
-    """Human-readable per-(mode, clients) aggregate-bandwidth deltas."""
-    old_idx, new_idx = _index(old), _index(new)
+def diff_rows(
+    old: dict,
+    new: dict,
+    clients: Optional[int] = None,
+    metric: str = "aggregate_MBps",
+    count_key: str = "clients",
+) -> List[str]:
+    """Human-readable per-(mode, count) deltas of ``metric``."""
+    old_idx, new_idx = _index(old, count_key), _index(new, count_key)
     lines = [
         f"comparing {old.get('git_rev', '?')} -> {new.get('git_rev', '?')} "
-        f"(aggregate_MBps)",
-        "mode,clients,old,new,delta_pct",
+        f"({metric})",
+        f"mode,{count_key},old,new,delta_pct",
     ]
     for key in sorted(new_idx, key=lambda k: (k[0], k[1])):
         mode, n = key
@@ -93,32 +102,38 @@ def diff_rows(old: dict, new: dict, clients: Optional[int] = None) -> List[str]:
         old_row = old_idx.get(key)
         if old_row is None:
             # a mode this PR introduced: report it, never crash on it
-            lines.append(f"{mode},{n},-,{_cell(new_row)},new")
+            lines.append(f"{mode},{n},-,{_cell(new_row, metric)},new")
             continue
-        a, b = old_row.get("aggregate_MBps"), new_row.get("aggregate_MBps")
+        a, b = old_row.get(metric), new_row.get(metric)
         if not isinstance(a, (int, float)) or not isinstance(b, (int, float)):
-            lines.append(f"{mode},{n},{_cell(old_row)},{_cell(new_row)},?")
+            lines.append(
+                f"{mode},{n},{_cell(old_row, metric)},{_cell(new_row, metric)},?"
+            )
             continue
         pct = (b - a) / a * 100.0 if a else float("inf")
         lines.append(f"{mode},{n},{a:.1f},{b:.1f},{pct:+.1f}%")
     for key in sorted(set(old_idx) - set(new_idx)):
         if clients is not None and key[1] != clients:
             continue
-        lines.append(f"{key[0]},{key[1]},{_cell(old_idx[key])},-,removed")
+        lines.append(f"{key[0]},{key[1]},{_cell(old_idx[key], metric)},-,removed")
     return lines
 
 
 def regressions(
-    old: dict, new: dict, threshold_pct: float
+    old: dict,
+    new: dict,
+    threshold_pct: float,
+    metric: str = "aggregate_MBps",
+    count_key: str = "clients",
 ) -> List[Tuple[Tuple[str, int], float]]:
-    """(mode, clients) pairs present in BOTH payloads whose aggregate
-    bandwidth dropped by more than ``threshold_pct`` percent, with the
-    (negative) delta. New/removed modes and malformed rows never regress."""
-    old_idx, new_idx = _index(old), _index(new)
+    """(mode, count) pairs present in BOTH payloads whose ``metric`` dropped
+    by more than ``threshold_pct`` percent, with the (negative) delta.
+    New/removed modes and malformed rows never regress."""
+    old_idx, new_idx = _index(old, count_key), _index(new, count_key)
     out: List[Tuple[Tuple[str, int], float]] = []
     for key in sorted(set(old_idx) & set(new_idx)):
-        a = old_idx[key].get("aggregate_MBps")
-        b = new_idx[key].get("aggregate_MBps")
+        a = old_idx[key].get(metric)
+        b = new_idx[key].get(metric)
         if not isinstance(a, (int, float)) or not isinstance(b, (int, float)):
             continue
         if a > 0 and (b - a) / a * 100.0 < -threshold_pct:
@@ -126,36 +141,65 @@ def regressions(
     return out
 
 
+def _compare_payload(
+    path: pathlib.Path,
+    clients: Optional[int],
+    fail_over: Optional[float],
+    metric: str,
+    count_key: str,
+) -> Tuple[List[str], int]:
+    """Diff + gate one payload file; missing/unparsable files and missing
+    history report informationally and never fail."""
+    try:
+        current = json.loads(path.read_text())
+    except (OSError, ValueError) as err:
+        return [f"no current benchmark rows at {path}: {err}"], 0
+    previous = load_previous(path)
+    if previous is None:
+        return [f"no previous git-rev-stamped rows for {path}; "
+                "nothing to compare"], 0
+    lines = diff_rows(
+        previous, current, clients=clients, metric=metric, count_key=count_key
+    )
+    code = 0
+    if fail_over is not None:
+        for (mode, n), pct in regressions(
+            previous, current, fail_over, metric=metric, count_key=count_key
+        ):
+            lines.append(
+                f"REGRESSION {mode},{n}: {pct:+.1f}% exceeds the "
+                f"-{fail_over:.0f}% gate"
+            )
+            code = 1
+    return lines, code
+
+
 def run(argv: Optional[List[str]] = None) -> Tuple[List[str], int]:
     """Full tool body: returns (report lines, exit code)."""
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--json", type=pathlib.Path,
                         default=REPO_ROOT / "BENCH_concurrent.json")
+    parser.add_argument("--serving-json", type=pathlib.Path,
+                        default=REPO_ROOT / "BENCH_serving.json",
+                        help="serving payload to gate on tok_per_s alongside "
+                             "the concurrent payload")
     parser.add_argument("--clients", type=int, default=None,
                         help="restrict the diff to one client count")
     parser.add_argument("--fail-over", type=float, default=None, metavar="PCT",
                         help="exit nonzero if any (mode, clients) pair in both "
                              "payloads lost more than PCT%% aggregate "
-                             "bandwidth (the CI regression gate)")
+                             "bandwidth, or any serving (mode, sessions) pair "
+                             "lost more than PCT%% tok/s (the CI gate)")
     args = parser.parse_args(argv)
-    try:
-        current = json.loads(args.json.read_text())
-    except (OSError, ValueError) as err:
-        return [f"no current benchmark rows at {args.json}: {err}"], 0
-    previous = load_previous(args.json)
-    if previous is None:
-        return [f"no previous git-rev-stamped rows for {args.json}; "
-                "nothing to compare"], 0
-    lines = diff_rows(previous, current, clients=args.clients)
-    code = 0
-    if args.fail_over is not None:
-        for (mode, n), pct in regressions(previous, current, args.fail_over):
-            lines.append(
-                f"REGRESSION {mode},{n}: {pct:+.1f}% exceeds the "
-                f"-{args.fail_over:.0f}% gate"
-            )
-            code = 1
-    return lines, code
+    lines, code = _compare_payload(
+        args.json, args.clients, args.fail_over,
+        metric="aggregate_MBps", count_key="clients",
+    )
+    serving_lines, serving_code = _compare_payload(
+        args.serving_json, args.clients, args.fail_over,
+        metric="tok_per_s", count_key="sessions",
+    )
+    return lines + [""] + serving_lines, code or serving_code
 
 
 def main(argv: Optional[List[str]] = None) -> List[str]:

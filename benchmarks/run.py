@@ -99,10 +99,10 @@ def main() -> None:
         print(line)
     write_bench_json(rows, args.out)
 
-    section("serving_throughput (beyond-paper: paged KV + prefix cache)")
+    section("serving_throughput (beyond-paper: blob-backed KV + prefix cache)")
     from benchmarks import serving_throughput
 
-    for line in serving_throughput.main():
+    for line in serving_throughput.main(out=REPO_ROOT / "BENCH_serving.json"):
         print(line)
 
     section("checkpoint_bench (beyond-paper: incremental COW checkpoints)")

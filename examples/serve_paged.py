@@ -1,5 +1,7 @@
-"""Serve a small model with batched requests over the paged COW KV cache:
-continuous batching, prefix-cache sharing, backpressure.
+"""Serve a small model over the BLOB-BACKED paged KV cache: two independent
+engines ("users") on one cluster share prompt-prefix pages through the
+cluster-wide content-addressed prefix directory — engine B never recomputes
+or re-stores the system prompt engine A published.
 
     PYTHONPATH=src python examples/serve_paged.py
 """
@@ -10,28 +12,53 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import Cluster
 from repro.models.lm import build_model
+from repro.serving.blob_kv import BlobKVClient, BlobKVStore
 from repro.serving.engine import Request, ServingEngine
 
 cfg = get_config("llama3_2-1b").smoke()
 model = build_model(cfg)
 params, _ = model.init(jax.random.PRNGKey(0))
-engine = ServingEngine(cfg, params, max_slots=4, n_pages=256)
+
+# one cluster, one KV pool blob; each engine is an independent session
+cluster = Cluster(n_data_providers=2, n_metadata_providers=2)
+n_layers = cfg.n_layers if cfg.family not in ("encdec", "audio") else cfg.n_dec_layers
+store = BlobKVStore.for_kv(
+    cluster, n_pages=256, page_tokens=cfg.kv_page_tokens,
+    n_layers=n_layers, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+    dtype=np.dtype("uint16"),  # bf16 pages travel as 2-byte payloads
+)
+engine_a = ServingEngine(cfg, params, max_slots=4, kv_client=BlobKVClient(store))
+engine_b = ServingEngine(cfg, params, max_slots=4, kv_client=BlobKVClient(store))
 
 rng = np.random.default_rng(0)
 system_prompt = rng.integers(0, cfg.vocab_size, 24).tolist()  # shared by all
 
 t0 = time.time()
-for i in range(10):
+for i in range(5):
     user = rng.integers(0, cfg.vocab_size, 8).tolist()
-    engine.submit(Request(i, system_prompt + user, max_new_tokens=12))
+    engine_a.submit(Request(i, system_prompt + user, max_new_tokens=12))
+done_a = engine_a.run_until_drained()
 
-done = engine.run_until_drained()
+# engine B (a different user session) admits the same system prompt: its
+# prefix pages resolve through the cluster directory to A's published pages
+for i in range(5):
+    user = rng.integers(0, cfg.vocab_size, 8).tolist()
+    engine_b.submit(Request(i, system_prompt + user, max_new_tokens=12))
+done_b = engine_b.run_until_drained()
 dt = time.time() - t0
+
+done = {**done_a, **{k + 100: v for k, v in done_b.items()}}
 total = sum(len(c.tokens) for c in done.values())
 hits = sum(c.prefill_skipped_tokens for c in done.values())
+cross = sum(c.prefill_skipped_tokens for c in done_b.values())
 print(f"{len(done)} completions / {total} tokens in {dt:.1f}s ({total / dt:.1f} tok/s)")
-print(f"prefix-cache: {hits} prompt tokens served from shared COW pages")
-print(f"pool stats: {engine.alloc.stats}")
+print(f"prefix directory: {hits} prompt tokens served from shared published pages")
+print(f"  of which {cross} crossed engines (B reading A's published prefix)")
+print(f"store stats: {store.stats}")
+print(f"directory: {len(cluster.page_directory)} entries, "
+      f"hit rate {cluster.page_directory.hit_rate:.2f}")
 assert len(done) == 10
+assert cross > 0, "engine B should share engine A's published prefix pages"
 print("serve_paged OK")

@@ -98,6 +98,15 @@ LOCKS = [
              note="guards the chaos harness's op counter and pending "
                   "fault queues; fault ACTIONS (kill/recover/sleep) run "
                   "outside it"),
+    LockSpec("PageDirectory._lock", 3,
+             note="the content-addressed page registry (dict/LRU/refcounts "
+                  "only); version pins are taken BEFORE it (they nest the "
+                  "level-1 gc guard) and eviction hooks/unpins fire OUTSIDE "
+                  "it — same level as BlobKVStore._lock: never nest the two"),
+    LockSpec("BlobKVStore._lock", 3,
+             note="KV page-pool slot free-list + refcounts; directory "
+                  "eviction (which re-enters the level-4 pin table) is "
+                  "always called with this RELEASED"),
     # -- level 4: shared-actor state -----------------------------------------
     LockSpec("Cluster._aux_lock", 4),
     LockSpec("Cluster._pins_lock", 4),

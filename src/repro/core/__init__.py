@@ -29,6 +29,7 @@ from repro.core.dht import (
 from repro.core.faults import FaultEvent, FaultInjector, FaultSchedule
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
+from repro.core.page_directory import PageAddress, PageDirectory
 from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
 from repro.core.provider import DataProvider, HealthConfig, ProviderManager
 from repro.core.repair import RepairService
@@ -66,7 +67,9 @@ __all__ = [
     "RepairService",
     "CacheKey",
     "FetchPlan",
+    "PageAddress",
     "PageCache",
+    "PageDirectory",
     "PrefetchConfig",
     "StridePrefetcher",
     "WatchWarmer",

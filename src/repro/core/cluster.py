@@ -64,6 +64,7 @@ from repro.core.dht import (
     page_checksum,
 )
 from repro.core.page_cache import PageCache, ZERO_PAGE_CHARGE
+from repro.core.page_directory import PageDirectory
 from repro.core.prefetch import PrefetchConfig, StridePrefetcher, WatchWarmer
 from repro.core.provider import DataProvider, HealthConfig, ProviderManager
 from repro.core.repair import RepairService
@@ -290,6 +291,7 @@ class Cluster:
         retry_policy: Optional[RetryPolicy] = None,
         health: Optional[HealthConfig] = None,
         metadata_timeout_seconds: Optional[float] = None,
+        page_directory_capacity: int = 4096,
     ) -> None:
         #: cluster-wide aggregate traffic (every session records here too)
         self.stats = TrafficStats()
@@ -353,6 +355,11 @@ class Cluster:
         #: just-pinned version could still be collected (``_pins_lock`` alone
         #: cannot give that guarantee; it is held only for the dict ops)
         self._gc_guard = make_lock("Cluster._gc_guard")
+        #: cluster-wide content-addressed page registry (the serving plane's
+        #: cross-user prefix cache): published pages keyed by content, each
+        #: entry snapshot-pinning its version so GC never collects a page the
+        #: directory still advertises
+        self.page_directory = PageDirectory(self, capacity=page_directory_capacity)
         #: monotonically numbers sessions (diversifies their RNG streams)
         self._session_counter = 0
         self._max_workers = max_workers
@@ -487,6 +494,20 @@ class Cluster:
     def pinned_versions(self, blob_id: int) -> Set[int]:
         with self._pins_lock:
             return set(self._pins.get(blob_id, ()))
+
+    def pin_published(self, blob_id: int, version: Optional[int] = None) -> int:
+        """Validate ``version`` against the publish frontier and snapshot-pin
+        it, atomically with respect to GC passes (``None`` pins the latest
+        published version). Raises ``ValueError`` for versions beyond the
+        frontier or abandoned ones — this is the gate that makes registering
+        (and therefore cross-session reading) unpublished data impossible.
+        Returns the version actually pinned."""
+        with self._gc_guard:
+            _, _, resolved, _ = self.version_manager.resolve_read_version(
+                blob_id, version
+            )
+            self.pin_version(blob_id, resolved)
+        return resolved
 
     # -- GC (paper future work) ----------------------------------------------
     def gc(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
@@ -1148,6 +1169,33 @@ class Session:
         return versions
 
     # -- READ plane --------------------------------------------------------------
+    def read_pages(
+        self,
+        blob_id: int,
+        version: int,
+        pages: Sequence[int],
+        pinned: bool = False,
+    ) -> List[np.ndarray]:
+        """Gather whole pages of one published ``version`` in a single
+        vectored read — the serving plane's page-table → readv-plan surface.
+        Full-page segments come back as zero-copy views of cached pages.
+
+        ``pinned=True`` is the caller's attestation that ``version`` is held
+        by a snapshot pin it owns (taken via :meth:`Cluster.pin_published`,
+        which already validated the publish frontier); the per-call frontier
+        check is then skipped, exactly like :class:`Snapshot` re-reads.
+        Without it the version is validated here, so an unpublished version
+        can never be read either way."""
+        vm = self.cluster.version_manager
+        if pinned:
+            total_pages, page_size = vm.blob_info(blob_id)
+        else:
+            total_pages, page_size, version, _ = vm.resolve_read_version(
+                blob_id, version
+            )
+        segments = [(p * page_size, page_size) for p in pages]
+        return self._readv(blob_id, version, segments, total_pages, page_size)
+
     def _readv(
         self,
         blob_id: int,

@@ -1,3 +1,21 @@
+from repro.serving.blob_kv import (
+    BlobKVClient,
+    BlobKVStore,
+    KVSeq,
+    kv_page_nbytes,
+    pack_kv_page,
+    unpack_kv_page,
+)
 from repro.serving.engine import Completion, Request, ServingEngine
 
-__all__ = ["Completion", "Request", "ServingEngine"]
+__all__ = [
+    "BlobKVClient",
+    "BlobKVStore",
+    "Completion",
+    "KVSeq",
+    "Request",
+    "ServingEngine",
+    "kv_page_nbytes",
+    "pack_kv_page",
+    "unpack_kv_page",
+]

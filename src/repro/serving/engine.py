@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.lm import Model, build_model
+from repro.serving.blob_kv import BlobKVClient, pack_kv_page, unpack_kv_page
 from repro.storage.kvcache import PagedKVAllocator
 
 
@@ -60,6 +61,7 @@ class ServingEngine:
         n_pages: int = 256,
         max_pages_per_seq: int = 32,
         rng_seed: int = 0,
+        kv_client: Optional[BlobKVClient] = None,
     ) -> None:
         self.cfg = cfg
         self.model: Model = build_model(cfg)
@@ -67,7 +69,23 @@ class ServingEngine:
         self.T = cfg.kv_page_tokens
         self.max_slots = max_slots
         self.Rmax = max_pages_per_seq
-        self.alloc = PagedKVAllocator(n_pages, self.T)
+        #: blob mode: the page pool is a blob on a Cluster and the prefix
+        #: index is the cluster-wide PageDirectory — slot ids come from the
+        #: shared BlobKVStore, so the device pool mirrors the blob geometry
+        self.kv = kv_client
+        if kv_client is not None:
+            if kv_client.store.page_tokens != self.T:
+                raise ValueError(
+                    "BlobKVStore page_tokens != model kv_page_tokens"
+                )
+            n_pages = kv_client.store.n_pages
+            self.alloc = None
+            #: slot -> published version currently resident in the device
+            #: pool (a stale entry just causes a refetch: versions are
+            #: monotone, so a reused slot republishes at a higher version)
+            self._resident: Dict[int, int] = {}
+        else:
+            self.alloc = PagedKVAllocator(n_pages, self.T)
         self._rng = np.random.default_rng(rng_seed)
 
         L = self._n_attn_layers()
@@ -77,6 +95,7 @@ class ServingEngine:
             # the engine scatters raw prefill pages; int8 pools (decode-path
             # quantization) would need a quantizing scatter here — keep bf16
             dt = jnp.dtype(jnp.bfloat16)
+        self.n_pool_pages = n_pages
         self.pool_k = jnp.zeros((L, n_pages, self.T, K, hd), dt)
         self.pool_v = jnp.zeros((L, n_pages, self.T, K, hd), dt)
         self._slots: List[Optional[dict]] = [None] * max_slots
@@ -133,11 +152,66 @@ class ServingEngine:
             pad = (-len(prompt)) % self.T
             padded = prompt + [0] * pad
             need_pages = len(padded) // self.T + 1
-            if self.alloc.free_pages < need_pages:
-                # not enough pages: requeue and stop admitting (backpressure)
-                self._queue.put(req)
-                return
-            seq, shared_tokens, _ = self.alloc.admit(prompt)
+            # pages every live row already schedules: the owner-indexed
+            # attention kernel (kernels/ops.py page_ownership) gives each pool
+            # page exactly ONE owner row per batch, so a new row sharing a
+            # page with a live row must COW-fork it on device — prefix
+            # sharing is storage-level across time, never within a batch
+            busy = set()
+            for s in self._slots:
+                if s is not None:
+                    busy.update(
+                        s["seq"].pages if self.kv is None else s["seq"].slots
+                    )
+            if self.kv is None:
+                if self.alloc.free_pages < need_pages:
+                    # not enough pages: requeue, stop admitting (backpressure)
+                    self._queue.put(req)
+                    return
+                seq, shared_tokens, cow = self.alloc.admit(prompt)
+                try:
+                    cow = cow + self.alloc.fork_for_batch(seq.seq_id, busy)
+                except MemoryError:
+                    self.alloc.finish(seq.seq_id)
+                    self._queue.put(req)
+                    return
+                pages = seq.pages
+                if cow:
+                    # partial-page prefix reuse + batch-conflict forks: copy
+                    # donor pages on device before anything writes the pool
+                    src = jnp.asarray([c[0] for c in cow], jnp.int32)
+                    dst = jnp.asarray([c[1] for c in cow], jnp.int32)
+                    self.pool_k, self.pool_v = self._jit_copy_pages(
+                        self.pool_k, self.pool_v, src, dst
+                    )
+            else:
+                try:
+                    seq, shared_tokens, fetches = self.kv.admit(prompt)
+                except MemoryError:
+                    # blob pool exhausted (directory had nothing evictable):
+                    # same backpressure as the host allocator path
+                    self._queue.put(req)
+                    return
+                pages = seq.slots
+                # make shared prefix pages device-resident (one vectored
+                # read through the shared cache tier per version group)
+                self._load_shared_pages(fetches)
+                try:
+                    forks = self.kv.fork_for_batch(seq, busy)
+                except MemoryError:
+                    self.kv.finish(seq)
+                    self._queue.put(req)
+                    return
+                if forks:
+                    src = jnp.asarray([c[0] for c in forks], jnp.int32)
+                    dst = jnp.asarray([c[1] for c in forks], jnp.int32)
+                    self.pool_k, self.pool_v = self._jit_copy_pages(
+                        self.pool_k, self.pool_v, src, dst
+                    )
+                    for _, d in forks:
+                        # forked bytes are local-only: no published version
+                        # is resident in that slot anymore
+                        self._resident.pop(d, None)
             slot = self._slots.index(None)
 
             # prefill (full recompute of non-shared part; prefix-shared pages
@@ -147,18 +221,53 @@ class ServingEngine:
             toks = jnp.asarray(padded, jnp.int32)[None]
             logits, pk, pv = self._jit_prefill_tokens(self.params, toks)
             n_prompt_pages = len(padded) // self.T
-            # scatter non-shared prompt pages into the big pool at their ids
-            first_new = shared_tokens // self.T
+            # scatter non-shared prompt pages into the big pool at their ids;
+            # ceil: a partially-shared (COW-forked) final page already holds
+            # every prompt token this request needs
+            first_new = -(-shared_tokens // self.T)
             for p in range(first_new, n_prompt_pages):
-                pid = seq.pages[p]
+                pid = pages[p]
                 self.pool_k = self.pool_k.at[:, pid].set(pk[:, p])
                 self.pool_v = self.pool_v.at[:, pid].set(pv[:, p])
+                if self.kv is not None:
+                    self._resident.pop(pid, None)  # local bytes now newer
+            if self.kv is not None:
+                # publish the fresh FULL prompt pages as one writev (one
+                # version) and register them in the cluster prefix directory
+                full_pages = len(prompt) // self.T
+                payloads = {
+                    p: pack_kv_page(pk[:, p], pv[:, p], self.kv.store.page_size)
+                    for p in range(first_new, full_pages)
+                }
+                self.kv.publish_prompt(seq, payloads)
+                for p in range(first_new, full_pages):
+                    addr = seq.page_addr[p]
+                    self._resident[addr.page] = addr.version
 
             next_tok = self._sample(np.asarray(logits)[0], req.temperature)
             self._slots[slot] = dict(
                 req=req, seq=seq, generated=[int(next_tok)], t0=time.time(),
                 shared=shared_tokens, length=len(prompt),
             )
+
+    def _load_shared_pages(self, fetches) -> None:
+        """Fetch shared prefix pages this device pool doesn't hold at their
+        published version and scatter them in (admit-time gather)."""
+        stale = [
+            (i, a) for i, a in fetches
+            if self._resident.get(a.page) != a.version
+        ]
+        if not stale:
+            return
+        L, _, _, K, hd = self.pool_k.shape
+        shape = (L, self.T, K, hd)
+        dt = np.dtype(self.pool_k.dtype)
+        bufs = self.kv.fetch_pages([a for _, a in stale])
+        for (_, addr), buf in zip(stale, bufs):
+            k, v = unpack_kv_page(np.asarray(buf), shape, dt)
+            self.pool_k = self.pool_k.at[:, addr.page].set(jnp.asarray(k))
+            self.pool_v = self.pool_v.at[:, addr.page].set(jnp.asarray(v))
+            self._resident[addr.page] = addr.version
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
         logits = logits[: self.cfg.vocab_size]
@@ -180,7 +289,10 @@ class ServingEngine:
         copies: List[Tuple[int, int]] = []
         for i in active:
             st = self._slots[i]
-            copies.extend(self.alloc.append_token(st["seq"].seq_id))
+            if self.kv is not None:
+                self.kv.append_token(st["seq"])  # head always fresh: no COW
+            else:
+                copies.extend(self.alloc.append_token(st["seq"].seq_id))
         if copies:
             src = jnp.asarray([c[0] for c in copies], jnp.int32)
             dst = jnp.asarray([c[1] for c in copies], jnp.int32)
@@ -188,13 +300,16 @@ class ServingEngine:
 
         B = self.max_slots
         # inactive rows keep the OOB sentinel so they own no pages
-        tables = np.full((B, self.Rmax), self.alloc.n_pages, np.int32)
+        tables = np.full((B, self.Rmax), self.n_pool_pages, np.int32)
         page_pos = np.zeros((B, self.Rmax), np.int32)
         lengths = np.zeros((B,), np.int32)
         tokens = np.zeros((B,), np.int32)
         for i in active:
             st = self._slots[i]
-            row = self.alloc.table(st["seq"].seq_id, self.Rmax)
+            if self.kv is not None:
+                row = self.kv.table(st["seq"], self.Rmax)
+            else:
+                row = self.alloc.table(st["seq"].seq_id, self.Rmax)
             tables[i] = row
             page_pos[i] = np.arange(self.Rmax) * self.T  # positional pages (no ring)
             lengths[i] = st["length"] + len(st["generated"]) - 1
@@ -207,6 +322,26 @@ class ServingEngine:
         )
         logits = np.asarray(logits)
 
+        if self.kv is not None:
+            # a head page that just FILLED becomes a published blob version
+            # (write_async: the publish pipeline overlaps the next steps)
+            for i in active:
+                seq = self._slots[i]["seq"]
+                if seq.length and seq.length % self.T == 0:
+                    idx = seq.length // self.T - 1
+                    if (
+                        seq.page_addr[idx] is None
+                        and idx not in self.kv.pending_pages(seq)
+                    ):
+                        sid = seq.slots[idx]
+                        self.kv.publish_page_async(
+                            seq, idx,
+                            pack_kv_page(
+                                self.pool_k[:, sid], self.pool_v[:, sid],
+                                self.kv.store.page_size,
+                            ),
+                        )
+
         for i in active:
             st = self._slots[i]
             tok = self._sample(logits[i], st["req"].temperature)
@@ -217,7 +352,10 @@ class ServingEngine:
 
     def _finish(self, slot: int) -> None:
         st = self._slots[slot]
-        self.alloc.finish(st["seq"].seq_id)
+        if self.kv is not None:
+            self.kv.finish(st["seq"])
+        else:
+            self.alloc.finish(st["seq"].seq_id)
         self._done[st["req"].request_id] = Completion(
             st["req"].request_id,
             st["generated"],

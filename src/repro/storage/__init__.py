@@ -1,4 +1,11 @@
 from repro.storage.checkpoint import BlobCheckpointer, CheckpointRecord
-from repro.storage.kvcache import PagedKVAllocator, SeqState, Snapshot
+from repro.storage.kvcache import PagedKVAllocator, SeqState, Snapshot, chain_hash
 
-__all__ = ["BlobCheckpointer", "CheckpointRecord", "PagedKVAllocator", "SeqState", "Snapshot"]
+__all__ = [
+    "BlobCheckpointer",
+    "CheckpointRecord",
+    "PagedKVAllocator",
+    "SeqState",
+    "Snapshot",
+    "chain_hash",
+]

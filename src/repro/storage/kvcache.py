@@ -25,6 +25,14 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 
+def chain_hash(prev: int, tokens: Tuple[int, ...]) -> int:
+    """Content address of a token run given its prefix hash. Module-level so
+    the blob-backed serving plane (``repro.serving.blob_kv``) addresses pages
+    identically to the host allocator — int/tuple hashing is deterministic
+    within a process, which is the sharing domain of both indexes."""
+    return hash((prev, tokens))
+
+
 @dataclasses.dataclass
 class SeqState:
     seq_id: int
@@ -52,9 +60,17 @@ class PagedKVAllocator:
         #: prefix hash -> page id (content-addressed full pages)
         self._prefix_index: Dict[int, int] = {}
         self._page_prefix: Dict[int, int] = {}  # reverse map for eviction
+        #: full-page-prefix hash -> {pid: tokens written so far in that page}
+        #: for PARTIAL final pages; unlike _prefix_index these entries hold no
+        #: reference — they live exactly as long as their owner's page does
+        self._ext_index: Dict[int, Dict[int, Tuple[int, ...]]] = {}
+        self._page_ext: Dict[int, int] = {}  # reverse map for cleanup
         self._seqs: Dict[int, SeqState] = {}
         self._next_seq = 0
-        self.stats = {"alloc": 0, "shared": 0, "cow_copies": 0, "freed": 0}
+        self.stats = {
+            "alloc": 0, "shared": 0, "cow_copies": 0, "freed": 0,
+            "partial_shared_tokens": 0,
+        }
 
     # -- low-level ----------------------------------------------------------------
     @property
@@ -86,22 +102,36 @@ class PagedKVAllocator:
             h = self._page_prefix.pop(pid, None)
             if h is not None:
                 self._prefix_index.pop(h, None)
+            eh = self._page_ext.pop(pid, None)
+            if eh is not None:
+                bucket = self._ext_index.get(eh)
+                if bucket is not None:
+                    bucket.pop(pid, None)
+                    if not bucket:
+                        del self._ext_index[eh]
             self._free.append(pid)
             self.stats["freed"] += 1
 
     # -- prefix hashing --------------------------------------------------------------
-    @staticmethod
-    def _chain(prev: int, tokens: Tuple[int, ...]) -> int:
-        return hash((prev, tokens))
+    _chain = staticmethod(chain_hash)
 
     # -- request lifecycle --------------------------------------------------------------
     def admit(self, tokens: Sequence[int]) -> Tuple[SeqState, int, List[Tuple[int, int]]]:
         """Admit a prompt. Returns (seq, n_shared_tokens, cow_copies).
 
         ``n_shared_tokens`` tokens are already present in shared pages (the
-        engine can skip prefill for them); ``cow_copies`` is a list of
-        (src_page, dst_page) the engine must copy on device before writing
-        (COW fork of a partially-reused page).
+        engine can skip prefill WRITES for them); ``cow_copies`` is a list of
+        (src_page, dst_page) the engine must copy on device BEFORE its next
+        allocator call (COW fork of a partially-reused page).
+
+        Partial-page reuse: when the prompt *ends* inside its final page and
+        another live sequence's final page starts with those same tokens
+        (under the same full-page prefix), that page is COW-forked into the
+        new sequence and the whole prompt counts as shared — the fork's
+        positions beyond the prompt are stale KV from the donor, masked by
+        this sequence's length and overwritten as decode appends. A prompt
+        whose tail spans past the matched page gets no partial reuse: the
+        engine would have to scatter recomputed KV over the fork anyway.
         """
         tokens = tuple(int(t) for t in tokens)
         T = self.T
@@ -121,8 +151,23 @@ class PagedKVAllocator:
         n_shared_tokens = shared * T
 
         cow: List[Tuple[int, int]] = []
-        # fresh pages for the rest of the prompt (+ the decode head page)
         rest = len(tokens) - n_shared_tokens
+        tail = tokens[n_shared_tokens:]
+        if 0 < rest < T:
+            # the prompt ends in this page: a donor page whose first `rest`
+            # tokens match lets us fork instead of prefilling the page
+            for src, src_tokens in self._ext_index.get(h, {}).items():
+                if len(src_tokens) >= rest and src_tokens[:rest] == tail:
+                    dst = self._alloc_page()
+                    cow.append((src, dst))
+                    pages.append(dst)
+                    n_shared_tokens = len(tokens)
+                    rest = 0
+                    self.stats["cow_copies"] += 1
+                    self.stats["partial_shared_tokens"] += len(tail)
+                    break
+
+        # fresh pages for the rest of the prompt (+ the decode head page)
         n_fresh = (rest + T - 1) // T
         for i in range(n_fresh):
             pid = self._alloc_page()
@@ -136,12 +181,42 @@ class PagedKVAllocator:
                 self._prefix_index[hh] = pid
                 self._page_prefix[pid] = hh
                 self._retain(pid)  # the index holds a reference
+        # index a partial final page as a COW donor for later admits (no
+        # reference held: the entry dies with the page)
+        if len(tokens) % T and pages:
+            head = pages[-1]
+            if head not in self._page_ext:
+                self._page_ext[head] = hh
+                self._ext_index.setdefault(hh, {})[head] = tokens[
+                    (len(tokens) // T) * T:
+                ]
 
         seq = SeqState(self._next_seq, len(tokens), pages, shared)
         self._next_seq += 1
         self._seqs[seq.seq_id] = seq
         self.stats["shared"] += shared
         return seq, n_shared_tokens, cow
+
+    def fork_for_batch(self, seq_id: int, busy) -> List[Tuple[int, int]]:
+        """COW-fork any of this sequence's pages whose id is in ``busy`` (the
+        pages of every OTHER live row of the same decode batch). The
+        owner-indexed attention kernel (kernels/ops.py ``page_ownership``)
+        assigns each pool page to exactly one row per batch, so two live rows
+        must never alias a page id: prefix sharing is storage-level across
+        time, and concurrent readers of a shared page each get a device copy.
+        Returns the (src, dst) device copies; raises ``MemoryError`` with the
+        sequence still internally consistent (caller rolls back via
+        ``finish``)."""
+        seq = self._seqs[seq_id]
+        copies: List[Tuple[int, int]] = []
+        for i, pid in enumerate(seq.pages):
+            if pid in busy:
+                dst = self._alloc_page()
+                copies.append((pid, dst))
+                seq.pages[i] = dst
+                self._release_page(pid)
+                self.stats["cow_copies"] += 1
+        return copies
 
     def ensure_writable_head(self, seq_id: int) -> List[Tuple[int, int]]:
         """Before decode appends to the head page, COW-fork it if shared.

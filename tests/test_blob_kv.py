@@ -1,0 +1,299 @@
+"""Blob-backed KV serving plane (docs/SERVING.md): slot bookkeeping on the
+pool blob, the cluster-wide content-addressed prefix directory (frontier
+gating, snapshot pinning, refcounted eviction), publish/gather round-trips,
+pool-pressure backpressure, balancer coupling under hot-prefix skew, GC
+safety, and the serving benchmark's CI regression gate."""
+
+import numpy as np
+import pytest
+
+from repro.core import BalancerConfig, Cluster
+from repro.serving.blob_kv import (
+    BlobKVClient,
+    BlobKVStore,
+    kv_page_nbytes,
+    pack_kv_page,
+    unpack_kv_page,
+)
+from repro.storage.kvcache import chain_hash
+
+T = 4  # page_tokens for every store in this file
+
+
+def make_cluster(**kw):
+    kw.setdefault("n_data_providers", 4)
+    kw.setdefault("n_metadata_providers", 2)
+    kw.setdefault("shared_cache_bytes", 0)
+    return Cluster(**kw)
+
+
+def make_store(cluster, n_pages=8, page_bytes=64):
+    return BlobKVStore(cluster, n_pages, page_bytes=page_bytes, page_tokens=T)
+
+
+def page_payload(store, fill):
+    return np.full(store.page_size, fill % 251, np.uint8)
+
+
+def publish_prompt(client, prompt, fill=1):
+    """admit + publish every fresh FULL prompt page; returns the live seq."""
+    seq, _, _ = client.admit(prompt)
+    payloads = {
+        p: page_payload(client.store, fill + p)
+        for p in range(seq.n_shared_pages, len(prompt) // T)
+    }
+    client.publish_prompt(seq, payloads)
+    return seq
+
+
+# ------------------------------ page packing ------------------------------
+def test_kv_page_pack_unpack_roundtrip():
+    shape = (2, T, 3, 5)  # (L, T, K, hd)
+    nbytes = kv_page_nbytes(2, T, 3, 5, np.float32)
+    page_size = 1 << (nbytes - 1).bit_length()
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=shape).astype(np.float32)
+    v = rng.normal(size=shape).astype(np.float32)
+    buf = pack_kv_page(k, v, page_size)
+    assert buf.shape == (page_size,) and buf.dtype == np.uint8
+    k2, v2 = unpack_kv_page(buf, shape, np.float32)
+    np.testing.assert_array_equal(k, k2)
+    np.testing.assert_array_equal(v, v2)
+    with pytest.raises(ValueError):
+        pack_kv_page(k, v, nbytes // 2)  # payload must fit the blob page
+
+
+# ------------------------- cross-client prefix sharing ---------------------
+def test_prefix_shared_across_clients_zero_duplicate_storage():
+    cluster = make_cluster()
+    store = make_store(cluster, n_pages=16)
+    a, b = BlobKVClient(store), BlobKVClient(store)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]  # two full pages
+    seq_a = publish_prompt(a, prompt, fill=10)
+    used = store.used_slots
+    seq_b, shared, fetches = b.admit(prompt)
+    assert shared == len(prompt)  # the whole prompt resolved in the directory
+    assert [i for i, _ in fetches] == [0, 1]
+    assert seq_b.slots[:2] == seq_a.slots[:2]  # same blob pages
+    assert store.used_slots == used  # zero duplicate storage
+    # the fetched bytes are exactly what A published
+    bufs = b.fetch_pages([addr for _, addr in fetches])
+    np.testing.assert_array_equal(bufs[0], page_payload(store, 10))
+    np.testing.assert_array_equal(bufs[1], page_payload(store, 11))
+    a.finish(seq_a)
+    # A finishing never disturbs B: the pages are published blob versions
+    np.testing.assert_array_equal(
+        b.fetch_pages([seq_b.page_addr[0]])[0], page_payload(store, 10)
+    )
+    b.finish(seq_b)
+    cluster.close()
+
+
+def test_gather_compiles_one_read_per_version_group():
+    cluster = make_cluster()
+    store = make_store(cluster, n_pages=16)
+    client = BlobKVClient(store)
+    # 3 full pages published as ONE writev -> contiguous slots -> one version
+    seq = publish_prompt(client, list(range(3 * T)), fill=1)
+    assert len({a.version for a in seq.page_addr}) == 1
+    reads_before = client.stats["gather_reads"]
+    out = client.gather(seq)
+    assert [i for i, _ in out] == [0, 1, 2]
+    assert client.stats["gather_reads"] == reads_before + 1  # one readv plan
+    client.finish(seq)
+    cluster.close()
+
+
+# --------------------------- the frontier invariant -------------------------
+def test_unpublished_version_impossible_to_register_or_read():
+    """Acceptance criterion: a cross-session read of an unpublished KV page
+    is impossible by construction — registration pins through the publish
+    frontier and ``read_pages`` validates against it."""
+    cluster = make_cluster()
+    store = make_store(cluster)
+    client = BlobKVClient(store)
+    seq = publish_prompt(client, [1, 2, 3, 4], fill=3)
+    latest = cluster.version_manager.latest_published(store.blob_id)
+    ghost = latest + 7  # a version no writer has published
+    free_before = store.free_slots
+    key = chain_hash(chain_hash(0, (1, 2, 3, 4)), (9, 9, 9, 9))
+    with pytest.raises(ValueError, match="not yet published"):
+        store.register_prefix(key, seq.slots[0], ghost)
+    # the failed registration rolled its slot reference back
+    assert store.free_slots == free_before
+    assert key not in cluster.page_directory
+    # nor can any session read at that version
+    with pytest.raises(ValueError, match="not yet published"):
+        cluster.session().read_pages(store.blob_id, ghost, [0])
+    # and a page that was never published is simply invisible: the tail page
+    # of this prompt exists only in the owner's pool, so a second client
+    # resolves only the PUBLISHED prefix
+    other = BlobKVClient(store)
+    seq2, shared2, _ = other.admit([1, 2, 3, 4, 9, 9, 9, 9])
+    assert shared2 == 4
+    other.finish(seq2)
+    client.finish(seq)
+    cluster.close()
+
+
+# ----------------------- slot reuse under pins/refs ------------------------
+def test_directory_ref_blocks_eviction_and_recycled_slot_is_cow_safe():
+    cluster = make_cluster()
+    store = make_store(cluster, n_pages=4)
+    a = BlobKVClient(store)
+    prompt = [1, 2, 3, 4]
+    seq = publish_prompt(a, prompt, fill=20)
+    slot = seq.slots[0]
+    old_addr = seq.page_addr[0]
+    a.finish(seq)
+    # the directory's reference alone keeps the slot off the free list
+    assert store.used_slots == 1
+    b = BlobKVClient(store)
+    seq_b, shared, _ = b.admit(prompt)
+    assert shared == 4 and seq_b.slots == [slot]
+    # an entry a live sequence reads through is not evictable
+    assert cluster.page_directory.evict_unreferenced(1, blob_id=store.blob_id) == 0
+    b.finish(seq_b)
+    # unreferenced now: eviction frees the slot
+    assert cluster.page_directory.evict_unreferenced(1, blob_id=store.blob_id) == 1
+    assert store.used_slots == 0
+    # pin the OLD version, then republish the recycled slot with new bytes:
+    # the new registration carries a strictly higher version and the pinned
+    # old version still reads the old bytes (blob writes are COW — a reused
+    # slot can never clobber what an older version's readers see)
+    cluster.pin_published(store.blob_id, old_addr.version)
+    seq2 = publish_prompt(a, [9, 9, 9, 9], fill=77)
+    assert seq2.slots == [slot]  # recycled
+    assert seq2.page_addr[0].version > old_addr.version
+    old = a.session.read_pages(
+        store.blob_id, old_addr.version, [old_addr.page], pinned=True
+    )[0]
+    np.testing.assert_array_equal(old, page_payload(store, 20))
+    np.testing.assert_array_equal(
+        a.fetch_pages([seq2.page_addr[0]])[0], page_payload(store, 77)
+    )
+    cluster.unpin_version(store.blob_id, old_addr.version)
+    a.finish(seq2)
+    cluster.close()
+
+
+# ------------------------------ pool pressure ------------------------------
+def test_pool_pressure_evicts_directory_then_memoryerror_then_reuse():
+    cluster = make_cluster()
+    store = make_store(cluster, n_pages=4)
+    client = BlobKVClient(store)
+    # fill the pool with finished, directory-advertised prefix pages
+    for i in range(4):
+        seq = publish_prompt(client, [i, i + 1, i + 2, i + 3], fill=i)
+        client.finish(seq)
+    assert store.free_slots == 0 and len(cluster.page_directory) == 4
+    # pressure: a fresh admit reclaims unreferenced directory entries
+    seq, shared, _ = client.admit([50, 51, 52, 53, 54])  # needs 2 slots
+    assert shared == 0 and len(seq.slots) == 2
+    assert store.stats["evictions"] >= 2
+    hold, _, _ = client.admit([60, 61, 62, 63])  # evicts another entry
+    hold2, _, _ = client.admit([65, 66, 67, 68])  # evicts the last entry
+    # everything referenced by live sequences now: admission must fail ...
+    with pytest.raises(MemoryError):
+        client.admit([70, 71, 72, 73])
+    # ... with every partial acquisition rolled back
+    assert store.free_slots == 0
+    # post-eviction reuse: finishing a sequence frees its slot for admission
+    client.finish(hold)
+    seq3, _, _ = client.admit([70, 71, 72, 73])
+    assert len(seq3.slots) == 1
+    client.finish(seq3)
+    client.finish(hold2)
+    client.finish(seq)
+    cluster.close()
+
+
+def test_failed_admit_releases_shared_prefix_refs():
+    """A MemoryError admit that already resolved shared pages must drop its
+    directory refs — otherwise the entries become permanently unevictable."""
+    cluster = make_cluster()
+    store = make_store(cluster, n_pages=2)
+    client = BlobKVClient(store)
+    seq = publish_prompt(client, [1, 2, 3, 4], fill=4)
+    client.finish(seq)  # slot survives via the directory
+    hold, _, _ = client.admit([5, 6, 7, 8])  # takes the last free slot
+    with pytest.raises(MemoryError):
+        # shares the published page, then fails allocating its tail page
+        client.admit([1, 2, 3, 4, 9, 9])
+    # the rollback released the directory ref: the entry is evictable again
+    assert cluster.page_directory.evict_unreferenced(1, blob_id=store.blob_id) == 1
+    seq2, _, _ = client.admit([9, 9, 9, 9])
+    client.finish(seq2)
+    client.finish(hold)
+    cluster.close()
+
+
+# ----------------------- hot prefixes drive the balancer --------------------
+def test_hot_prefix_drives_replica_promotion_through_blob_path():
+    """The ROADMAP's realistic-skew story: N sessions hammering one shared
+    prefix page (no cache tiers) is exactly the hot-page pattern the
+    ReplicaBalancer promotes on — through the real blob fetch path."""
+    cluster = make_cluster(
+        n_data_providers=8,
+        balancer_config=BalancerConfig(
+            hot_threshold=4, skew_ratio=1.2, check_interval=16
+        ),
+    )
+    store = make_store(cluster, n_pages=8)
+    writer = BlobKVClient(store, session=cluster.session(cache_bytes=0))
+    seq = publish_prompt(writer, [1, 2, 3, 4], fill=5)
+    reader = BlobKVClient(store, session=cluster.session(cache_bytes=0))
+    addr = seq.page_addr[0]
+    for _ in range(200):
+        reader.fetch_pages([addr])
+    bal = cluster.replica_balancer
+    assert bal is not None
+    assert (bal.promotions or bal.rebalance()) > 0
+    writer.finish(seq)
+    cluster.close()
+
+
+# --------------------------------- GC safety --------------------------------
+def test_gc_honors_directory_pins():
+    cluster = make_cluster()
+    store = make_store(cluster, n_pages=4)
+    client = BlobKVClient(store)
+    seq = publish_prompt(client, [1, 2, 3, 4], fill=8)
+    client.finish(seq)  # only the directory pin protects this version now
+    seq2 = publish_prompt(client, [5, 6, 7, 8], fill=9)
+    latest = cluster.version_manager.latest_published(store.blob_id)
+    cluster.gc(store.blob_id, keep_versions=[latest])
+    # the directory-advertised page survived GC: still resolves AND reads
+    reader = BlobKVClient(store)
+    got, shared, fetches = reader.admit([1, 2, 3, 4])
+    assert shared == 4
+    np.testing.assert_array_equal(
+        reader.fetch_pages([a for _, a in fetches])[0], page_payload(store, 8)
+    )
+    reader.finish(got)
+    client.finish(seq2)
+    cluster.close()
+
+
+# --------------------------- the serving CI gate ----------------------------
+def test_compare_gates_serving_payload():
+    import benchmarks.compare as compare
+
+    old = {"git_rev": "aaa", "rows": [
+        {"mode": "shared", "sessions": 2, "tok_per_s": 1000.0},
+        {"mode": "private", "sessions": 2, "tok_per_s": 500.0},
+    ]}
+    new = {"git_rev": "bbb", "rows": [
+        {"mode": "shared", "sessions": 2, "tok_per_s": 600.0},   # -40%
+        {"mode": "private", "sessions": 2, "tok_per_s": 490.0},  # -2%
+        {"mode": "shared", "sessions": 4, "tok_per_s": 900.0},   # new cell
+    ]}
+    regs = compare.regressions(
+        old, new, 30.0, metric="tok_per_s", count_key="sessions"
+    )
+    assert [key for key, _ in regs] == [("shared", 2)]
+    lines = compare.diff_rows(old, new, metric="tok_per_s", count_key="sessions")
+    assert any(l.startswith("shared,4") and l.endswith("new") for l in lines)
+    assert not compare.regressions(
+        old, new, 50.0, metric="tok_per_s", count_key="sessions"
+    )

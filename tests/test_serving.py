@@ -7,7 +7,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import Cluster
 from repro.models.lm import build_model
+from repro.serving.blob_kv import BlobKVClient, BlobKVStore
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -72,6 +74,72 @@ def test_prefix_cache_shares_pages_and_stays_correct(setup):
     assert done2[1].prefill_skipped_tokens == len(prefix)  # page shared
     assert done[0].tokens == reference_generate(cfg, model, params, pa, 4)
     assert done2[1].tokens == reference_generate(cfg, model, params, pb, 4)
+
+
+def test_partial_page_prefix_reuse_matches_no_sharing(setup):
+    """Prompts ending inside a live donor's partial page are fully shared via
+    a COW fork — and decode exactly like runs that never reused anything (the
+    stale donor positions stay masked until overwritten). The oracle here is
+    a no-reuse engine, not ``reference_generate``: engine and raw-decode
+    padding semantics already differ for non-page-aligned prompts."""
+    cfg, model, params = setup
+    page = [5, 7, 11, 13, 17, 19, 23, 29]  # one full page (T=8)
+    prompt = page + [31, 37, 41]  # ends inside page 1
+    shorter = page + [31, 37]  # a strict prefix of the donor's tail
+    # baselines decoded without any partial-page reuse (donors die between
+    # drains, so only the established full-page sharing path is exercised)
+    base = ServingEngine(cfg, params, max_slots=4, n_pages=64)
+    base.submit(Request(0, prompt, max_new_tokens=4))
+    want_prompt = base.run_until_drained()[0].tokens
+    base.submit(Request(1, shorter, max_new_tokens=4))
+    want_shorter = base.run_until_drained()[1].tokens
+    assert base.alloc.stats["cow_copies"] == 0
+
+    engine = ServingEngine(cfg, params, max_slots=4, n_pages=64)
+    engine.submit(Request(0, prompt, max_new_tokens=4))
+    engine.submit(Request(1, prompt, max_new_tokens=4))  # admitted while 0 lives
+    engine.submit(Request(2, shorter, max_new_tokens=4))
+    done = engine.run_until_drained()
+    assert done[1].prefill_skipped_tokens == len(prompt)
+    assert done[2].prefill_skipped_tokens == len(shorter)
+    assert engine.alloc.stats["cow_copies"] >= 2
+    assert engine.alloc.stats["partial_shared_tokens"] >= 5
+    assert done[0].tokens == want_prompt
+    assert done[1].tokens == want_prompt
+    assert done[2].tokens == want_shorter
+
+
+def test_blob_engine_matches_reference_and_shares_across_engines(setup):
+    """Blob mode: the KV pool lives on a Cluster blob. A single request
+    matches the oracle, and a SECOND engine (own session + device pool)
+    resolves the shared prefix through the cluster directory, fetches the
+    published bytes instead of re-storing them, and still decodes exactly."""
+    cfg, model, params = setup
+    cluster = Cluster(n_data_providers=2, n_metadata_providers=2)
+    store = BlobKVStore.for_kv(
+        cluster, n_pages=64, page_tokens=cfg.kv_page_tokens,
+        n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, dtype=np.dtype("uint16"),  # bf16 payloads
+    )
+    prefix = [5, 7, 11, 13, 17, 19, 23, 29]
+    pa = prefix + [31, 37, 41, 43, 47, 53, 59, 61]
+    pb = prefix + [1, 2, 3, 4, 5, 6, 7, 8]
+    engine_a = ServingEngine(cfg, params, max_slots=2,
+                             kv_client=BlobKVClient(store))
+    engine_a.submit(Request(0, pa, max_new_tokens=4))
+    done_a = engine_a.run_until_drained()
+    assert done_a[0].tokens == reference_generate(cfg, model, params, pa, 4)
+    used = store.used_slots
+    engine_b = ServingEngine(cfg, params, max_slots=2,
+                             kv_client=BlobKVClient(store))
+    engine_b.submit(Request(1, pb, max_new_tokens=4))
+    done_b = engine_b.run_until_drained()
+    assert done_b[1].prefill_skipped_tokens == len(prefix)
+    assert done_b[1].tokens == reference_generate(cfg, model, params, pb, 4)
+    # the shared prefix page was not stored twice
+    assert store.stats["prefix_hits"] >= 1
+    assert store.used_slots <= used + 1  # only B's fresh tail page persists
+    cluster.close()
 
 
 def test_backpressure_pool_exhaustion(setup):

@@ -54,8 +54,8 @@ def test_cow_fork_on_shared_head():
 def test_cow_copy_when_appending_into_shared_partial_page():
     a = PagedKVAllocator(n_pages=64, page_tokens=4)
     seq1, _, _ = a.admit([1, 2, 3, 4, 5, 6])  # page0 full, page1 partial
-    # share page0 only; page1 of seq2 is fresh
-    seq2, shared, _ = a.admit([1, 2, 3, 4, 5, 6])
+    # share page0 only; the diverging tail keeps page1 of seq2 fresh
+    seq2, shared, _ = a.admit([1, 2, 3, 4, 9, 9])
     assert shared == 4
     # seq1's partial head page (page1) has ref 1 -> no copy on append
     assert a.append_token(seq1.seq_id) == []
@@ -66,6 +66,39 @@ def test_cow_copy_when_appending_into_shared_partial_page():
     src, dst = copies[0]
     assert src == snap.pages[1] and dst == a._seqs[seq1.seq_id].pages[1]
     a.release_snapshot(snap)
+
+
+def test_partial_page_prefix_reuse_populates_cow():
+    """admit's third return value (once dead code): a prompt that ENDS inside
+    a page matching a live donor's partial final page comes back with a
+    (src, dst) fork and the whole prompt counted shared."""
+    a = PagedKVAllocator(n_pages=64, page_tokens=4)
+    donor, _, _ = a.admit([1, 2, 3, 4, 5, 6, 7])  # page1 partial: (5, 6, 7)
+    seq2, shared, cow = a.admit([1, 2, 3, 4, 5, 6, 7])  # identical tail
+    assert shared == 7 and len(cow) == 1
+    src, dst = cow[0]
+    assert src == donor.pages[1] and dst == seq2.pages[1]
+    assert dst != src  # a fork, not an alias: appends never hit the donor
+    assert a.stats["cow_copies"] >= 1
+    assert a.stats["partial_shared_tokens"] == 3
+    # a shorter tail that PREFIXES a donor's also forks (stale positions
+    # beyond it are masked by length and overwritten by decode)
+    seq3, shared3, cow3 = a.admit([1, 2, 3, 4, 5, 6])
+    assert shared3 == 6 and len(cow3) == 1
+    # a diverging tail gets no reuse
+    seq4, shared4, cow4 = a.admit([1, 2, 3, 4, 9, 9])
+    assert shared4 == 4 and cow4 == []
+    # a tail that SPANS past the donor page gets no partial reuse either
+    seq5, shared5, cow5 = a.admit([1, 2, 3, 4, 5, 6, 7, 8, 9])
+    assert shared5 == 4 and cow5 == []
+
+
+def test_partial_donor_entry_dies_with_its_page():
+    a = PagedKVAllocator(n_pages=64, page_tokens=4)
+    donor, _, _ = a.admit([1, 2, 3, 4, 5, 6, 7])
+    a.finish(donor.seq_id)  # frees the partial page -> donor entry must die
+    seq2, shared, cow = a.admit([1, 2, 3, 4, 5, 6, 7])
+    assert cow == [] and shared == 4  # only the indexed full page shares
 
 
 def test_finish_releases_pages_and_index_eviction():
