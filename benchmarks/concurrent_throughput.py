@@ -33,6 +33,17 @@ On top of the paper's sweep, the client-side scaling modes:
   aggregate read bandwidth >= 0.5x the healthy cached-read run at 16
   clients, with the ``metadata_retries``/``checksum_failures`` columns
   showing the plane degrading instead of hanging.
+* ``degraded-node`` — the cached-read workload spread round-robin across a
+  4-node :class:`~repro.core.Federation` (one shared substrate, per-node
+  cache tiers under the GC epoch/lease protocol). Mid-window client 0
+  kills one node outright, partitions a second from the GC coordinator,
+  and runs a federated GC pass against the degraded fleet: the pass waits
+  out the unreachable nodes' leases instead of blocking on their acks
+  (``epoch_stalls``), the partitioned node fences its tiers before its
+  next cache serve and reads through uncached (``lease_fences``), and the
+  dead node's clients stall until both nodes rejoin at the 3/4 mark.
+  Acceptance: aggregate read bandwidth >= 0.5x the healthy cached-read run
+  at 16 clients (see ``docs/FAULTS.md``).
 * ``readv`` — each iteration fetches K overlapping segments in ONE vectored
   call: shared pages are deduplicated and each data provider sees one
   aggregated RPC, so ``data_rounds`` collapses vs K separate reads.
@@ -115,10 +126,13 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_sky import CONFIG as SKY
-from repro.core import BalancerConfig, Cluster, PrefetchConfig, Session
+from repro.core import (
+    BalancerConfig, Cluster, Federation, HealthConfig, PrefetchConfig,
+    ProviderFailed, Session,
+)
 
 MODES = ("read", "write", "stream-write", "mixed", "hot-read", "cached-read",
-         "degraded-read", "degraded-metadata", "readv",
+         "degraded-read", "degraded-metadata", "degraded-node", "readv",
          "skew-read-primary", "skew-read",
          "multi-session-private", "multi-session",
          "stream-read", "watch-read")
@@ -160,6 +174,22 @@ DEGRADED_REPLICATION = 2
 #: degrading instead of hanging (see ``docs/FAULTS.md``)
 DEGRADED_META_SHARDS = 8
 DEGRADED_META_REPLICATION = 2
+#: degraded-node topology: the cached-read workload round-robined across a
+#: 4-node federation on one shared replicated substrate. Client 0 kills the
+#: last node and coordinator-partitions node 1 at the window midpoint, runs
+#: a federated GC pass (which waits out the two unreachable leases —
+#: ``epoch_stalls``), probes the partitioned node so its post-expiry fence
+#: is deterministic (``lease_fences``), and rejoins both nodes at the 3/4
+#: mark. A/B against cached-read (same workload, healthy single node):
+#: aggregate >= 0.5x at 16 clients
+DEGRADED_NODES = 4
+#: short lease so the mid-window GC pass waits out the downed nodes in
+#: milliseconds, not the 30 s production default
+DEGRADED_NODE_LEASE_SECONDS = 0.05
+#: keep the killed node in waited-out (lease-expiry) territory rather than
+#: declared-dead: the death path (writer recovery, pin reclaim) is the chaos
+#: tests' subject, the bench measures the lease protocol's bandwidth cost
+DEGRADED_NODE_DEAD_AFTER = 10**6
 
 #: multi-session modes: per-page service time — the provider-side resource a
 #: shared cache tier saves (each page crosses the network once per NODE, not
@@ -205,7 +235,18 @@ WATCH_COMPUTE_SECONDS = 0.4
 STREAM_SHARED_CACHE_BYTES = 512 << 20
 
 
-def _make_cluster(mode: str, n_providers: int, n_clients: int = 1) -> Cluster:
+def _make_cluster(mode: str, n_providers: int, n_clients: int = 1):
+    if mode == "degraded-node":
+        return Federation(
+            n_nodes=DEGRADED_NODES,
+            n_data_providers=DEGRADED_PROVIDERS,
+            n_metadata_providers=n_providers,
+            page_replication=DEGRADED_REPLICATION,
+            max_workers=4 * DEGRADED_PROVIDERS,
+            shared_cache_bytes=0,
+            lease_seconds=DEGRADED_NODE_LEASE_SECONDS,
+            health=HealthConfig(dead_after=DEGRADED_NODE_DEAD_AFTER),
+        )
     if mode == "degraded-read":
         return Cluster(
             n_data_providers=DEGRADED_PROVIDERS,
@@ -267,6 +308,19 @@ def _make_sessions(mode: str, cluster: Cluster, n_clients: int) -> List[Session]
     """Per-client sessions for the multi-session modes; ONE session shared by
     every client thread otherwise (the topology the legacy numbers were
     always measured on)."""
+    if mode == "degraded-node":
+        # the cached-read workload, round-robined across the federation's
+        # nodes: ONE cached session per node shared by that node's clients
+        # (mirroring cached-read's one-session topology — the hot window
+        # warms once per node, not once per client), but the tiers now live
+        # under the GC epoch/lease protocol
+        node_sessions = [
+            node.session(cache_bytes=128 << 20) for node in cluster.nodes
+        ]
+        return [
+            node_sessions[cid % len(node_sessions)]
+            for cid in range(n_clients)
+        ]
     if mode in MULTI_SESSION_MODES:
         # OFF side: a private per-session cache (it never hits — the sweep
         # has no intra-session re-reads, which is exactly the point);
@@ -329,12 +383,22 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
             for _repeat in range(max(repeats, 1)):
                 cluster = _make_cluster(mode, n_providers, n_clients)
                 sessions = _make_sessions(mode, cluster, n_clients)
+                # the federated mode fronts its shared substrate through
+                # node 0 for alloc/prefill; everywhere else home IS the
+                # cluster
+                home = cluster.node(0) if mode == "degraded-node" else cluster
                 # the multi-session sweep window: every session reads each page
                 # exactly once, so only CROSS-session sharing can save traffic
                 multi_window = iters * max(seg_bytes // page_size, 1)
                 # skew, multi-session and write modes run longer below; compute
                 # iteration counts first so window sizes can depend on them
                 if mode in WRITE_MODES:
+                    mode_iters = iters * 4
+                elif mode == "degraded-node":
+                    # long enough that the FIXED fault costs (the lease
+                    # wait-out inside the mid-window GC, the fence probe)
+                    # amortize — the outage stall itself scales with the
+                    # window, so this doesn't dilute the degradation signal
                     mode_iters = iters * 4
                 elif mode.startswith("skew-read"):
                     mode_iters = iters * 2
@@ -362,7 +426,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     blob_bytes = WATCH_FRAME_PAGES * page_size
                 else:
                     blob_bytes = SKY.blob_size
-                blob = cluster.alloc(blob_bytes, page_size)
+                blob = home.alloc(blob_bytes, page_size)
                 # pre-populate the hot window so reads hit real pages; the
                 # cache-demo modes re-read a (smaller) fully-prefilled window.
                 # Read-mode prefill runs through a DEDICATED writer session so
@@ -372,7 +436,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                 # mixed never re-reads the prefill versions).
                 hot = SKY.hot_interval
                 if mode in ("hot-read", "cached-read", "degraded-read",
-                            "degraded-metadata", "readv"):
+                            "degraded-metadata", "degraded-node", "readv"):
                     hot = min(hot, 64 << 20)
                 if mode.startswith("skew-read"):
                     hot = SKEW_WINDOW_PAGES * page_size
@@ -388,12 +452,12 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     or mode in MULTI_SESSION_MODES
                     or mode in STREAM_READ_MODES
                     or mode in ("hot-read", "cached-read", "degraded-read",
-                                "degraded-metadata", "readv")
+                                "degraded-metadata", "degraded-node", "readv")
                 )
                 if mode == "watch-read":
                     pass  # frames are published live by the epoch writer thread
                 elif mode not in WRITE_MODES:
-                    writer = cluster.session(cache_bytes=0)
+                    writer = home.session(cache_bytes=0)
                     prefill = hot if fully_prefilled else min(hot, seg_bytes * n_clients * iters)
                     writer.open(blob).writev(
                         [(off, init[: min(seg_bytes, prefill - off)])
@@ -485,7 +549,8 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                             seg = (i + phase) % mode_iters
                             moved += handle.read(seg * seg_bytes, seg_bytes).data.size
                         elif mode in ("hot-read", "cached-read",
-                                      "degraded-read", "degraded-metadata"):
+                                      "degraded-read", "degraded-metadata",
+                                      "degraded-node"):
                             # detector re-read pattern: each client cycles over a
                             # few half-overlapping windows that also overlap its
                             # neighbours' — repeat pages dominate
@@ -506,9 +571,60 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                                 # (metadata_retries column)
                                 for sid in range(0, DEGRADED_META_SHARDS, 2):
                                     cluster.metadata.fail_shard(sid)
+                            if (mode == "degraded-node" and cid == 0
+                                    and i == mode_iters // 2):
+                                # a quarter of the fleet drops mid-window:
+                                # the last node dies outright (its clients
+                                # stall until rejoin) and node 1 loses only
+                                # its coordinator link. A federated GC pass
+                                # then runs against the degraded fleet — it
+                                # waits out the two unreachable leases
+                                # (epoch_stalls) instead of blocking on
+                                # their acks forever
+                                cluster.apply_node_fault(
+                                    DEGRADED_NODES - 1, "kill"
+                                )
+                                cluster.apply_node_fault(1, "partition")
+                                cluster.gc(
+                                    blob,
+                                    keep_versions=[handle.latest_published()],
+                                )
+                                # the GC pass just waited node 1's lease
+                                # out, so its next read MUST fence (purge
+                                # its tiers — lease_fences) before serving
+                                # and then read through uncached; probe it
+                                # so the fence lands deterministically even
+                                # when no measured client is on node 1
+                                probe = cluster.node(1).session(cache_bytes=0)
+                                try:
+                                    probe.open(blob).read(0, page_size)
+                                finally:
+                                    probe.close()
+                            if (mode == "degraded-node" and cid == 0
+                                    and i == (3 * mode_iters) // 4):
+                                cluster.apply_node_fault(
+                                    DEGRADED_NODES - 1, "recover"
+                                )
+                                cluster.apply_node_fault(1, "recover")
                             span = max(hot - seg_bytes, page_size)
                             off = ((cid * 3 + (i % 4)) * (seg_bytes // 2)) % span
-                            moved += handle.read(off, seg_bytes).data.size
+                            if mode == "degraded-node":
+                                # a client whose node is down idles until
+                                # the chaos client rejoins it (bounded so a
+                                # rejoin bug can't hang the run)
+                                deadline = time.perf_counter() + 60.0
+                                while True:
+                                    try:
+                                        moved += handle.read(
+                                            off, seg_bytes
+                                        ).data.size
+                                        break
+                                    except ProviderFailed:
+                                        if time.perf_counter() > deadline:
+                                            raise
+                                        time.sleep(0.002)
+                            else:
+                                moved += handle.read(off, seg_bytes).data.size
                         elif mode == "readv":
                             # K overlapping segments fetched in one vectored call
                             span = max(hot - 2 * seg_bytes, page_size)
@@ -590,6 +706,11 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     bytes_moved[cid] = moved
 
                 cluster.stats.reset()
+                if mode == "degraded-node":
+                    # cache traffic lands on each node's own stats; the
+                    # substrate + lease counters land on the federation's
+                    for fed_node in cluster.nodes:
+                        fed_node.stats.reset()
                 threads = [threading.Thread(target=client, args=(c,)) for c in range(n_clients)]
                 if writer_thread is not None:
                     writer_thread.start()
@@ -601,7 +722,14 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     writer_thread.join()
                 per_client = [b / t / 1e6 for b, t in zip(bytes_moved, times)]  # MB/s
                 hits, misses = cluster.stats.cache_hits, cluster.stats.cache_misses
-                bal = cluster.replica_balancer
+                data_rounds = cluster.stats.data_rounds
+                if mode == "degraded-node":
+                    # per-node traffic (cache tiers, data rounds) aggregates on
+                    # each node's own stats, not the federation's
+                    hits += sum(n.stats.cache_hits for n in cluster.nodes)
+                    misses += sum(n.stats.cache_misses for n in cluster.nodes)
+                    data_rounds += sum(n.stats.data_rounds for n in cluster.nodes)
+                bal = getattr(cluster, "replica_balancer", None)
                 wbytes = list(cluster.stats.write_bytes_snapshot().values())
                 all_lat = [l for per_client_lat in latencies for l in per_client_lat]
                 f_hits = sum(f[0] for f in first_reads)
@@ -611,7 +739,7 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     per_client_MBps=float(np.mean(per_client)),
                     min_client_MBps=float(np.min(per_client)),
                     aggregate_MBps=float(sum(per_client)),
-                    data_rounds=cluster.stats.data_rounds,
+                    data_rounds=data_rounds,
                     cache_hit_rate=hits / (hits + misses) if hits + misses else 0.0,
                     promotions=bal.promotions if bal is not None else 0,
                     # per-destination write skew (max/mean): 1.0 = perfectly
@@ -636,6 +764,10 @@ def run(n_clients_list=(1, 2, 4, 8, 16), seg_bytes=256 << 10, iters=20,
                     # their showcase; nonzero elsewhere means real trouble)
                     metadata_retries=cluster.stats.metadata_retries,
                     checksum_failures=cluster.stats.checksum_failures,
+                    # federated-GC lease counters (degraded-node is their
+                    # showcase; zero on every standalone-cluster mode)
+                    lease_fences=cluster.stats.lease_fences,
+                    epoch_stalls=cluster.stats.epoch_stalls,
                 )
                 cluster.close()
                 if best is None or row["aggregate_MBps"] >= best["aggregate_MBps"]:
@@ -652,7 +784,7 @@ CSV_HEADER = ("mode,clients,per_client_MBps,min_client_MBps,aggregate_MBps,"
               "data_rounds,cache_hit_rate,promotions,write_skew,"
               "p50_ms,p99_ms,first_read_hit_rate,"
               "retries,replica_fallbacks,degraded_reads,repaired_pages,"
-              "metadata_retries,checksum_failures")
+              "metadata_retries,checksum_failures,lease_fences,epoch_stalls")
 
 
 def to_csv(rows: Sequence[dict]) -> List[str]:
@@ -666,7 +798,8 @@ def to_csv(rows: Sequence[dict]) -> List[str]:
             f"{r.get('p99_ms', 0.0):.1f},{r.get('first_read_hit_rate', 0.0):.2f},"
             f"{r.get('retries', 0)},{r.get('replica_fallbacks', 0)},"
             f"{r.get('degraded_reads', 0)},{r.get('repaired_pages', 0)},"
-            f"{r.get('metadata_retries', 0)},{r.get('checksum_failures', 0)}"
+            f"{r.get('metadata_retries', 0)},{r.get('checksum_failures', 0)},"
+            f"{r.get('lease_fences', 0)},{r.get('epoch_stalls', 0)}"
         )
     return out
 

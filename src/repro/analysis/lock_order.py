@@ -65,6 +65,12 @@ LOCKS = [
     LockSpec("BlobCheckpointer._lock", 0, allow_blocking=True,
              note="serializes save/restore passes; a save holds it across "
                   "full blob writes AND the retention Cluster.gc call"),
+    LockSpec("Federation._gc_lock", 0, allow_blocking=True,
+             note="serializes federated GC passes; held across per-node "
+                  "acks, RetryPolicy backoffs, lease-expiry waits and the "
+                  "home node's Cluster.gc by design. Same level as "
+                  "BlobCheckpointer._lock: a checkpointer must never wrap "
+                  "a federated node (its retention gc would nest the two)"),
     # -- level 1: GC passes ---------------------------------------------------
     LockSpec("Cluster._gc_guard", 1, allow_blocking=True,
              note="serializes GC passes against snapshot creation; the pass "
@@ -73,6 +79,12 @@ LOCKS = [
     LockSpec("ReplicaBalancer._rebalance_lock", 2, allow_blocking=True,
              note="readers try-lock and skip; held across page copies so "
                   "promotions serialize without queueing the read path"),
+    LockSpec("Federation._fence_lock", 2, allow_blocking=True,
+             note="per-node fence/rejoin transitions (one instance per "
+                  "node); held across the node's cache purges (level 5) "
+                  "and the coordinator join (level 3), so it must sit "
+                  "BELOW the coordinator lock. Never nests the repair/"
+                  "rebalance locks of this level"),
     LockSpec("RepairService._lock", 2, allow_blocking=True,
              note="re-replication/scrub passes; held across data-plane "
                   "copies like the rebalance lock. On clusters WITH a "
@@ -94,6 +106,14 @@ LOCKS = [
     LockSpec("MetadataDHT._coalesce_lock", 3),
     LockSpec("MetadataDHT._executor_lock", 3),
     LockSpec("BlobStore._handles_lock", 3),
+    LockSpec("GcEpochCoordinator._lock", 3,
+             note="epoch counter, per-node leases, federated pin tables "
+                  "and node health; no RPC ever runs under it"),
+    LockSpec("GcEpochCoordinator._cv", 3,
+             note="condition ALIASING GcEpochCoordinator._lock (the "
+                  "VersionManager._published_cv pattern): pins wait on it "
+                  "while a GC sweep is in progress; nesting the two names "
+                  "is a self-deadlock"),
     LockSpec("FaultInjector._lock", 3,
              note="guards the chaos harness's op counter and pending "
                   "fault queues; fault ACTIONS (kill/recover/sleep) run "

@@ -530,6 +530,107 @@ def _finalize_shard_failover_vs_publish(ctx) -> None:
                     f"replica {sid} missing {key} after failover repair")
 
 
+def _build_node_death_vs_gc_ack() -> SimpleNamespace:
+    from repro.core.dht import HealthConfig, RetryPolicy
+    from repro.core.federation import Federation
+
+    class _Clock:
+        def __init__(self) -> None:
+            self.t = 0.0
+
+        def __call__(self) -> float:
+            return self.t
+
+        def advance(self, dt: float) -> None:
+            self.t += dt
+
+    clock = _Clock()
+    fed = Federation(
+        n_nodes=2,
+        n_data_providers=2,
+        n_metadata_providers=2,
+        max_workers=2,
+        lease_seconds=5.0,
+        clock=clock,
+        # sleeps (ack backoff, lease wait-out) advance the fake clock, so a
+        # wait-out terminates deterministically inside one atomic step
+        retry_policy=RetryPolicy(max_attempts=1, sleep=clock.advance),
+        # dead_after=2: ONE failed ack leaves the node suspect (the GC pass
+        # waits its lease out); a SECOND failed ack is the death verdict
+        health=HealthConfig(
+            dead_after=2, window_seconds=1e9, clock=clock
+        ),
+    )
+    ctx = SimpleNamespace(cluster=fed, errors=[])
+    ctx.fed = fed
+    ctx.clock = clock
+    ctx.blob_id = fed.nodes[0].alloc(_PAGE * _PAGES, _PAGE)
+    ctx.s0 = fed.nodes[0].session()
+    ctx.s1 = fed.nodes[1].session(cache_bytes=0)  # fills hit node 1's shared tier
+    ctx.h0 = ctx.s0.open(ctx.blob_id)
+    ctx.h1 = ctx.s1.open(ctx.blob_id)
+    ctx.h0.write(_fill(1), 0)  # v1 published before the race
+    ctx.h1.read(0, _PAGE * _PAGES)  # node 1's shared tier holds v1
+    return ctx
+
+
+def _actors_node_death_vs_gc_ack(ctx) -> List[Tuple[str, List[Callable[[], None]]]]:
+    """A federated GC pass needs node 1's ack (purge + rejoin at the new
+    epoch) while node 1 is partitioned from the coordinator, declared dead,
+    or rejoining — in every order. Whatever the interleaving: node 1's reads
+    stay uniform (its data plane works while partitioned), and after any
+    read with a lapsed/reclaimed lease the node is FENCED (or already
+    rejoined at the current epoch) — never serving cached pages past its
+    lease."""
+    fed = ctx.fed
+
+    def partition():
+        fed.apply_node_fault(1, "partition")
+
+    def recover():
+        fed.apply_node_fault(1, "recover")
+
+    def gc():
+        latest = fed.version_manager.latest_published(ctx.blob_id)
+        fed.gc(ctx.blob_id, keep_versions=[latest])
+
+    def write():
+        ctx.h0.write(_fill(2), 0)
+
+    def read():
+        data = ctx.h1.read(0, _PAGE * _PAGES).data
+        _check_uniform(ctx, data, "node-1 read across GC/death race")
+        if not (fed.coordinator.lease_valid(1) or fed.node_fenced(1)):
+            ctx.errors.append(
+                "node 1 served with neither a valid lease nor its fence up"
+            )
+
+    return [
+        ("chaos", [partition, recover]),
+        ("gc", [gc, gc]),
+        ("writer", [write]),
+        ("reader", [read]),
+    ]
+
+
+def _finalize_node_death_vs_gc_ack(ctx) -> None:
+    fed = ctx.fed
+    fed.apply_node_fault(1, "recover")
+    # a rejoined node starts from purged tiers: nothing it cached before the
+    # outage can have survived the GC passes it missed
+    cached = fed.nodes[1].shared_cache.cached_versions(ctx.blob_id)
+    if cached:
+        ctx.errors.append(
+            f"node 1 rejoined with stale cached versions {cached}"
+        )
+    latest = fed.version_manager.latest_published(ctx.blob_id)
+    data = ctx.h1.read(0, _PAGE * _PAGES).data
+    if not (data == _fill(latest)).all():
+        ctx.errors.append(
+            "after rejoin node 1's frontier read is not the latest version"
+        )
+
+
 SCENARIOS: Dict[str, Scenario] = {
     s.name: s
     for s in [
@@ -547,6 +648,10 @@ SCENARIOS: Dict[str, Scenario] = {
                  _build_shard_failover_vs_publish,
                  _actors_shard_failover_vs_publish,
                  finalize=_finalize_shard_failover_vs_publish),
+        Scenario("node_death_vs_gc_ack",
+                 _build_node_death_vs_gc_ack,
+                 _actors_node_death_vs_gc_ack,
+                 finalize=_finalize_node_death_vs_gc_ack),
     ]
 }
 

@@ -27,6 +27,7 @@ from repro.core.dht import (
     page_checksum,
 )
 from repro.core.faults import FaultEvent, FaultInjector, FaultSchedule
+from repro.core.federation import Federation, GcEpochCoordinator
 from repro.core.flat_view import FlatView, ZERO_PAGE, flatten
 from repro.core.page_cache import CacheKey, FetchPlan, PageCache
 from repro.core.page_directory import PageAddress, PageDirectory
@@ -47,7 +48,11 @@ from repro.core.segment_tree import (
     traverse,
     traverse_batch,
 )
-from repro.core.version_manager import JournalEntry, VersionManager
+from repro.core.version_manager import (
+    JournalEntry,
+    VersionAbandoned,
+    VersionManager,
+)
 
 __all__ = [
     "BlobHandle",
@@ -63,6 +68,8 @@ __all__ = [
     "FaultEvent",
     "FaultInjector",
     "FaultSchedule",
+    "Federation",
+    "GcEpochCoordinator",
     "HealthConfig",
     "RepairService",
     "CacheKey",
@@ -96,5 +103,6 @@ __all__ = [
     "traverse",
     "traverse_batch",
     "JournalEntry",
+    "VersionAbandoned",
     "VersionManager",
 ]

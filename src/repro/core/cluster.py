@@ -77,7 +77,7 @@ from repro.core.segment_tree import (
     build_write_tree,
     traverse_batch,
 )
-from repro.core.version_manager import VersionManager
+from repro.core.version_manager import VersionAbandoned, VersionManager
 
 #: Default per-session (private) page-cache budget in bytes; ``cache_bytes=0``
 #: disables the private tier.
@@ -292,18 +292,30 @@ class Cluster:
         health: Optional[HealthConfig] = None,
         metadata_timeout_seconds: Optional[float] = None,
         page_directory_capacity: int = 4096,
+        version_manager: Optional[VersionManager] = None,
+        provider_manager: Optional[ProviderManager] = None,
+        metadata: Optional[MetadataDHT] = None,
     ) -> None:
         #: cluster-wide aggregate traffic (every session records here too)
         self.stats = TrafficStats()
         #: RPC retry/backoff policy, shared by BOTH planes (injectable for
         #: chaos tests); ``health`` likewise configures both health machines
         self.retry_policy = retry_policy or RetryPolicy()
-        self.version_manager = VersionManager()
-        self.provider_manager = ProviderManager(
+        #: federated mode (``Federation``): the three shared-plane actors are
+        #: INJECTED — this cluster is one access node over a substrate it does
+        #: not own, so it must not register providers, wire repair hooks, or
+        #: tear the substrate down on close
+        self._owns_substrate = (
+            version_manager is None
+            and provider_manager is None
+            and metadata is None
+        )
+        self.version_manager = version_manager or VersionManager()
+        self.provider_manager = provider_manager or ProviderManager(
             replication=page_replication, stats=self.stats, health=health
         )
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
-        self.metadata = MetadataDHT(
+        self.metadata = metadata or MetadataDHT(
             n_metadata_providers,
             replication=metadata_replication,
             stats=self.stats,
@@ -321,8 +333,11 @@ class Cluster:
             PageCache(shared_cache_bytes) if shared_cache_bytes else None
         )
         self.page_service_seconds = page_service_seconds
-        for i in range(n_data_providers):
-            self.provider_manager.register(DataProvider(i, page_service_seconds))
+        if self._owns_substrate:
+            for i in range(n_data_providers):
+                self.provider_manager.register(
+                    DataProvider(i, page_service_seconds)
+                )
         self.replica_balancer: Optional[ReplicaBalancer] = (
             ReplicaBalancer(
                 self.provider_manager, self.metadata, self.stats, balancer_config
@@ -335,12 +350,24 @@ class Cluster:
         #: on the aux pool (the hook fires OUTSIDE the manager lock, so the
         #: level-4 ``_aux_lock`` acquisition below it is legal)
         self.repair_service = RepairService(self)
-        self.provider_manager.on_dead = self.repair_service.schedule
-        #: the metadata plane gets the same treatment: a shard death verdict
-        #: queues a repair pass, whose metadata half re-replicates the dead
-        #: replica's node set from survivors once it rejoins
-        self.metadata.on_dead = self.repair_service.schedule
-        self._next_provider_id = n_data_providers
+        if self._owns_substrate:
+            self.provider_manager.on_dead = self.repair_service.schedule
+            #: the metadata plane gets the same treatment: a shard death
+            #: verdict queues a repair pass, whose metadata half re-replicates
+            #: the dead replica's node set from survivors once it rejoins
+            self.metadata.on_dead = self.repair_service.schedule
+            self._next_provider_id = n_data_providers
+        else:
+            # the Federation wires ONE repair service (the home node's) to the
+            # shared substrate's death verdicts — per-node hooks would race
+            # concurrent repair passes over the same providers
+            self._next_provider_id = (
+                max(
+                    (p.provider_id for p in self.provider_manager.providers()),
+                    default=-1,
+                )
+                + 1
+            )
         self._membership_lock = make_lock("Cluster._membership_lock")
         #: registered sessions (GC must purge every private cache tier)
         self._sessions: List["Session"] = []
@@ -374,6 +401,21 @@ class Cluster:
         #: live watch-warmers, stopped on close
         self._warmers: List[WatchWarmer] = []
         self._warmers_lock = make_lock("Cluster._warmers_lock")
+        # -- federation plumbing (set by repro.core.federation.Federation) --
+        #: back-reference when this cluster is one node of a Federation
+        self._federation = None
+        self._node_id: Optional[int] = None
+        #: lease guard: returns True when this node's GC lease is valid (the
+        #: cache tiers may serve); returning False means the node is FENCED —
+        #: the read path falls through to the providers with no cache fills
+        self._lease_guard: Optional[Callable[[], bool]] = None
+        #: node gate: raises ``ProviderFailed`` when the node itself is down
+        #: (killed/wedged by the chaos harness) — data ops fail at the door
+        self._node_gate: Optional[Callable[[], None]] = None
+        #: snapshot-pin forwarding to the federation's GC coordinator (pins
+        #: must be visible to GC passes initiated from ANY node)
+        self._pin_sink: Optional[Callable[[int, int], None]] = None
+        self._unpin_sink: Optional[Callable[[int, int], None]] = None
 
     # -- sessions ------------------------------------------------------------
     def session(
@@ -476,6 +518,14 @@ class Cluster:
     def pin_version(self, blob_id: int, version: int) -> None:
         if version == ZERO_VERSION:
             return  # the implicit zero version has nothing to collect
+        sink = self._pin_sink
+        if sink is not None:
+            # federated: register the pin at the GC coordinator FIRST — if the
+            # node is partitioned from the coordinator this raises, and
+            # refusing the pin is the safe failure (a locally-recorded pin the
+            # coordinator cannot see would not protect the version from a GC
+            # initiated on another node)
+            sink(blob_id, version)
         with self._pins_lock:
             blob_pins = self._pins.setdefault(blob_id, {})
             blob_pins[version] = blob_pins.get(version, 0) + 1
@@ -490,10 +540,28 @@ class Cluster:
                 del blob_pins[version]
             if not blob_pins:
                 del self._pins[blob_id]
+        sink = self._unpin_sink
+        if sink is not None:
+            try:  # best-effort: a dead node's pins are reclaimed with its lease
+                sink(blob_id, version)
+            except ProviderFailed:
+                pass
 
     def pinned_versions(self, blob_id: int) -> Set[int]:
         with self._pins_lock:
             return set(self._pins.get(blob_id, ()))
+
+    def local_pins(self) -> Dict[Tuple[int, int], int]:
+        """Snapshot of every live snapshot pin on this node, keyed
+        ``(blob_id, version)`` — the rejoin-time resync payload for the
+        federated GC coordinator (unpins issued while the node was
+        unreachable never made it there)."""
+        with self._pins_lock:
+            return {
+                (blob_id, version): count
+                for blob_id, blob_pins in self._pins.items()
+                for version, count in blob_pins.items()
+            }
 
     def pin_published(self, blob_id: int, version: Optional[int] = None) -> int:
         """Validate ``version`` against the publish frontier and snapshot-pin
@@ -509,8 +577,42 @@ class Cluster:
             self.pin_version(blob_id, resolved)
         return resolved
 
+    # -- fencing (federated mode) ----------------------------------------------
+    def caches_servable(self) -> bool:
+        """True when the cache tiers may serve frontier-validated reads.
+
+        Standalone clusters always serve. A federated node consults its lease
+        guard: an expired lease means a remote ``Federation.gc`` may already
+        have reclaimed versions this node's tiers still hold, so the node is
+        *fenced* — reads fall through to the providers (always correct: GC
+        never collects a version another node still needs) until the node
+        rejoins at the current epoch."""
+        guard = self._lease_guard
+        return True if guard is None else guard()
+
+    def fence_caches(self) -> None:
+        """Drop every cache tier on this node (shared + all session privates).
+        Called when the node's lease lapses or it rejoins an advanced GC
+        epoch: anything cached may be stale relative to reclaims it never
+        acked, so the conservative purge is everything."""
+        if self.shared_cache is not None:
+            self.shared_cache.clear()
+        for sess in self.sessions():
+            if sess.cache is not None:
+                sess.cache.clear()
+
+    def _check_node_up(self) -> None:
+        gate = self._node_gate
+        if gate is not None:
+            gate()
+
     # -- GC (paper future work) ----------------------------------------------
-    def gc(self, blob_id: int, keep_versions: Sequence[int]) -> Tuple[int, int]:
+    def gc(
+        self,
+        blob_id: int,
+        keep_versions: Sequence[int],
+        _local: bool = False,
+    ) -> Tuple[int, int]:
         """Drop all tree nodes / pages unreachable from ``keep_versions``
         (plus every snapshot-pinned version — a live :class:`Snapshot` keeps
         its version readable no matter what the GC caller asks for).
@@ -524,16 +626,35 @@ class Cluster:
         protocol before remote nodes' caches can be trusted). Promotion
         passes are paused for the duration, and snapshot creation serializes
         against the pass (``_gc_guard``), so a pin can never land mid-sweep
-        and lose its version. Returns (nodes_freed, pages_freed)."""
+        and lose its version. Returns (nodes_freed, pages_freed).
+
+        On a federated node this delegates to ``Federation.gc`` — versions
+        are reclaimed only under the epoch/lease protocol, after every live
+        node acked the purge or its lease expired (``_local=True`` is the
+        federation's internal re-entry for the home node's storage sweep)."""
+        fed = self._federation
+        if fed is not None and not _local:
+            return fed.gc(blob_id, keep_versions)
         with self._gc_guard:
             keep = set(keep_versions) | self.pinned_versions(blob_id)
-            if self.replica_balancer is not None:
-                # repair_service aliases the balancer's _rebalance_lock, so
-                # pausing the balancer excludes repair passes too
-                with self.replica_balancer.paused():
+            if fed is not None:
+                # the coordinator's sweep window opens INSIDE this node's
+                # gc guard: coordinator pins are snapshotted here, and pin
+                # requests from other nodes block until the sweep closes —
+                # the federated analog of the single-node pin linearization
+                # (pinners on THIS node block on the gc guard itself)
+                keep |= fed.coordinator.begin_sweep(blob_id)
+            try:
+                if self.replica_balancer is not None:
+                    # repair_service aliases the balancer's _rebalance_lock,
+                    # so pausing the balancer excludes repair passes too
+                    with self.replica_balancer.paused():
+                        return self._gc_locked(blob_id, keep)
+                with self.repair_service.paused():
                     return self._gc_locked(blob_id, keep)
-            with self.repair_service.paused():
-                return self._gc_locked(blob_id, keep)
+            finally:
+                if fed is not None:
+                    fed.coordinator.end_sweep()
 
     def _gc_locked(self, blob_id: int, keep_versions: Set[int]) -> Tuple[int, int]:
         vm = self.version_manager
@@ -627,7 +748,8 @@ class Cluster:
             aux.shutdown(wait=True)
         for sess in self.sessions():
             sess.close()
-        self.metadata.close()
+        if self._owns_substrate:
+            self.metadata.close()  # federated nodes: the Federation owns it
         self._pool.shutdown(wait=True)
 
     def __enter__(self) -> "Cluster":
@@ -689,6 +811,11 @@ class Session:
         self._writer_pool_lock = make_lock("Session._writer_pool_lock")
         self._async_lock = make_lock("Session._async_lock")
         self._async_writes: List[Future] = []
+        #: assigned-but-unreported versions per blob (guarded by
+        #: ``_async_lock``): a node death mid-write leaves these wedging
+        #: in-order publication, and the repair service's writer-recovery
+        #: path (``RepairService.recover_writers``) abandons them
+        self._inflight_versions: Dict[int, Set[int]] = {}
         self._pool = cluster._pool
         # per-session stream, DISTINCT per session: N sessions seeded alike
         # would sample identical replica pairs in lockstep and re-herd the
@@ -747,6 +874,7 @@ class Session:
         the zero-copy buffer-surrender contract). ``coalesce_meta`` routes
         the node store through the DHT's group-commit path so concurrent
         small writes (the ``write_async`` window) share one shard round."""
+        self.cluster._check_node_up()
         vm = self.cluster.version_manager
         total_pages, page_size = vm.blob_info(blob_id)
         sync = self.sync_write
@@ -852,6 +980,10 @@ class Session:
             #     the pages are still in flight
             assigned = vm.assign_versions(blob_id, spans)
             versions = [v for v, _ in assigned]
+            with self._async_lock:
+                self._inflight_versions.setdefault(blob_id, set()).update(
+                    versions
+                )
 
             # (4) weave every patch's tree while the data puts are still in
             #     flight, then LAUNCH one aggregated node put per shard
@@ -903,6 +1035,17 @@ class Session:
 
             # (5) report success (one lock for the batch) → in-order publish
             vm.report_successes(blob_id, versions)
+            self._untrack_inflight(blob_id, versions)
+        except VersionAbandoned:
+            # writer recovery (a federated node-death verdict) withdrew
+            # these versions mid-flight and owns their wreckage — abandon
+            # again would be a no-op, and cleaning up here would double-
+            # release what the recovery scrub already released. Just
+            # quiesce the in-flight puts and surface the failure.
+            for f in data_futures + meta_futures:
+                f.exception()
+            self._untrack_inflight(blob_id, versions)
+            raise
         except BaseException:
             # NOTE: frozen sources stay frozen — a concurrent write may
             # already hold zero-copy views of the same root, so restoring
@@ -912,6 +1055,7 @@ class Session:
                 blob_id, versions, placements, by_provider, node_keys,
                 data_futures, meta_futures,
             )
+            self._untrack_inflight(blob_id, versions)
             raise
 
         # write-through into the PRIVATE tier only: the just-stored pages are
@@ -1095,6 +1239,22 @@ class Session:
             [ref for primary, replicas in placements for ref in (primary,) + replicas]
         )
 
+    def _untrack_inflight(self, blob_id: int, versions: Sequence[int]) -> None:
+        with self._async_lock:
+            mine = self._inflight_versions.get(blob_id)
+            if mine is None:
+                return
+            mine.difference_update(versions)
+            if not mine:
+                del self._inflight_versions[blob_id]
+
+    def inflight_versions(self) -> Dict[int, Set[int]]:
+        """Snapshot of this session's assigned-but-unreported versions —
+        what writer recovery must abandon when the session's node dies
+        mid-write (in-order publication would otherwise wedge forever)."""
+        with self._async_lock:
+            return {b: set(vs) for b, vs in self._inflight_versions.items()}
+
     # -- asynchronous write streaming ------------------------------------------
     def _write_async(
         self, blob_id: int, buffer: np.ndarray, offset_bytes: int
@@ -1215,6 +1375,7 @@ class Session:
         pool — data transfer overlaps the remaining metadata rounds, with
         ONE join before assembly. ``sync_read=True`` keeps the phased
         baseline: the full traversal completes before the first page fetch."""
+        self.cluster._check_node_up()
         # clamp segments; collect the deduplicated union of needed pages
         total_bytes = total_pages * page_size
         clamped: List[Tuple[int, int]] = []
@@ -1253,8 +1414,16 @@ class Session:
         # version was already validated against the publish frontier, so
         # everything that enters the shared tier here is published data.
         pages: Dict[int, Optional[np.ndarray]] = {}
-        private = self.cache
-        shared = self.cluster.shared_cache
+        if self.cluster.caches_servable():
+            private = self.cache
+            shared = self.cluster.shared_cache
+        else:
+            # FENCED (federated lease lapsed): no cache tier may serve or be
+            # filled — the whole read goes through to the providers, which is
+            # always correct because federated GC never reclaims a version a
+            # live node still needs
+            private = None
+            shared = None
         flight_cache = shared if shared is not None else private
         owned: List[int] = []
         waits: Dict[Tuple[int, int, int], object] = {}
@@ -1485,6 +1654,8 @@ class Session:
         prefetch miss must not distort any session's demand hit rate), and
         every owned key is fulfilled or aborted even on failure, so demand
         readers waiting as followers never hang. Returns pages filled."""
+        if not self.cluster.caches_servable():
+            return 0  # fenced node: background fills must not repopulate
         cache = (
             self.cluster.shared_cache
             if self.cluster.shared_cache is not None
@@ -1883,11 +2054,20 @@ class VersionWatch:
             remaining: Optional[float] = None
             if deadline is not None:
                 remaining = max(0.0, deadline - time.monotonic())
-            if not self._vm.wait_published(self.blob_id, target, remaining):
-                return None
+            try:
+                # fail_on_withdrawn=False: an erased version number may be
+                # reissued to the next writer, and the watch must deliver it
+                # then — only aborted holes (never readable) raise, and those
+                # are stepped over without delivery
+                if not self._vm.wait_published(
+                    self.blob_id, target, remaining, fail_on_withdrawn=False
+                ):
+                    return None
+            except VersionAbandoned:
+                self.last_delivered = target
+                continue
             self.last_delivered = target
-            if not self._vm.is_aborted(self.blob_id, target):
-                return target
+            return target
 
     def drain(self) -> List[int]:
         """Every already-published undelivered version, without blocking."""

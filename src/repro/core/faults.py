@@ -1,4 +1,4 @@
-"""Deterministic chaos harness: seeded fault schedules for both planes.
+"""Deterministic chaos harness: seeded fault schedules for all three planes.
 
 The self-healing machinery (health states, retry/backoff, mid-flight write
 re-placement, replica-fallback reads, background repair) is only as
@@ -16,6 +16,12 @@ those failures *deterministically*:
   (``ProviderManager.fail_provider`` / ``MetadataDHT.fail_shard``) —
   in-flight requests observe the flip exactly as a real crash: mid-batch,
   under live traffic. Drops fail one single RPC; delays stall one RPC.
+* A third, **node plane** (``target="node"``) drives whole federation
+  nodes on the same shared op clock: ``kill`` / ``wedge`` down a node,
+  ``partition`` cuts only its GC-coordinator RPCs (data plane intact — the
+  lease-fencing story), ``recover`` rejoins it at the current epoch. Node
+  events need a :class:`~repro.core.federation.Federation` as the
+  injector's cluster.
 
 Determinism caveat, stated honestly: the *schedule* is deterministic, but
 which concurrent client's RPC crosses the op threshold depends on thread
@@ -47,10 +53,18 @@ KILL = "kill"  #: flip the provider's failed flag (stays down until recover)
 RECOVER = "recover"  #: clear the flag + health record (rejoin announcement)
 DROP = "drop"  #: fail exactly one subsequent RPC at the provider
 DELAY = "delay"  #: stall exactly one subsequent RPC by ``param`` seconds
+#: node-plane only: cut the node's GC-coordinator RPCs, data plane intact —
+#: exercises the lease-fencing story rather than plain unavailability
+PARTITION = "partition"
+#: node-plane only: the node hangs — every data op raises, process "alive"
+WEDGE = "wedge"
 
 #: fault targets — which plane's RPCs the event hits
 DATA = "data"  #: ``provider_id`` names a data provider
 METADATA = "metadata"  #: ``provider_id`` names a metadata shard
+#: ``provider_id`` names a federation node (requires a
+#: :class:`~repro.core.federation.Federation` as the injector's cluster)
+NODE = "node"
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -108,6 +122,19 @@ class FaultSchedule:
             op += rng.randint(min_gap, max_gap)
             roll = rng.random()
             alive = [p for p in range(n_providers) if p not in dead]
+            if target == NODE:
+                # node plane: kill / partition / wedge / rejoin — no
+                # one-shot drops/delays (those belong to the RPC planes)
+                if dead and roll < 0.4:
+                    pid = rng.choice(sorted(dead))
+                    dead.discard(pid)
+                    events.append(FaultEvent(op, RECOVER, pid, target=NODE))
+                elif len(dead) < max_dead and alive:
+                    pid = rng.choice(alive)
+                    dead.add(pid)
+                    action = (KILL, PARTITION, WEDGE)[rng.randint(0, 2)]
+                    events.append(FaultEvent(op, action, pid, target=NODE))
+                continue
             if dead and roll < 0.25:
                 pid = rng.choice(sorted(dead))
                 dead.discard(pid)
@@ -214,6 +241,8 @@ class FaultInjector:
                 self._kill(event)
             elif event.action == RECOVER:
                 self._recover(event)
+            elif event.action in (PARTITION, WEDGE):
+                self._node_fault(event)
             elif event.action == DROP:
                 with self._lock:
                     key = (event.target, event.provider_id)
@@ -231,16 +260,33 @@ class FaultInjector:
             self.fired.append(event)
 
     def _kill(self, event: FaultEvent) -> None:
-        if event.target == METADATA:
+        if event.target == NODE:
+            self._node_fault(event)
+        elif event.target == METADATA:
             self.cluster.metadata.fail_shard(event.provider_id)
         else:
             self.cluster.provider_manager.fail_provider(event.provider_id)
 
     def _recover(self, event: FaultEvent) -> None:
-        if event.target == METADATA:
+        if event.target == NODE:
+            self._node_fault(event)
+        elif event.target == METADATA:
             self.cluster.metadata.recover_shard(event.provider_id)
         else:
             self.cluster.provider_manager.recover_provider(event.provider_id)
+
+    def _node_fault(self, event: FaultEvent) -> None:
+        """Node-plane dispatch: the injector's ``cluster`` must be a
+        :class:`~repro.core.federation.Federation` (it quacks like a cluster
+        for the RPC planes — ``provider_manager`` + ``metadata`` — and adds
+        ``apply_node_fault`` for this one)."""
+        apply = getattr(self.cluster, "apply_node_fault", None)
+        if apply is None:
+            raise ValueError(
+                "node-plane fault events require a Federation, "
+                f"got {type(self.cluster).__name__}"
+            )
+        apply(event.provider_id, event.action)
 
     # -- campaign control -----------------------------------------------------
     def drain(self) -> None:
@@ -252,7 +298,7 @@ class FaultInjector:
             self._drops.clear()
             self._delays.clear()
         for event in pending:
-            if event.action in (KILL, RECOVER):
+            if event.action in (KILL, RECOVER, PARTITION, WEDGE):
                 self._apply(event)
 
     def ops_seen(self) -> int:

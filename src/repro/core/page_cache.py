@@ -51,14 +51,22 @@ ZERO_PAGE_CHARGE = 64
 
 
 class _Flight:
-    """An in-flight fetch: leader fulfills/aborts, followers wait."""
+    """An in-flight fetch: leader fulfills/aborts, followers wait.
 
-    __slots__ = ("event", "page", "error")
+    ``gen`` stamps the cache generation the flight was planned under: a
+    purge (:meth:`PageCache.clear` / :meth:`PageCache.drop_versions`)
+    advances the generation, so a fill that was already in flight when GC
+    purged its version wakes its waiters but is NOT inserted — without this,
+    the stale insert would silently resurrect a collected version in the
+    cache the purge just scrubbed."""
 
-    def __init__(self) -> None:
+    __slots__ = ("event", "page", "error", "gen")
+
+    def __init__(self, gen: int = 0) -> None:
         self.event = threading.Event()
         self.page: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
+        self.gen = gen
 
 
 @dataclasses.dataclass
@@ -87,6 +95,9 @@ class PageCache:
         self._inflight: Dict[CacheKey, _Flight] = {}
         self._used_bytes = 0
         self.evictions = 0
+        #: purge generation — bumped by clear()/drop_versions() so in-flight
+        #: fills planned before a purge cannot re-insert after it
+        self._gen = 0
 
     # -- bulk lookup (the readv path) ------------------------------------------
     def plan(self, keys: Sequence[CacheKey], record: bool = True) -> FetchPlan:
@@ -118,7 +129,7 @@ class PageCache:
                 if flight is not None:
                     waits[key] = flight
                 else:
-                    self._inflight[key] = _Flight()
+                    self._inflight[key] = _Flight(self._gen)
                     owned.append(key)
                     owned_set.add(key)
         if record:
@@ -134,8 +145,15 @@ class PageCache:
         page = page.view()
         page.flags.writeable = False  # cached pages are immutable
         with self._lock:
-            self._insert(key, page, page.nbytes if charge is None else charge)
             flight = self._inflight.pop(key, None)
+            # a fill planned before a purge must not re-insert after it: the
+            # waiters still get their page (they validated the version before
+            # the purge, like any read already in progress at GC time), but
+            # the cache stays scrubbed
+            if flight is None or flight.gen == self._gen:
+                self._insert(
+                    key, page, page.nbytes if charge is None else charge
+                )
         if flight is not None:
             flight.page = page
             flight.event.set()
@@ -238,6 +256,9 @@ class PageCache:
         backing pages GC never touches. Returns the number of pages
         dropped."""
         with self._lock:
+            # invalidate in-flight fills too: a leader that planned a doomed
+            # version's page before this purge may fulfill after it
+            self._gen += 1
             doomed = [
                 k
                 for k in self._lru
@@ -251,5 +272,6 @@ class PageCache:
 
     def clear(self) -> None:
         with self._lock:
+            self._gen += 1  # fence in-flight fills out of the emptied cache
             self._lru.clear()
             self._used_bytes = 0

@@ -289,6 +289,27 @@ class RepairService:
             return 0
         return metadata.restore_replication(covered)
 
+    # -- writer recovery (dead node) -----------------------------------------
+    def recover_writers(self, sessions) -> int:
+        """Scrub after a *node* death (federated mode): every session of the
+        dead node may hold assigned-but-unreported versions that would wedge
+        in-order publication forever. Abandon them (erase or hole, per
+        :meth:`VersionManager.abandon`), then scrub the holes' wreckage so
+        the storage space comes back. Idempotent — versions the writer
+        already aborted itself are skipped by ``abandon``. Returns the
+        number of versions abandoned."""
+        vm = self.cluster.version_manager
+        doomed: Dict[int, Set[int]] = {}
+        for sess in sessions:
+            for blob_id, versions in sess.inflight_versions().items():
+                doomed.setdefault(blob_id, set()).update(versions)
+        abandoned = 0
+        for blob_id, versions in doomed.items():
+            vm.abandon(blob_id, sorted(versions))
+            abandoned += len(versions)
+            self.scrub(blob_id)
+        return abandoned
+
     # -- metadata scrub (writer recovery) ------------------------------------
     def scrub(self, blob_id: int) -> int:
         """Scrub one blob's abandoned-write wreckage; see module docstring.

@@ -58,9 +58,10 @@ class TreeNode:
     """An immutable metadata node.
 
     Leaves (``size == 1``) carry ``page`` (+ replicas) and, since the
-    metadata-fault PR, an end-to-end page ``checksum`` (CRC32 of the page
-    bytes, computed at ``writev`` freeze time and verified on every provider
-    fetch; ``None`` for pre-checksum nodes and inner nodes). The sanctioned
+    metadata-fault PR, an end-to-end page ``checksum``
+    (:func:`repro.core.dht.page_checksum` of the page bytes, computed at
+    ``writev`` freeze time and verified on every provider fetch; ``None``
+    for pre-checksum nodes and inner nodes). The sanctioned
     leaf rewrites (balancer promotion, repair re-placement) go through
     ``dataclasses.replace`` and change only placement fields, so the
     checksum follows the page data it attests to.

@@ -32,6 +32,13 @@ from repro.analysis.lockwatch import make_condition, make_lock
 from repro.core.segment_tree import BorderLink, ZERO_VERSION, compute_border_links
 
 
+class VersionAbandoned(ValueError):
+    """The awaited version was withdrawn by a failed writer — it will never
+    publish as written. Raised by :meth:`VersionManager.wait_published` so a
+    waiter fails fast the moment :meth:`VersionManager.abandon` runs, instead
+    of blocking for its full timeout on a version that cannot arrive."""
+
+
 @dataclasses.dataclass
 class JournalEntry:
     op: str  # "alloc" | "assign" | "complete" | "abandon"
@@ -62,6 +69,12 @@ class _BlobState:
     #: manager lock — read paths grab it lock-free to decide whether the
     #: aborted-link redirect machinery needs to engage at all
     aborted_view: frozenset = frozenset()
+    #: versions fully *erased* by abandon (they were the latest assignment, so
+    #: interval history rolled back) and not yet reassigned to a new writer.
+    #: Publication can never reach them until reassignment, so waiters treat
+    #: them exactly like aborted holes and fail fast; ``assign_versions``
+    #: clears a number from here the moment a new writer takes it.
+    withdrawn: set = dataclasses.field(default_factory=set)
     #: per-page latest assigned version, for O(range-max) border queries
     page_versions: Optional[np.ndarray] = None
 
@@ -145,6 +158,7 @@ class VersionManager:
             out: List[Tuple[int, List[BorderLink]]] = []
             for offset, size in spans:
                 version = st.assigned + 1
+                st.withdrawn.discard(version)  # the number has a writer again
                 links = compute_border_links(
                     st.total_pages, offset, size, version_of_segment
                 )
@@ -170,6 +184,19 @@ class VersionManager:
         byte-compatible with the single-version API)."""
         with self._lock:
             st = self._blobs[blob_id]
+            # writer-recovery race: if a death verdict abandoned these
+            # versions while their (actually live, e.g. partitioned) writer
+            # was mid-flight, the write MUST surface as a failure — marking
+            # an aborted hole "complete" would silently ack a write that
+            # will never publish
+            stale = sorted(
+                v for v in versions if v in st.aborted or v in st.withdrawn
+            )
+            if stale:
+                raise VersionAbandoned(
+                    f"versions {stale} of blob {blob_id} were abandoned "
+                    "by writer recovery before their writer reported"
+                )
             for version in versions:
                 st.completed.add(version)
                 self.journal.append(JournalEntry("complete", blob_id, version))
@@ -236,6 +263,7 @@ class VersionManager:
                 if v == st.assigned:
                     offset, size = st.intervals.pop(v)
                     st.assigned -= 1
+                    st.withdrawn.add(v)
                     pv[offset : offset + size] = rolled_back(offset, size)
                 else:
                     st.aborted.add(v)
@@ -360,12 +388,45 @@ class VersionManager:
                     best = w
             return best
 
-    def wait_published(self, blob_id: int, version: int, timeout: Optional[float] = None) -> bool:
-        """Block until ``version`` publishes (liveness helper for tests)."""
+    def wait_published(
+        self,
+        blob_id: int,
+        version: int,
+        timeout: Optional[float] = None,
+        *,
+        fail_on_withdrawn: bool = True,
+    ) -> bool:
+        """Block until ``version`` publishes; ``False`` on timeout.
+
+        Raises :class:`VersionAbandoned` when ``version`` was withdrawn by a
+        failed writer — whether it became an aborted hole or was erased
+        outright. :meth:`abandon` notifies this condition, so a waiter whose
+        version is abandoned *mid-wait* fails fast instead of burning its
+        whole timeout on a version that can never arrive as written.
+
+        ``fail_on_withdrawn=False`` is for subscription waiters
+        (:class:`~repro.core.cluster.VersionWatch`): an *erased* version
+        number may be reissued to the next writer, so a watch keeps waiting
+        for the number to publish under its new owner — only aborted holes
+        (which can never publish) raise."""
+        st = self._blobs[blob_id]
+
+        def resolved() -> bool:
+            if st.published >= version or version in st.aborted:
+                return True
+            return fail_on_withdrawn and version in st.withdrawn
+
         with self._published_cv:
-            return self._published_cv.wait_for(
-                lambda: self._blobs[blob_id].published >= version, timeout=timeout
-            )
+            if not self._published_cv.wait_for(resolved, timeout=timeout):
+                return False
+            if version in st.aborted or (
+                fail_on_withdrawn and version in st.withdrawn
+            ):
+                raise VersionAbandoned(
+                    f"version {version} of blob {blob_id} was abandoned by a "
+                    f"failed writer"
+                )
+            return True
 
     def interval_of(self, blob_id: int, version: int) -> Tuple[int, int]:
         with self._lock:

@@ -30,7 +30,8 @@ from repro.core import (
     VersionManager,
     page_checksum,
 )
-from repro.core.faults import DELAY, DROP, KILL, METADATA, RECOVER
+from repro.core import Federation
+from repro.core.faults import DELAY, DROP, KILL, METADATA, NODE, RECOVER
 
 PAGE = 256
 
@@ -173,13 +174,28 @@ def test_unknown_provider_ids_raise_clear_keyerror():
 
 def test_retry_policy_deterministic_and_bounded():
     a = RetryPolicy(seed=7)
-    b = RetryPolicy(seed=7)
     delays = [a.delay(k) for k in range(5)]
-    assert delays == [b.delay(k) for k in range(5)]  # replayable
+    # replayable: an instance's delay stream is a pure function of
+    # (seed, nonce, attempt) — pin the nonce to replay another instance's
+    # exact stream (e.g. when reproducing a logged chaos run)
+    replay = RetryPolicy(seed=7, nonce=a.nonce)
+    assert delays == [replay.delay(k) for k in range(5)]
     assert delays[0] < delays[1] < delays[2]  # exponential growth
     for k, d in enumerate(delays):
         assert d <= a.max_delay_seconds * (1 + a.jitter)
-    assert RetryPolicy(seed=8).delay(1) != a.delay(1)  # jitter is seeded
+    assert RetryPolicy(seed=8, nonce=a.nonce).delay(1) != a.delay(1)
+
+
+def test_retry_policy_instances_desynchronize():
+    """Satellite bugfix: two same-seed policies used to produce IDENTICAL
+    jitter streams, so every concurrent client backing off from the same
+    hot provider retried in lockstep — synchronized retry storms, exactly
+    what jitter exists to prevent. Each instance now mixes a per-instance
+    nonce into the stream, so concurrent policies diverge."""
+    a = RetryPolicy(seed=7)
+    b = RetryPolicy(seed=7)
+    assert a.nonce != b.nonce
+    assert [a.delay(k) for k in range(5)] != [b.delay(k) for k in range(5)]
 
 
 def test_put_batch_retries_transient_failure_then_succeeds():
@@ -762,6 +778,29 @@ def test_mid_writev_shard_kill_write_completes_and_repairs():
 # --------------------------- page integrity (checksums) ------------------------
 
 
+def test_page_checksum_detects_corruption():
+    # the checksum is a position-weighted word sum (it replaced zlib.crc32
+    # on the fetch hot path): deterministic across buffer types, catches
+    # single-byte flips anywhere, catches word swaps (pure sums would not),
+    # and handles non-word-aligned tails
+    rng = np.random.default_rng(7)
+    page = rng.integers(0, 256, 4 * PAGE, dtype=np.uint8)
+    base = page_checksum(page)
+    assert base == page_checksum(page.copy())
+    assert base == page_checksum(page.tobytes())
+    for i in (0, 1, page.size // 2, page.size - 1):
+        flipped = page.copy()
+        flipped[i] ^= 0x01
+        assert page_checksum(flipped) != base
+    swapped = page.copy()
+    words = swapped.view(np.uint64)
+    words[0], words[3] = words[3].copy(), words[0].copy()
+    assert page_checksum(swapped) != base
+    tail = page[:37]
+    assert page_checksum(tail) == page_checksum(tail.tobytes())
+    assert page_checksum(tail) != page_checksum(page[:36])
+
+
 def test_leaf_checksums_computed_at_freeze_time():
     cluster = Cluster(n_data_providers=2, shared_cache_bytes=0)
     sess = cluster.session(cache_bytes=0)
@@ -1079,3 +1118,147 @@ def test_chaos_mixed_traffic_zero_published_data_loss(seed):
             assert not provider.failed
             assert provider.has_page(page_key)
     cluster.close()
+
+
+# ------------------------------ node-plane chaos campaign ----------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_node_faults_zero_published_data_loss(seed):
+    """THE federated acceptance chaos test: 4 nodes x 16 sessions of mixed
+    traffic over one shared substrate while a seeded node-plane schedule
+    kills / partitions / wedges whole nodes and a concurrent GC thread runs
+    federated epoch/lease passes. Invariants (interleaving-independent):
+    zero published-data loss for versions GC was told to keep, a monotone
+    publish frontier on every node, and the lease invariant — after the
+    final pass no node's cache tier holds a collected version."""
+    n_nodes, writers_per_node, readers_per_node = 4, 2, 2
+    fed = Federation(
+        n_nodes=n_nodes,
+        n_data_providers=4, page_replication=2,
+        n_metadata_providers=4, metadata_replication=2,
+        lease_seconds=0.05,
+        retry_policy=RetryPolicy(max_attempts=2, base_delay_seconds=0.001,
+                                 max_delay_seconds=0.004),
+        health=HealthConfig(dead_after=2, window_seconds=60.0),
+    )
+    sessions = [
+        [fed.nodes[n].session() for _ in range(writers_per_node + readers_per_node)]
+        for n in range(n_nodes)
+    ]
+    assert sum(len(s) for s in sessions) == 16
+    blob = sessions[0][0].create(64 * PAGE, PAGE).blob_id
+
+    schedule = FaultSchedule.generate(
+        seed=seed, n_providers=n_nodes, n_events=10, max_dead=2,
+        min_gap=5, max_gap=30, target=NODE,
+    )
+    injector = FaultInjector(fed, schedule)
+    injector.attach()
+
+    published = []  # (version, region, value) oracle, appended post-ack only
+    published_lock = threading.Lock()
+    errors = []
+    gc_floors = []  # keep-version of each mid-campaign GC pass
+    stop_gc = threading.Event()
+    n_rounds = 6
+
+    def writer(node_i, slot, sess):
+        wid = node_i * writers_per_node + slot
+        handle = sess.open(blob)
+        region = wid * 8  # each writer owns its 8-page region
+        for r in range(n_rounds):
+            value = (wid * 31 + r) % 251 + 1
+            try:
+                v = handle.write(np.full(8 * PAGE, value, np.uint8),
+                                 region * PAGE)
+            except (ProviderFailed, ValueError):
+                continue  # node down / writer recovered: never acked
+            with published_lock:
+                published.append((v, region, value))
+
+    def reader(node_i, sess):
+        handle = sess.open(blob)
+        last = 0
+        for _ in range(20):
+            v = handle.latest_published()
+            assert v >= last, "publish frontier must be monotone"
+            last = v
+            try:
+                snap = handle.at(None)  # federated pin: GC must honor it
+            except (ProviderFailed, ValueError):
+                threading.Event().wait(0.002)
+                continue  # node down or partitioned: pin safely refused
+            try:
+                data = snap.read(0, 64 * PAGE)
+                for w in range(n_nodes * writers_per_node):
+                    region = data[w * 8 * PAGE:(w + 1) * 8 * PAGE]
+                    vals = set(np.unique(region).tolist())
+                    if len(vals) > 1:
+                        errors.append(
+                            f"torn region {w} at v{snap.version}: {sorted(vals)}"
+                        )
+            except ProviderFailed:
+                pass  # node died mid-read: acceptable, data loss is not
+            finally:
+                snap.release()
+            threading.Event().wait(0.002)
+
+    def gc_loop():
+        while not stop_gc.wait(0.02):
+            latest = fed.version_manager.latest_published(blob)
+            if latest:
+                fed.gc(blob, keep_versions=[latest])
+                gc_floors.append(latest)
+
+    threads = (
+        [threading.Thread(target=writer, args=(n, s, sessions[n][s]))
+         for n in range(n_nodes) for s in range(writers_per_node)]
+        + [threading.Thread(target=reader, args=(n, sessions[n][writers_per_node + s]))
+           for n in range(n_nodes) for s in range(readers_per_node)]
+        + [threading.Thread(target=gc_loop)]
+    )
+    for t in threads:
+        t.start()
+    for t in threads[:-1]:
+        t.join(120)
+    stop_gc.set()
+    threads[-1].join(120)
+    assert not errors, f"seed {seed}: stale/torn reads: {errors[:3]}"
+
+    injector.drain()  # recover_all rejoins every downed node
+    injector.detach()
+    fed.repair_service.run_once()
+    assert all(fed.node_mode(i) == "up" for i in range(n_nodes))
+
+    # -- zero published-data loss: every acked write GC never collected
+    floor = max(gc_floors, default=0)
+    checker = fed.nodes[1].session(cache_bytes=0).open(blob)
+    latest = checker.latest_published()
+    for v, region, value in published:
+        if v < floor and v != latest:
+            continue  # collected by an explicit keep-latest GC pass
+        np.testing.assert_array_equal(
+            checker.read(region * PAGE, 8 * PAGE, version=v).data,
+            np.full(8 * PAGE, value, np.uint8),
+            err_msg=f"seed {seed}: version {v} lost data",
+        )
+    # -- the frontier composite matches the newest surviving write per region
+    expected = np.zeros(64 * PAGE, np.uint8)
+    for v, region, value in sorted(published):
+        if v <= latest:
+            expected[region * PAGE:(region + 8) * PAGE] = value
+    np.testing.assert_array_equal(
+        checker.read(0, 64 * PAGE, version=latest).data, expected
+    )
+
+    # -- lease invariant: after a final federated pass, no node's shared
+    #    tier holds a collected version (every live node acked the epoch)
+    fed.gc(blob, keep_versions=[latest])
+    for i in range(n_nodes):
+        for cached_v in fed.nodes[i].shared_cache.cached_versions(blob):
+            assert cached_v == 0 or cached_v >= latest, (
+                f"seed {seed}: node {i} caches collected v{cached_v}"
+            )
+    assert fed.coordinator.epoch() > 1
+    fed.close()
